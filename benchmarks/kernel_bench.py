@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-clock of the kernel body is meaningless; what we CAN measure honestly:
+- the XLA path that the kernel replaces (`pairwise_sqdist`+argmin) — CPU time,
+- kernel-vs-oracle agreement across the production shapes,
+- the analytic VMEM/roofline numbers for the TPU kernel (documented here).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import assign
+from repro.kernels import ops, ref
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def main():
+    rows = []
+    rng = np.random.default_rng(0)
+    shapes = [(1024, 256, 1000), (4096, 1024, 1000), (8192, 128, 8000)]
+    jassign = jax.jit(lambda x, c: assign(x, c))
+    for b, k, d in shapes:
+        x = jnp.asarray(rng.normal(0, 1, (b, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(0, 1, (k, d)).astype(np.float32))
+        us = timeit(jassign, x, c)
+        flops = 2.0 * b * k * d
+        rows.append((f"nn_assign_xla_b{b}_k{k}_d{d}", us, f"{flops/us/1e3:.1f}GFLOP/s"))
+        # kernel agreement at this exact shape (interpret mode, 1 iter)
+        idx_k, dist_k = ops.nn_assign(x[:256], c)
+        idx_r, dist_r = ref.nn_assign_ref(x[:256], c)
+        agree = float((np.asarray(idx_k) == np.asarray(idx_r)).mean())
+        rows.append((f"nn_assign_pallas_agree_b256_k{k}_d{d}", 0.0, f"agree={agree:.4f}"))
+
+    # ELL sparse path vs dense at a document-like sparsity
+    b, d, k, nnz = 2048, 8000, 256, 96
+    vals = rng.normal(0, 1, (b, nnz)).astype(np.float32)
+    cols = rng.integers(0, d, (b, nnz)).astype(np.int32)
+    c = rng.normal(0, 1, (k, d)).astype(np.float32)
+    from repro.sparse.ell import ell_dot_dense, Ell
+    e = Ell(jnp.asarray(vals), jnp.asarray(cols), d)
+    ct = jnp.asarray(c.T)
+    f_sp = jax.jit(lambda: ell_dot_dense(e, ct))
+    us_sp = timeit(f_sp)
+    x_dense = np.zeros((b, d), np.float32)
+    np.put_along_axis(x_dense, cols, vals, axis=1)
+    xd = jnp.asarray(x_dense)
+    cj = jnp.asarray(c)
+    f_de = jax.jit(lambda: xd @ cj.T)
+    us_de = timeit(f_de)
+    rows.append(("ell_scores_sparse_path", us_sp, f"dense={us_de:.0f}us ratio={us_sp/us_de:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, extra in main():
+        print(f"{name},{us:.1f},{extra}")

@@ -1,0 +1,65 @@
+"""Inject generated tables into EXPERIMENTS.md:
+- <!-- ROOFLINE_TABLES --> ← benchmarks.roofline over experiments/dryrun
+- <!-- PAPER_TABLE -->     ← paper_quality CSV (path via --paper-csv)
+Idempotent: tables are wrapped in begin/end markers and replaced in place.
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import os
+import re
+
+
+def paper_markdown(csv_path: str) -> str:
+    if not (csv_path and os.path.exists(csv_path)):
+        return "_(run `python -m benchmarks.paper_quality` to populate)_"
+    rows = [l.strip() for l in open(csv_path) if "," in l and not l.startswith("==")]
+    hdr = [r for r in rows if r.startswith("corpus,")]
+    data = [r for r in rows if not r.startswith("corpus,") and len(r.split(",")) == 7
+            and "%" not in r and r.split(",")[0] in ("inex", "rcv1")]
+    if not data:
+        return "_(no rows)_"
+    out = ["| corpus | algorithm | order | clusters | purity ↑ | entropy ↓ | seconds |",
+           "|---|---|---|---|---|---|---|"]
+    for r in data:
+        out.append("| " + " | ".join(r.split(",")) + " |")
+    return "\n".join(out)
+
+
+def roofline_markdown() -> str:
+    from benchmarks.roofline import load_all, markdown_table
+
+    rows = load_all()
+    parts = []
+    for mesh in ("16x16", "2x16x16"):
+        parts.append(f"\n### mesh {mesh}\n")
+        parts.append(markdown_table(rows, mesh))
+    return "\n".join(parts)
+
+
+def inject(text: str, marker: str, payload: str) -> str:
+    begin = f"<!-- {marker} -->"
+    end = f"<!-- /{marker} -->"
+    block = f"{begin}\n{payload}\n{end}"
+    if end in text:
+        return re.sub(
+            re.escape(begin) + r".*?" + re.escape(end), lambda _: block, text, flags=re.S
+        )
+    return text.replace(begin, block)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-csv", default="/tmp/paper_quality.csv")
+    ap.add_argument("--file", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    text = open(args.file).read()
+    text = inject(text, "ROOFLINE_TABLES", roofline_markdown())
+    text = inject(text, "PAPER_TABLE", paper_markdown(args.paper_csv))
+    open(args.file, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

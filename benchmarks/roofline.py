@@ -1,0 +1,217 @@
+"""Roofline analysis (deliverable g): combine the dry-run artifacts into the
+three-term roofline per (arch × shape × mesh).
+
+Hardware constants (TPU v5e):
+  peak  = 197 TFLOP/s bf16 per chip
+  HBM   = 819 GB/s per chip
+  ICI   ≈ 50 GB/s per link
+
+Terms (all in seconds *per device*, which equals global/chips under SPMD):
+  compute    = HLO_flops_per_device / peak
+  memory     = HLO_bytes_per_device / HBM
+  collective = collective_bytes_per_device / ICI
+
+Scanned LM cells are cost-combined from the full compile + single-layer /
+boundary probes (XLA costs a while body once):
+  total = full + (n_mb − 1)·boundary + (n_mb·L − 1)·layer
+(n_mb = gradient-accumulation depth; n_mb=1 for serving cells; the formula
+degenerates to full + (L−1)·layer.)
+
+MODEL_FLOPS (the "useful flops" yardstick):
+  LM train   : 6·N_active·tokens        (Kaplan convention)
+  LM prefill : 2·N_active·tokens
+  LM decode  : 2·N_active·batch
+  GNN        : 2·(edge+triplet+node work)·d_hidden terms (formula below)
+  recsys     : (3 if train else 1)·2·dense_param_flops·batch
+  paper cell : 2·n_docs·k·d_terms (the distance matmul itself)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def _dien_correction(rec: Dict) -> Dict[str, float]:
+    """DIEN's two GRUs are lax.scans over seq_len=100 (full unroll stalls
+    XLA:CPU at the big batches); cost_analysis counts the body once. Add the
+    missing (seq_len−1) steps analytically: per step per example the GRU pair
+    costs ≈ 2·(2d·3h + h·3h + h·h) + attention ≈ 2.2e5 flops and touches
+    ≈ 3·h·4 bytes of state."""
+    from repro.configs import registry
+
+    spec = registry.get("dien")
+    cfg = spec.cfg
+    sh = spec.shapes[rec["shape"]]
+    b = sh.get("batch", 1)
+    d2, h = 2 * cfg.embed_dim, cfg.gru_dim
+    per_step = 2.0 * (d2 * 3 * h + h * 3 * h + h * h) * 2   # two GRUs
+    mult = 3.0 if rec["kind"] == "train" else 1.0
+    extra_flops = mult * (cfg.seq_len - 1) * per_step * b / rec["n_devices"]
+    extra_bytes = mult * (cfg.seq_len - 1) * (3 * h * 4 + d2 * 4) * b / rec["n_devices"]
+    return {"flops": extra_flops, "bytes_accessed": extra_bytes}
+
+
+def combined_cost(rec: Dict) -> Dict[str, float]:
+    """Per-device totals with the scan-probe correction."""
+    cost = dict(rec["cost"])
+    coll = dict(rec.get("collectives_per_device_bytes", {}))
+    if rec["arch"] == "dien" and rec["shape"] != "retrieval_cand":
+        corr = _dien_correction(rec)
+        cost["flops"] = cost.get("flops", 0.0) + corr["flops"]
+        cost["bytes_accessed"] = cost.get("bytes_accessed", 0.0) + corr["bytes_accessed"]
+    probe = rec.get("layer_probe")
+    if probe:
+        n_layers = rec["n_layers"]
+        n_mb = 1
+        if rec["kind"] == "train":
+            from repro.configs import registry
+
+            n_mb = registry.get(rec["arch"]).shapes[rec["shape"]].get("n_microbatches", 1)
+        lay = probe["cost"]
+        bnd = probe.get("boundary", {}).get("cost", {"flops": 0, "bytes_accessed": 0})
+        for k in ("flops", "bytes_accessed", "transcendentals"):
+            cost[k] = (
+                cost.get(k, 0.0)
+                + (n_mb - 1) * bnd.get(k, 0.0)
+                + (n_mb * n_layers - 1) * lay.get(k, 0.0)
+            )
+        for cname, v in probe.get("collectives_per_device_bytes", {}).items():
+            coll[cname] = coll.get(cname, 0.0) + (n_mb * n_layers - 1) * v
+        for cname, v in probe.get("boundary", {}).get("collectives_per_device_bytes", {}).items():
+            coll[cname] = coll.get(cname, 0.0) + (n_mb - 1) * v
+    return {"cost": cost, "collectives": coll}
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> Optional[float]:
+    """Analytic useful-flops per device."""
+    from repro.configs import registry
+
+    spec = registry.get(arch)
+    sh = spec.shapes[shape]
+    if spec.family == "lm":
+        n_act = spec.cfg.n_active_params()
+        if sh["kind"] == "train":
+            tokens = sh["batch"] * sh["seq"]
+            total = 6.0 * n_act * tokens
+        elif sh["kind"] == "prefill":
+            total = 2.0 * n_act * sh["batch"] * sh["seq"]
+        else:
+            total = 2.0 * n_act * sh["batch"]
+        return total / n_devices
+    if spec.family == "gnn":
+        cfg = registry.cfg_for_shape(spec, shape)
+        h = cfg.d_hidden
+        e, t, n = sh["n_edges"], sh["n_triplets"], sh["n_nodes"]
+        per_block = 2.0 * (e * h * h * 2 + t * (h * cfg.n_bilinear * 2) + e * h * h)
+        total = cfg.n_blocks * per_block + 2.0 * n * h * max(cfg.d_feat, h)
+        if sh["kind"] == "train":
+            total *= 3.0
+        return total / n_devices
+    if spec.family == "recsys":
+        cfg = spec.cfg
+        import numpy as np
+        import jax
+
+        params = jax.eval_shape(
+            lambda k: __import__("repro.models.recsys", fromlist=["init_params"]).init_params(k, cfg),
+            jax.random.PRNGKey(0),
+        )
+        dense_params = sum(
+            int(np.prod(p.shape)) for path, p in jax.tree_util.tree_flatten_with_path(params)[0]
+            if "tables" not in str(path) and "wide" not in str(path)
+        )
+        b = sh.get("batch", 1)
+        if sh["kind"] == "retrieval":
+            total = 2.0 * sh["n_candidates"] * cfg.embed_dim
+        else:
+            mult = 3.0 if sh["kind"] == "train" else 1.0
+            if cfg.kind == "dien":
+                # recurrent params run seq times; the head MLP runs once
+                gru = 2 * (2 * cfg.embed_dim * 3 * cfg.gru_dim + cfg.gru_dim * 3 * cfg.gru_dim) \
+                      + 2 * (cfg.gru_dim * 3 * cfg.gru_dim * 2)
+                total = mult * b * (gru * cfg.seq_len + 2.0 * dense_params)
+            else:
+                total = mult * 2.0 * dense_params * b
+        return total / n_devices
+    if spec.family == "paper":
+        total = 2.0 * sh["n_docs"] * sh["k"] * sh["n_terms"]
+        return total / n_devices
+    return None
+
+
+def analyse(rec: Dict) -> Dict:
+    cc = combined_cost(rec)
+    flops = cc["cost"]["flops"]
+    bytes_acc = cc["cost"]["bytes_accessed"]
+    coll_bytes = sum(cc["collectives"].values())
+    t_compute = flops / PEAK
+    t_memory = bytes_acc / HBM
+    t_coll = coll_bytes / ICI
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"], rec["n_devices"])
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": (mf / flops) if (mf and flops) else None,
+        "roofline_fraction": (mf / PEAK) / bound if (mf and bound > 0) else None,
+        "collectives": cc["collectives"],
+        "hbm_gib": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec.get("mesh"), "error": rec.get("error")})
+            continue
+        out.append(analyse(rec))
+    return out
+
+
+def markdown_table(rows, mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful/HLO | roofline frac | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("mesh") != mesh or "error" in r:
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r.get("useful_ratio") else "-"
+        rf = f"{r['roofline_fraction']:.3f}" if r.get("roofline_fraction") else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | {r['dominant']} | "
+            f"{ur} | {rf} | {r['hbm_gib']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## Roofline — mesh {mesh}\n")
+        print(markdown_table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

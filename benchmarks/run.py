@@ -1,0 +1,62 @@
+"""Benchmark entry point: ``python -m benchmarks.run``.
+
+One section per paper table/figure + the system benches:
+  paper_quality — Figures 1 & 2 (quality + runtime vs cluster count)
+  sparse_dense  — §1 storage/speed observation
+  scaling       — complexity claim (build time vs n)
+  kernel_bench  — kernel micro-benches + oracle agreement
+  roofline      — §Roofline terms from the dry-run artifacts (if present)
+
+Output: ``name,us_per_call,derived`` CSV blocks.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=2000, help="paper-bench corpus size")
+    ap.add_argument("--culled", type=int, default=800)
+    ap.add_argument("--orders", type=int, nargs="+", default=[16, 32])
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args()
+
+    t_all = time.time()
+
+    if "paper" not in args.skip:
+        print("== paper_quality (Figures 1 & 2) ==", flush=True)
+        from benchmarks import paper_quality
+        paper_quality.main(args.docs, args.culled, tuple(args.orders))
+
+    if "sparse" not in args.skip:
+        print("\n== sparse_dense (paper §1) ==", flush=True)
+        from benchmarks import sparse_dense
+        for name, us, extra in sparse_dense.main():
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "scaling" not in args.skip:
+        print("\n== scaling (complexity claim) ==", flush=True)
+        from benchmarks import scaling
+        for name, us, extra in scaling.main(sizes=(1000, 2000, 4000)):
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "kernels" not in args.skip:
+        print("\n== kernel_bench ==", flush=True)
+        from benchmarks import kernel_bench
+        for name, us, extra in kernel_bench.main():
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "roofline" not in args.skip and os.path.isdir("experiments/dryrun"):
+        print("\n== roofline (from dry-run artifacts) ==", flush=True)
+        from benchmarks import roofline
+        roofline.main()
+
+    print(f"\nTOTAL_BENCH_SECONDS,{time.time()-t_all:.1f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

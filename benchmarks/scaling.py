@@ -1,0 +1,41 @@
+"""K-tree's complexity claim: build time vs collection size.
+
+The paper: "The K-tree has a low time complexity that is suitable for large
+document collections" — insertion is O(m·log_m n) per vector, so the build is
+~linear in n at fixed order. We sweep n and report seconds + clusters, and
+compare against k-means at the K-tree's leaf count (which is O(n·k) per
+iteration and blows up as k grows with n)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ktree as kt
+from repro.core.kmeans import kmeans_fixed_iters
+
+
+def main(sizes=(1000, 2000, 4000, 8000), d: int = 256, order: int = 16):
+    rows = []
+    rng = np.random.default_rng(0)
+    means = rng.normal(0, 4, (20, d)).astype(np.float32)
+    for n in sizes:
+        lab = rng.integers(0, 20, n)
+        x = jnp.asarray((means[lab] + rng.normal(0, 1, (n, d))).astype(np.float32))
+        t0 = time.time()
+        tree = kt.build(x, order=order, batch_size=256)
+        dt = time.time() - t0
+        _, nc = kt.extract_assignment(tree, n)
+        rows.append((f"ktree_build_n{n}", dt * 1e6, f"clusters={nc}"))
+        t0 = time.time()
+        kmeans_fixed_iters(jax.random.PRNGKey(0), x, nc, iters=10)
+        dtk = time.time() - t0
+        rows.append((f"kmeans_match_n{n}", dtk * 1e6, f"k={nc} ratio={dtk/dt:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, extra in main():
+        print(f"{name},{us:.1f},{extra}")

@@ -1,0 +1,64 @@
+"""Paper §1's storage & speed observation, reproduced:
+
+1. storage — the INEX matrix culled to 8000 terms: dense f32 needs 3.4 GB,
+   sparse (2-byte index + 4-byte weight) needs ~58.5 MB. We recompute both
+   numbers from the corpus spec and from a scaled generated corpus.
+2. speed — NN search against *dense upper-tree centres*: scoring sparse docs
+   (take+segment_sum CSR path) vs dense docs (matmul). The paper's point:
+   near the root everything is dense, so the dense path wins on systolic/BLAS
+   hardware while sparse wins on storage.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
+from repro.sparse.csr import csr_matmat, csr_to_dense
+
+
+def main(n_docs: int = 4000, culled: int = 2000):
+    rows = []
+    # --- storage accounting at FULL paper scale (exact paper arithmetic)
+    full = INEX_LIKE
+    dense_gb = full.n_docs * 8000 * 4 / 1e9
+    nnz = 10_229_913            # paper's number for the culled INEX matrix
+    sparse_mb = nnz * (2 + 4) / 1e6
+    rows.append(("storage_dense_full_gb", 0.0, f"{dense_gb:.2f}GB(paper:3.4GB)"))
+    rows.append(("storage_sparse_full_mb", 0.0, f"{sparse_mb:.2f}MB(paper:58.54MB)"))
+
+    # --- generated corpus, scaled
+    spec = scaled(INEX_LIKE, n_docs=n_docs, culled=culled)
+    m, _ = prepared_corpus(spec, seed=0)
+    gen_dense_mb = m.n_rows * m.n_cols * 4 / 1e6
+    gen_sparse_mb = m.nnz * 6 / 1e6
+    rows.append(("storage_ratio_generated", 0.0,
+                 f"dense={gen_dense_mb:.0f}MB sparse={gen_sparse_mb:.1f}MB "
+                 f"x{gen_dense_mb/gen_sparse_mb:.0f}"))
+
+    # --- speed: sparse-docs vs dense-docs against k dense centres
+    k = 256
+    rng = np.random.default_rng(0)
+    centers_t = jnp.asarray(rng.normal(0, 1, (m.n_cols, k)).astype(np.float32))
+    x_dense = jnp.asarray(np.asarray(csr_to_dense(m)))
+
+    f_sparse = jax.jit(lambda ct: csr_matmat(m, ct))
+    f_dense = jax.jit(lambda xd, ct: xd @ ct)
+    for f, args, name in [
+        (f_sparse, (centers_t,), "root_scores_sparse_docs"),
+        (f_dense, (x_dense, centers_t), "root_scores_dense_docs"),
+    ]:
+        jax.block_until_ready(f(*args))
+        t0 = time.time()
+        for _ in range(5):
+            jax.block_until_ready(f(*args))
+        rows.append((name, (time.time() - t0) / 5 * 1e6, f"k={k}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, extra in main():
+        print(f"{name},{us:.1f},{extra}")

@@ -1,0 +1,14 @@
+"""Checkpointing + fault tolerance (DESIGN §5).
+
+- Atomic step directories (`step_000123.tmp` → rename) — a crash mid-write
+  never corrupts the restore point.
+- Pytree leaves stored as raw .npy files + a msgpack manifest with the tree
+  structure, dtypes and shapes.
+- Elastic restore: arrays are re-placed against whatever mesh/sharding the
+  restoring job provides — the fleet size may change between runs.
+- K-tree persistence: the tree's array pages serialise the same way (the
+  paper's disk-based K-tree, §1).
+"""
+from repro.ckpt.checkpoint import save, restore, latest_step, save_ktree, restore_ktree
+
+__all__ = ["save", "restore", "latest_step", "save_ktree", "restore_ktree"]

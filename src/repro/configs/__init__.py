@@ -1,0 +1,6 @@
+"""Architecture configs (``--arch <id>``): the 10 assigned architectures with
+their exact published dimensions + the paper's own K-tree experiment configs.
+All access goes through repro.configs.registry."""
+from repro.configs.registry import get, list_archs, ArchSpec
+
+__all__ = ["get", "list_archs", "ArchSpec"]

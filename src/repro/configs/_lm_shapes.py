@@ -1,0 +1,22 @@
+"""The four LM input-shape cells shared by every LM architecture.
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a KV cache),
+NOT ``train_step``. ``long_500k`` is a *decode* shape: decode attention is
+O(L) per token, so full-attention archs run it (DESIGN §4 — the quadratic
+cost these archs would pay only affects prefill/train at 500k, which is not
+lowered here).
+"""
+def lm_shapes(n_microbatches: int = 1):
+    """n_microbatches = gradient-accumulation depth for train_4k — the
+    standard activation-memory lever at these model sizes (one microbatch's
+    activations live at a time; grads accumulate in fp32)."""
+    return {
+        "train_4k":    {"kind": "train",   "batch": 256, "seq": 4096,
+                        "n_microbatches": n_microbatches},
+        "prefill_32k": {"kind": "prefill", "batch": 32,  "seq": 32768},
+        "decode_32k":  {"kind": "decode",  "batch": 128, "seq": 32768},
+        "long_500k":   {"kind": "decode",  "batch": 1,   "seq": 524288},
+    }
+
+
+LM_SHAPES = lm_shapes()

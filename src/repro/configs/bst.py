@@ -1,0 +1,22 @@
+"""bst [recsys] — Behavior Sequence Transformer (Alibaba, arXiv:1905.06874):
+embed_dim=32 seq_len=20 n_blocks=1 n_heads=8 mlp=1024-512-256,
+interaction=transformer over the user behaviour sequence.
+Item vocab 10M (Taobao-scale) + 8 context fields of 100k."""
+from repro.configs.registry import ArchSpec, register
+from repro.models.recsys import RecsysConfig
+
+CFG = RecsysConfig(
+    name="bst", kind="bst", embed_dim=32,
+    table_rows=(10_000_000,) + (100_000,) * 8,
+    seq_len=20, n_heads=8, n_blocks=1, n_context=8,
+    top_mlp=(1024, 512, 256),
+)
+
+SHAPES = {
+    "train_batch":    {"kind": "train",     "batch": 65536},
+    "serve_p99":      {"kind": "serve",     "batch": 512},
+    "serve_bulk":     {"kind": "serve",     "batch": 262144},
+    "retrieval_cand": {"kind": "retrieval", "batch": 1, "n_candidates": 1_000_448}  # 1M padded to 512-divisible,
+}
+
+register(ArchSpec(name="bst", family="recsys", cfg=CFG, shapes=SHAPES))

@@ -1,0 +1,20 @@
+"""dbrx-132b [moe] — 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16 experts top-4 (fine-grained) [hf:databricks/dbrx-base]."""
+import jax.numpy as jnp
+from repro.configs.registry import ArchSpec, register
+from repro.configs._lm_shapes import lm_shapes
+from repro.models.transformer import LMConfig
+
+CFG = LMConfig(
+    name="dbrx-132b", n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352, moe=True, n_experts=16, top_k=4,
+    dtype=jnp.bfloat16,
+)
+
+register(ArchSpec(
+    name="dbrx-132b", family="lm", cfg=CFG, shapes=lm_shapes(n_microbatches=4),
+    optimizer="adafactor",
+    rules_overrides={"decode_32k": {"seq": None}, "long_500k": {"seq": None}},
+    notes="16 experts = 16-way expert parallelism over the model axis; "
+          "dispatch all-to-alls priced in §Roofline.",
+))

@@ -1,0 +1,23 @@
+"""dien [recsys] — Deep Interest Evolution Network (arXiv:1809.03672):
+embed_dim=18 seq_len=100 gru_dim=108 mlp=200-80 interaction=AUGRU.
+Item vocab 1M, category vocab 10k, 2 user-profile context fields."""
+from repro.configs.registry import ArchSpec, register
+from repro.models.recsys import RecsysConfig
+
+CFG = RecsysConfig(
+    name="dien", kind="dien", embed_dim=18,
+    table_rows=(1_000_000, 10_000, 50_000, 50_000),  # item, cat, 2×profile
+    seq_len=100, gru_dim=108, n_context=2, top_mlp=(200, 80),
+    # NOTE: GRU stays a scan (full unroll at batch 262k stalls XLA:CPU);
+    # the roofline applies an analytic 100-step trip-count correction
+    # (benchmarks/roofline.py::_dien_correction)
+)
+
+SHAPES = {
+    "train_batch":    {"kind": "train",     "batch": 65536},
+    "serve_p99":      {"kind": "serve",     "batch": 512},
+    "serve_bulk":     {"kind": "serve",     "batch": 262144},
+    "retrieval_cand": {"kind": "retrieval", "batch": 1, "n_candidates": 1_000_448}  # 1M padded to 512-divisible,
+}
+
+register(ArchSpec(name="dien", family="recsys", cfg=CFG, shapes=SHAPES))

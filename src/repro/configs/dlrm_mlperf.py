@@ -1,0 +1,28 @@
+"""dlrm-mlperf [recsys] — n_dense=13 n_sparse=26 embed_dim=128
+bot_mlp=13-512-256-128 top_mlp=1024-1024-512-256-1 interaction=dot.
+MLPerf DLRM benchmark config (Criteo 1TB), arXiv:1906.00091.
+Embedding tables: the authentic 26 MLPerf row counts (Σ≈188M rows ⇒ 96 GB
+fp32) — sharded row-wise over the whole mesh."""
+from repro.configs.registry import ArchSpec, register
+from repro.models.recsys import RecsysConfig, MLPERF_TABLE_ROWS
+
+CFG = RecsysConfig(
+    name="dlrm-mlperf", kind="dlrm", embed_dim=128,
+    table_rows=MLPERF_TABLE_ROWS, n_dense=13,
+    bot_mlp=(512, 256, 128), top_mlp=(1024, 1024, 512, 256, 1),
+)
+
+SHAPES = {
+    "train_batch":    {"kind": "train",     "batch": 65536},
+    "serve_p99":      {"kind": "serve",     "batch": 512},
+    "serve_bulk":     {"kind": "serve",     "batch": 262144},
+    "retrieval_cand": {"kind": "retrieval", "batch": 1, "n_candidates": 1_000_448}  # 1M padded to 512-divisible,
+}
+
+register(ArchSpec(
+    name="dlrm-mlperf", family="recsys", cfg=CFG, shapes=SHAPES,
+    optimizer="adamw",
+    rules_overrides={"serve_p99": {"table_rows": "model"}},
+    notes="retrieval_cand scores candidates from table t0 (39.9M rows) — "
+          "also served by the K-tree ANN path (paper §5 collection selection).",
+))

@@ -1,0 +1,23 @@
+"""grok-1-314b [moe] — 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2 [hf:xai-org/grok-1]."""
+import jax.numpy as jnp
+from repro.configs.registry import ArchSpec, register
+from repro.configs._lm_shapes import lm_shapes
+from repro.models.transformer import LMConfig
+
+CFG = LMConfig(
+    name="grok-1-314b", n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab=131072, moe=True, n_experts=8, top_k=2,
+    dtype=jnp.bfloat16,
+)
+
+register(ArchSpec(
+    name="grok-1-314b", family="lm", cfg=CFG, shapes=lm_shapes(n_microbatches=4),
+    optimizer="adafactor",   # factored states: the 314B memory enabler
+    rules_overrides={"*": {"expert": None},
+                     "decode_32k": {"expert": None, "seq": None},
+                     "long_500k": {"expert": None, "seq": None}},  # E=8 ∤ 16 → TP inside experts
+    notes="8 experts don't divide the 16-way model axis: experts replicated "
+          "across model, d_ff tensor-parallel instead (Mixtral-style TP). "
+          "Adafactor (factored 2nd moment) for optimizer memory.",
+))

@@ -1,0 +1,23 @@
+"""The paper's own INEX 2008 experiment config: 114,366 docs, 15 labels,
+TF-IDF culled to 8,000 terms (3.4 GB dense / 58.5 MB sparse — paper §1).
+K-tree order sweeps produce the cluster-count axis of Figure 1."""
+from repro.configs.registry import ArchSpec, register
+from repro.data.synth_corpus import INEX_LIKE
+
+CFG = {
+    "corpus": INEX_LIKE,
+    "orders": (20, 35, 50, 80, 120),   # order m sweep → leaf-cluster counts
+    "sample_fraction": 0.1,            # paper §3 sampled variant
+    "cluto_iters": 10,                 # CLUTO-style fixed-iteration baseline
+}
+
+register(ArchSpec(
+    name="ktree-inex", family="paper", cfg=CFG,
+    shapes={
+        # distributed corpus assignment step on the production mesh:
+        # 114,366 × 8,000 dense fp32 (paper's dense representation), k=1000
+        # n_docs padded 114366 -> 114688 (512-divisible; zero-weight pad docs)
+        "cluster_assign": {"kind": "cluster", "n_docs": 114688, "n_terms": 8000, "k": 1024},
+    },
+    notes="paper-reproduction config (benchmarks/paper_quality.py)",
+))

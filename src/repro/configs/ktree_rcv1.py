@@ -1,0 +1,20 @@
+"""The paper's RCV1-subset experiment config: 193,844 docs, 103 industry
+labels, top-8,000 terms (Figure 2)."""
+from repro.configs.registry import ArchSpec, register
+from repro.data.synth_corpus import RCV1_LIKE
+
+CFG = {
+    "corpus": RCV1_LIKE,
+    "orders": (20, 35, 50, 80, 120),
+    "sample_fraction": 0.1,
+    "cluto_iters": 10,
+}
+
+register(ArchSpec(
+    name="ktree-rcv1", family="paper", cfg=CFG,
+    shapes={
+        # n_docs padded 193844 -> 194048 (512-divisible)
+        "cluster_assign": {"kind": "cluster", "n_docs": 194048, "n_terms": 8000, "k": 1024},
+    },
+    notes="paper-reproduction config (benchmarks/paper_quality.py)",
+))

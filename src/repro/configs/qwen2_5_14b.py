@@ -1,0 +1,27 @@
+"""qwen2.5-14b [dense] — 48L d_model=5120 40H (GQA kv=8) d_ff=13824
+vocab=152064; GQA with QKV bias [hf:Qwen/Qwen2.5-14B; hf]."""
+import jax.numpy as jnp
+from repro.configs.registry import ArchSpec, register
+from repro.configs._lm_shapes import lm_shapes
+from repro.models.transformer import LMConfig
+
+CFG = LMConfig(
+    name="qwen2.5-14b", n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=13824, vocab=152064, qkv_bias=True, dtype=jnp.bfloat16,
+)
+
+register(ArchSpec(
+    name="qwen2.5-14b", family="lm", cfg=CFG, shapes=lm_shapes(n_microbatches=4),
+    optimizer="adamw",
+    rules_overrides={
+        # §Perf iteration 3: decode must not FSDP-shard weights — the
+        # per-layer all-gather dominated the decode roofline (measured
+        # 976 MiB/layer on qwen). Weights fit model-sharded for dense archs.
+        # seq→None: the length-1 decode dim must not claim the model axis
+        # (it starves act_ff/act_vocab and forces weight gathers — §Perf it.4)
+        "decode_32k": {"fsdp": None, "seq": None},
+        "long_500k": {"fsdp": None, "seq": None},
+    },
+    notes="GQA 40q/8kv heads, qkv bias; heads don't divide the 16-way model "
+          "axis, so attention is context-parallel (seq over model).",
+))

@@ -1,0 +1,368 @@
+"""Architecture registry: every assigned arch is a selectable config
+(``--arch <id>``) exposing, per input shape, (abstract inputs, abstract state,
+logical axes, step fn) — everything the dry-run, smoke tests and launchers
+need. See DESIGN §4 for the applicability map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import optim as optim_lib
+from repro.train.loop import TrainState, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+f32, i32 = jnp.float32, jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                     # lm | gnn | recsys
+    cfg: Any
+    shapes: Mapping[str, Mapping[str, Any]]
+    rules_overrides: Mapping[str, Mapping[str, Any]] = dataclasses.field(default_factory=dict)
+    optimizer: str = "adamw"
+    notes: str = ""
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+_CONFIG_MODULES = [
+    "qwen2_5_14b", "granite_20b", "phi3_mini", "grok1_314b", "dbrx_132b",
+    "dimenet", "dlrm_mlperf", "wide_deep", "bst", "dien",
+    "ktree_inex", "ktree_rcv1",
+]
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_loaded():
+    for m in _CONFIG_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def get(name: str) -> ArchSpec:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs(family: Optional[str] = None):
+    _ensure_loaded()
+    return sorted(
+        n for n, s in _REGISTRY.items() if family is None or s.family == family
+    )
+
+
+def make_optimizer(spec: ArchSpec):
+    return optim_lib.adafactor() if spec.optimizer == "adafactor" else optim_lib.adamw()
+
+
+def cfg_for_shape(spec: ArchSpec, shape_name: str):
+    """Shape-specific config view (e.g. DimeNet's d_feat / n_classes vary per
+    dataset; molecule switches to atom-type embedding + energy head)."""
+    cfg = spec.cfg
+    sh = spec.shapes[shape_name]
+    if spec.family == "gnn":
+        if sh.get("molecular"):
+            cfg = dataclasses.replace(cfg, d_feat=0, n_classes=0)
+        else:
+            cfg = dataclasses.replace(
+                cfg, d_feat=sh["d_feat"], n_classes=sh["n_classes"]
+            )
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# per-family abstract input builders — (inputs, input logical axes)
+# ---------------------------------------------------------------------------
+
+def abstract_inputs(spec: ArchSpec, shape_name: str) -> Tuple[Any, Any]:
+    sh = dict(spec.shapes[shape_name])
+    if spec.family == "lm":
+        return _lm_inputs(spec, sh)
+    if spec.family == "gnn":
+        return _gnn_inputs(spec, sh, cfg_for_shape(spec, shape_name))
+    if spec.family == "recsys":
+        return _recsys_inputs(spec, sh)
+    if spec.family == "paper":
+        return _paper_inputs(spec, sh)
+    raise ValueError(spec.family)
+
+
+def _lm_inputs(spec, sh):
+    from repro.models import transformer as T
+
+    cfg = spec.cfg
+    b = sh["batch"]
+    kind = sh["kind"]
+    bax = None if b == 1 else "batch"
+    if kind == "train":
+        s = sh["seq"]
+        specs = {"tokens": SDS((b, s), i32), "labels": SDS((b, s), i32)}
+        axes = {"tokens": (bax, "seq"), "labels": (bax, "seq")}
+        return specs, axes
+    if kind == "prefill":
+        s = sh["seq"]
+        return {"tokens": SDS((b, s), i32)}, {"tokens": (bax, "seq")}
+    if kind == "decode":
+        s = sh["seq"]
+        cax = T.cache_logical_axes(b)
+        cache_shape = (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.hd)
+        specs = {
+            "cache": {"k": SDS(cache_shape, cfg.dtype), "v": SDS(cache_shape, cfg.dtype)},
+            "tokens": SDS((b, 1), i32),
+            "pos": SDS((), i32),
+        }
+        axes = {
+            "cache": {"k": cax, "v": cax},
+            "tokens": (bax, None),
+            "pos": (),
+        }
+        return specs, axes
+    raise ValueError(kind)
+
+
+def _gnn_inputs(spec, sh, cfg):
+    n, e, t = sh["n_nodes"], sh["n_edges"], sh["n_triplets"]
+    specs = {
+        "pos": SDS((n, 3), f32),
+        "edge_index": SDS((2, e), i32),
+        "triplets": SDS((2, t), i32),
+    }
+    axes = {
+        "pos": ("nodes", None),
+        "edge_index": (None, "edges"),
+        "triplets": (None, "edges"),
+    }
+    if cfg.d_feat > 0:
+        specs["feats"] = SDS((n, cfg.d_feat), f32)
+        axes["feats"] = ("nodes", None)
+    else:
+        specs["z"] = SDS((n,), i32)
+        axes["z"] = ("nodes",)
+    if cfg.n_classes:
+        specs["labels"] = SDS((n,), i32)
+        axes["labels"] = ("nodes",)
+    else:
+        g = sh.get("n_graphs", 1)
+        # n_graphs itself is static — threaded through the loss closure
+        specs.update({"graph_id": SDS((n,), i32), "labels": SDS((g,), f32)})
+        axes.update({"graph_id": ("nodes",), "labels": (None,)})
+    return specs, axes
+
+
+def _recsys_inputs(spec, sh):
+    cfg = spec.cfg
+    kind = sh["kind"]
+    if kind == "retrieval":
+        n_cand = sh["n_candidates"]
+        specs: Dict[str, Any] = {"cand_ids": SDS((n_cand,), i32)}
+        axes: Dict[str, Any] = {"cand_ids": ("cand",)}
+        b, bax = sh.get("batch", 1), None
+    else:
+        b = sh["batch"]
+        bax = "batch"
+        specs, axes = {}, {}
+    k = cfg.kind
+    if k == "dlrm":
+        specs.update({"dense": SDS((b, cfg.n_dense), f32), "sparse_ids": SDS((b, cfg.n_sparse), i32)})
+        axes.update({"dense": (bax, None), "sparse_ids": (bax, None)})
+    elif k == "wide_deep":
+        specs["sparse_ids"] = SDS((b, cfg.n_sparse), i32)
+        axes["sparse_ids"] = (bax, None)
+    elif k == "bst":
+        specs.update({
+            "hist_ids": SDS((b, cfg.seq_len), i32),
+            "target_id": SDS((b,), i32),
+            "context_ids": SDS((b, cfg.n_context), i32),
+        })
+        axes.update({"hist_ids": (bax, None), "target_id": (bax,), "context_ids": (bax, None)})
+    elif k == "dien":
+        specs.update({
+            "hist_ids": SDS((b, cfg.seq_len), i32),
+            "hist_cat_ids": SDS((b, cfg.seq_len), i32),
+            "target_id": SDS((b,), i32),
+            "target_cat_id": SDS((b,), i32),
+        })
+        axes.update({
+            "hist_ids": (bax, None), "hist_cat_ids": (bax, None),
+            "target_id": (bax,), "target_cat_id": (bax,),
+        })
+        if cfg.n_context:
+            specs["context_ids"] = SDS((b, cfg.n_context), i32)
+            axes["context_ids"] = (bax, None)
+    if kind == "train":
+        specs["labels"] = SDS((b,), f32)
+        axes["labels"] = (bax,)
+    return specs, axes
+
+
+# ---------------------------------------------------------------------------
+# abstract state (params / TrainState) + logical axes
+# ---------------------------------------------------------------------------
+
+def _model_api(spec: ArchSpec):
+    if spec.family == "lm":
+        from repro.models import transformer as M
+    elif spec.family == "gnn":
+        from repro.models import gnn as M
+    else:
+        from repro.models import recsys as M
+    return M
+
+
+def abstract_params(spec: ArchSpec, shape_name: Optional[str] = None) -> Tuple[Any, Any]:
+    if spec.family == "paper":
+        return {}, {}
+    M = _model_api(spec)
+    cfg = cfg_for_shape(spec, shape_name) if shape_name else spec.cfg
+    params = jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    axes = M.param_logical_axes(cfg)
+    return params, axes
+
+
+def abstract_state(spec: ArchSpec, shape_name: str) -> Tuple[Any, Any]:
+    """Abstract (state, logical axes) for the cell: TrainState for train cells,
+    bare params for serving cells."""
+    sh = spec.shapes[shape_name]
+    params, paxes = abstract_params(spec, shape_name)
+    if sh["kind"] != "train":
+        return params, paxes
+    opt = make_optimizer(spec)
+    opt_state = jax.eval_shape(opt.init, params)
+    opt_axes = opt.state_logical_axes(paxes, params)
+    state = TrainState(params, opt_state, SDS((), i32))
+    axes = TrainState(paxes, opt_axes, ())
+    return state, axes
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def step_fn(spec: ArchSpec, shape_name: str) -> Callable:
+    """The jittable callable for this cell: (state, inputs) → outputs."""
+    sh = dict(spec.shapes[shape_name])
+    kind = sh["kind"]
+    if kind == "cluster":
+        return _cluster_step
+    M = _model_api(spec)
+    cfg = cfg_for_shape(spec, shape_name)
+
+    if kind == "train":
+        from repro.models.sharding import current_rules, _MESH
+
+        loss = functools.partial(_static_loss, M=M, cfg=cfg, static=_static_fields(sh))
+        rules, mesh = current_rules(), _MESH.get()
+        param_specs = None
+        if rules is not None and mesh is not None:
+            _, paxes = abstract_params(spec, shape_name)
+            param_specs = jax.tree.map(
+                lambda ax: rules.spec(*tuple(ax)), paxes,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+        step = make_train_step(loss, make_optimizer(spec),
+                               n_microbatches=sh.get("n_microbatches", 1),
+                               param_specs=param_specs, mesh=mesh)
+        return lambda state, inputs: step(state, inputs)
+
+    if kind == "prefill":
+        from repro.models import transformer as T
+
+        return lambda params, inputs: T.prefill(
+            params, inputs["tokens"], cfg, max_seq=sh["seq"]
+        )
+    if kind == "decode":
+        from repro.models import transformer as T
+
+        return lambda params, inputs: T.decode_step(
+            params, inputs["cache"], inputs["tokens"], inputs["pos"], cfg
+        )
+    if kind == "serve":
+        return lambda params, inputs: M.forward(params, inputs, cfg)
+    if kind == "retrieval":
+        from repro.models import recsys as R
+
+        def retrieve(params, inputs):
+            feats = {k: v for k, v in inputs.items() if k != "cand_ids"}
+            u = R.user_embedding(params, feats, cfg)
+            cand = R.embedding_lookup(params["tables"]["t0"], inputs["cand_ids"])
+            return R.retrieval_score(params, u, cand, topk=sh.get("topk", 100))
+
+        return retrieve
+    raise ValueError(kind)
+
+
+def _paper_inputs(spec, sh):
+    """The paper's own workload on the production mesh: one distributed
+    k-means/K-tree assignment step over the (dense-culled) corpus matrix —
+    documents sharded over data axes, centres over model (§Perf iteration:
+    the replicated-centre baseline left the model axis idle; sharding the
+    centre set 16-ways shards both N×K×D matmuls)."""
+    n, d, k = sh["n_docs"], sh["n_terms"], sh["k"]
+    # corpus stored bf16 on device (§Perf: casting f32→bf16 in-step *added*
+    # a copy; storing bf16 halves the dominant X-read bytes; centres and all
+    # accumulations stay f32)
+    specs = {"x": SDS((n, d), jnp.bfloat16), "centers": SDS((k, d), f32)}
+    axes = {"x": ("batch", None), "centers": ("centers_k", None)}
+    return specs, axes
+
+
+def _cluster_step(_state, inputs):
+    """One Lloyd step in the global view (GSPMD inserts the psum-equivalent
+    all-reduce of the (sum, count) partials). bf16 distance/update matmuls
+    with f32 accumulation (§Perf: halves the X bytes on the MXU path; centre
+    updates stay f32)."""
+    from repro.models.sharding import constrain
+
+    x, c = inputs["x"], inputs["centers"]
+    x16 = x if x.dtype == jnp.bfloat16 else x.astype(jnp.bfloat16)
+    c16 = c.astype(jnp.bfloat16)
+    cross = jax.lax.dot_general(
+        x16, c16, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                       # [N, K] f32
+    c_sq = jnp.einsum("kd,kd->k", c, c)
+    dist = c_sq[None, :] - 2.0 * cross                      # ‖x‖² constant-dropped
+    dist = constrain(dist, "batch", "centers_k")
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(idx, c.shape[0], dtype=jnp.bfloat16)
+    sums = jax.lax.dot_general(
+        onehot, x16, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                       # [K, D] f32
+    counts = onehot.astype(jnp.float32).sum(axis=0)
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1e-12), c)
+    new_c = constrain(new_c, "centers_k", None)
+    # min-distance (for SSE) needs the dropped ‖x‖² back
+    x_sq = jnp.einsum("nd,nd->n", x.astype(jnp.float32), x.astype(jnp.float32))
+    sse = (jnp.take_along_axis(dist, idx[:, None], 1)[:, 0] + x_sq).sum()
+    return new_c, sse
+
+
+def _static_fields(sh):
+    return {k: v for k, v in sh.items() if k in ("n_graphs",)}
+
+
+def _static_loss(params, batch, M, cfg, static):
+    batch = dict(batch)
+    batch.update(static)
+    return M.loss_fn(params, batch, cfg)
+
+
+def rules_for(spec: ArchSpec, shape_name: str, multi_pod: bool):
+    from repro.models.sharding import make_rules
+
+    over = dict(spec.rules_overrides.get("*", {}))
+    over.update(spec.rules_overrides.get(shape_name, {}))
+    return make_rules(multi_pod, **over)

@@ -1,0 +1,29 @@
+"""wide-deep [recsys] — n_sparse=40 embed_dim=32 mlp=1024-512-256
+interaction=concat [arXiv:1606.07792]. Table rows follow a realistic
+power-law spread (2×10M, 4×1M, 14×100k, 20×10k ≈ 25.7M rows)."""
+from repro.configs.registry import ArchSpec, register
+from repro.models.recsys import RecsysConfig
+
+ROWS = tuple(
+    10_000_000 if i < 2 else
+    1_000_000 if i < 6 else
+    100_000 if i < 20 else
+    10_000
+    for i in range(40)
+)
+
+CFG = RecsysConfig(
+    name="wide-deep", kind="wide_deep", embed_dim=32, table_rows=ROWS,
+    top_mlp=(1024, 512, 256),
+)
+
+SHAPES = {
+    "train_batch":    {"kind": "train",     "batch": 65536},
+    "serve_p99":      {"kind": "serve",     "batch": 512},
+    "serve_bulk":     {"kind": "serve",     "batch": 262144},
+    "retrieval_cand": {"kind": "retrieval", "batch": 1, "n_candidates": 1_000_448}  # 1M padded to 512-divisible,
+}
+
+register(ArchSpec(
+    name="wide-deep", family="recsys", cfg=CFG, shapes=SHAPES, optimizer="adamw",
+))

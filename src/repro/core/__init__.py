@@ -1,0 +1,33 @@
+"""The paper's primary contribution: K-tree (and its medoid/sampled variants),
+the k-means family it builds on, clustering metrics, and the distributed
+(shard_map) layer. See DESIGN.md §1–3."""
+from repro.core import kmeans, ktree, metrics, sampling
+from repro.core.kmeans import (
+    kmeans as run_kmeans,
+    kmeans_fixed_iters,
+    bisecting_kmeans,
+    minibatch_kmeans,
+    assign,
+    pairwise_sqdist,
+)
+from repro.core.ktree import (
+    KTree,
+    ktree_init,
+    build,
+    insert,
+    extract_assignment,
+    assign_via_tree,
+    nn_search,
+    check_invariants,
+)
+from repro.core.metrics import micro_purity, micro_entropy, nmi
+from repro.core.sampling import sampled_ktree_clustering
+
+__all__ = [
+    "kmeans", "ktree", "metrics", "sampling",
+    "run_kmeans", "kmeans_fixed_iters", "bisecting_kmeans", "minibatch_kmeans",
+    "assign", "pairwise_sqdist",
+    "KTree", "ktree_init", "build", "insert", "extract_assignment",
+    "assign_via_tree", "nn_search", "check_invariants",
+    "micro_purity", "micro_entropy", "nmi", "sampled_ktree_clustering",
+]

@@ -1,0 +1,517 @@
+"""K-tree — height-balanced cluster tree of order m (the paper's contribution).
+
+TPU-native array layout (DESIGN.md §3): the whole tree lives in preallocated
+device arrays; node ids are row indices. Entry arrays have ``order+1`` slots so
+a node can transiently hold m+1 entries (the paper's overflow state) before the
+k-means split. The control plane (which node to split next, wave scheduling) is
+thin host Python; every data-touching step is a jitted batched op.
+
+Semantics (paper §1):
+- leaves hold 1..m data vectors (``child`` = document id),
+- internal nodes hold 1..m (cluster mean, child node) pairs,
+- insertion = NN search root→leaf, updating weighted means along the path,
+- a node that reaches m+1 entries is split with k-means (k=2), the two means
+  are promoted to the parent; the root split grows the tree by one level,
+- the tree is a nearest-neighbour search tree over the inserted vectors.
+
+Medoid variant (paper §2): centres are document exemplars (nearest entry to
+each 2-means mean), entries are *not* weighted and means are *not* updated on
+insertion — ``medoid=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KTree:
+    # --- data fields (device arrays) ---
+    centers: jax.Array       # f32[N, m+1, d] entry vectors/means (zeros invalid)
+    counts: jax.Array        # f32[N, m+1]    subtree weight per entry
+    child: jax.Array         # i32[N, m+1]    doc id (leaf) / node id (internal)
+    n_entries: jax.Array     # i32[N]
+    is_leaf: jax.Array       # bool[N]
+    parent: jax.Array        # i32[N]         -1 for root
+    parent_slot: jax.Array   # i32[N]
+    height: jax.Array        # i32[N]         0 at leaves (stable under root growth)
+    root: jax.Array          # i32[]
+    n_nodes: jax.Array       # i32[]
+    depth: jax.Array         # i32[]          levels; 1 = root is a leaf
+    # --- meta fields (static) ---
+    order: int = dataclasses.field(metadata=dict(static=True))
+    medoid: bool = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def max_nodes(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centers.shape[2]
+
+    @property
+    def slots(self) -> int:  # order + 1
+        return self.centers.shape[1]
+
+
+def ktree_init(
+    max_nodes: int, order: int, dim: int, medoid: bool = False, dtype=jnp.float32
+) -> KTree:
+    m1 = order + 1
+    return KTree(
+        centers=jnp.zeros((max_nodes, m1, dim), dtype),
+        counts=jnp.zeros((max_nodes, m1), dtype),
+        child=jnp.full((max_nodes, m1), -1, jnp.int32),
+        n_entries=jnp.zeros((max_nodes,), jnp.int32),
+        is_leaf=jnp.ones((max_nodes,), bool).at[0].set(True),
+        parent=jnp.full((max_nodes,), -1, jnp.int32),
+        parent_slot=jnp.full((max_nodes,), -1, jnp.int32),
+        height=jnp.zeros((max_nodes,), jnp.int32),
+        root=jnp.int32(0),
+        n_nodes=jnp.int32(1),
+        depth=jnp.int32(1),
+        order=order,
+        medoid=medoid,
+    )
+
+
+def suggested_max_nodes(n_docs: int, order: int) -> int:
+    """Capacity: worst-case ~2·N/(m/2) leaves plus internals (×1.5) plus slack."""
+    leaves = max(2 * n_docs // max(order // 2, 1), 8)
+    return int(leaves * 1.8) + 32
+
+
+# ---------------------------------------------------------------------------
+# routing (NN search root→leaf) — the hot path
+# ---------------------------------------------------------------------------
+
+def _node_nearest_slot(tree: KTree, node_ids: jax.Array, x: jax.Array) -> jax.Array:
+    """For each (node, query) pick the nearest *valid* entry slot. [B] → i32[B].
+
+    Distances drop the ‖x‖² constant (same argmin). The gathered einsum keeps
+    the MXU-shaped contraction; on flat big-K problems the Pallas kernel is
+    used instead (repro.kernels)."""
+    c = tree.centers[node_ids]                                   # [B, m1, d]
+    c_sq = jnp.einsum("bmd,bmd->bm", c, c)
+    cross = jnp.einsum("bd,bmd->bm", x, c)
+    dist = c_sq - 2.0 * cross
+    valid = jnp.arange(tree.slots)[None, :] < tree.n_entries[node_ids][:, None]
+    dist = jnp.where(valid, dist, jnp.inf)
+    return jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def route(
+    tree: KTree, x: jax.Array, levels: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Descend ``levels`` internal levels from the root.
+
+    Returns (leaf_ids i32[B], path_nodes i32[levels, B], path_slots i32[levels, B]).
+    ``levels = depth - 1`` reaches the leaf level. levels is static (the tree is
+    height-balanced, so every query descends the same number of steps).
+    """
+    b = x.shape[0]
+    node = jnp.full((b,), 1, jnp.int32) * tree.root
+    nodes_l, slots_l = [], []
+    for _ in range(levels):
+        slot = _node_nearest_slot(tree, node, x)
+        nodes_l.append(node)
+        slots_l.append(slot)
+        node = tree.child[node, slot]
+    path_nodes = jnp.stack(nodes_l) if levels else jnp.zeros((0, b), jnp.int32)
+    path_slots = jnp.stack(slots_l) if levels else jnp.zeros((0, b), jnp.int32)
+    return node, path_nodes, path_slots
+
+
+@jax.jit
+def nearest_in_leaf(tree: KTree, leaf_ids: jax.Array, x: jax.Array):
+    """(doc_id i32[B], sqdist f32[B]) — exact NN among the reached leaf's vectors."""
+    c = tree.centers[leaf_ids]                                   # [B, m1, d]
+    diff_sq = jnp.einsum("bmd,bmd->bm", c, c) - 2.0 * jnp.einsum("bd,bmd->bm", x, c)
+    valid = jnp.arange(tree.slots)[None, :] < tree.n_entries[leaf_ids][:, None]
+    diff_sq = jnp.where(valid, diff_sq, jnp.inf)
+    slot = jnp.argmin(diff_sq, axis=1).astype(jnp.int32)
+    x_sq = jnp.einsum("bd,bd->b", x, x)
+    best = jnp.take_along_axis(diff_sq, slot[:, None], 1)[:, 0] + x_sq
+    return tree.child[leaf_ids, slot], jnp.maximum(best, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# batched insertion wave
+# ---------------------------------------------------------------------------
+
+def _group_rank(leaf_ids: jax.Array) -> jax.Array:
+    """rank of each element within its equal-leaf group (stable, 0-based)."""
+    b = leaf_ids.shape[0]
+    perm = jnp.argsort(leaf_ids, stable=True)
+    sorted_leaf = leaf_ids[perm]
+    first = jnp.searchsorted(sorted_leaf, sorted_leaf, side="left")
+    rank_sorted = jnp.arange(b, dtype=jnp.int32) - first.astype(jnp.int32)
+    return jnp.zeros((b,), jnp.int32).at[perm].set(rank_sorted)
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def _insert_wave(
+    tree: KTree, x: jax.Array, doc_ids: jax.Array, valid: jax.Array, levels: int
+) -> Tuple[KTree, jax.Array]:
+    """One insertion wave at the current tree shape.
+
+    Routes every (valid) vector to its leaf, accepts per-leaf up to the m+1
+    overflow capacity, applies the paper's weighted-mean updates along the
+    accepted paths (dense mode), and appends accepted vectors to leaves.
+    Returns (tree, accepted bool[B]). Callers split overflowing nodes and loop
+    until nothing is pending (see :func:`build`).
+    """
+    b = x.shape[0]
+    m1 = tree.slots
+    nmax = tree.max_nodes
+    leaf_ids, path_nodes, path_slots = route(tree, x, levels)
+
+    # ---- acceptance: per leaf, up to (m+1 − n_entries) new vectors this wave.
+    # Invalid (already-inserted / padding) vectors must not consume capacity:
+    # park them in a sentinel group before ranking.
+    rank = _group_rank(jnp.where(valid, leaf_ids, nmax))
+    free = (m1 - tree.n_entries[leaf_ids]).astype(jnp.int32)
+    accepted = jnp.logical_and(valid, rank < free)
+
+    # ---- path mean updates for accepted vectors (dense K-tree only)
+    if not tree.medoid:
+        wa = accepted.astype(x.dtype)
+        centers, counts = tree.centers, tree.counts
+        for l in range(levels):
+            n_l, s_l = path_nodes[l], path_slots[l]
+            n_safe = jnp.where(accepted, n_l, nmax)  # OOB rows are dropped
+            sum_x = jnp.zeros_like(centers).at[n_safe, s_l].add(x * wa[:, None])
+            cnt = jnp.zeros_like(counts).at[n_safe, s_l].add(wa)
+            new_counts = counts + cnt
+            centers = jnp.where(
+                (cnt > 0)[..., None],
+                (centers * counts[..., None] + sum_x) / jnp.maximum(new_counts, 1e-12)[..., None],
+                centers,
+            )
+            counts = new_counts
+        tree = dataclasses.replace(tree, centers=centers, counts=counts)
+
+    # ---- leaf append
+    slot = tree.n_entries[leaf_ids] + rank
+    leaf_safe = jnp.where(accepted, leaf_ids, nmax)
+    centers = tree.centers.at[leaf_safe, slot].set(x)
+    counts = tree.counts.at[leaf_safe, slot].set(1.0)
+    child = tree.child.at[leaf_safe, slot].set(doc_ids.astype(jnp.int32))
+    n_entries = tree.n_entries.at[leaf_safe].add(accepted.astype(jnp.int32))
+    tree = dataclasses.replace(
+        tree, centers=centers, counts=counts, child=child, n_entries=n_entries
+    )
+    return tree, accepted
+
+
+# ---------------------------------------------------------------------------
+# node split (k-means k=2) + promotion — the B+-tree machinery
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def split_node(tree: KTree, node_id: jax.Array, key: jax.Array) -> KTree:
+    """Split an overflowing node (n_entries == m+1) into two with 2-means and
+    promote the two means (or exemplars, medoid mode) to the parent. The caller
+    guarantees the parent has a free slot (split shallowest-first)."""
+    m1 = tree.slots
+    nmax = tree.max_nodes
+    node_id = jnp.asarray(node_id, jnp.int32)
+    e_centers = tree.centers[node_id]            # [m1, d]
+    e_counts = tree.counts[node_id]              # [m1]
+    e_child = tree.child[node_id]                # [m1]
+    n_e = tree.n_entries[node_id]
+    validm = jnp.arange(m1) < n_e
+    leaf = tree.is_leaf[node_id]
+
+    w = jnp.where(validm, jnp.where(tree.medoid, 1.0, e_counts), 0.0)
+    res = kmeans(key, e_centers, 2, w=w, max_iters=50, init="kmeanspp")
+    grp = res.assign.astype(jnp.int32)
+
+    # enforce two non-empty groups (degenerate data / identical vectors)
+    n1 = jnp.sum(jnp.where(validm, grp, 0))
+    n0 = n_e - n1
+    d_to_c0 = jnp.sum((e_centers - res.centers[0]) ** 2, axis=1)
+    far = jnp.argmax(jnp.where(validm, d_to_c0, -jnp.inf)).astype(jnp.int32)
+    near = jnp.argmin(jnp.where(validm, d_to_c0, jnp.inf)).astype(jnp.int32)
+    grp = jnp.where(n1 == 0, grp.at[far].set(1), grp)
+    grp = jnp.where(n0 == 0, grp.at[near].set(0), grp)
+    grp = jnp.where(validm, grp, 1)  # invalid slots sort to the right group tail
+
+    # stable partition: group-0 entries first (stay), group-1 entries (move)
+    perm = jnp.argsort(grp, stable=True)
+    n_left = jnp.sum(jnp.where(validm, (grp == 0).astype(jnp.int32), 0))
+    n_right = n_e - n_left
+    p_centers, p_counts, p_child = e_centers[perm], e_counts[perm], e_child[perm]
+    pos = jnp.arange(m1, dtype=jnp.int32)
+    left_sel = pos < n_left
+    right_sel = jnp.logical_and(pos >= n_left, pos < n_e)
+
+    new_id = tree.n_nodes
+    zero_c = jnp.zeros_like(e_centers)
+
+    left_centers = jnp.where(left_sel[:, None], p_centers, 0.0)
+    left_counts = jnp.where(left_sel, p_counts, 0.0)
+    left_child = jnp.where(left_sel, p_child, -1)
+    # right entries compacted to the front of the new node
+    r_perm = jnp.where(pos + n_left < m1, pos + n_left, m1 - 1)
+    right_centers = jnp.where((pos < n_right)[:, None], p_centers[r_perm], 0.0)
+    right_counts = jnp.where(pos < n_right, p_counts[r_perm], 0.0)
+    right_child = jnp.where(pos < n_right, p_child[r_perm], -1)
+
+    centers = tree.centers.at[node_id].set(left_centers).at[new_id].set(right_centers)
+    counts = tree.counts.at[node_id].set(left_counts).at[new_id].set(right_counts)
+    child = tree.child.at[node_id].set(left_child).at[new_id].set(right_child)
+    n_entries = tree.n_entries.at[node_id].set(n_left).at[new_id].set(n_right)
+    is_leaf = tree.is_leaf.at[new_id].set(leaf)
+    height = tree.height.at[new_id].set(tree.height[node_id])
+
+    # children of an internal node follow their entries
+    int_node = jnp.logical_not(leaf)
+    lc_safe = jnp.where(jnp.logical_and(int_node, left_sel), left_child, nmax)
+    rc_safe = jnp.where(jnp.logical_and(int_node, pos < n_right), right_child, nmax)
+    parent = tree.parent.at[lc_safe].set(node_id).at[rc_safe].set(new_id)
+    parent_slot = tree.parent_slot.at[lc_safe].set(pos).at[rc_safe].set(pos)
+
+    # subtree summaries to promote
+    w_l = jnp.sum(left_counts)
+    w_r = jnp.sum(right_counts)
+    mean_l = jnp.sum(left_centers * left_counts[:, None], 0) / jnp.maximum(w_l, 1e-12)
+    mean_r = jnp.sum(right_centers * right_counts[:, None], 0) / jnp.maximum(w_r, 1e-12)
+    if tree.medoid:
+        # exemplar = nearest entry vector to each mean (k-medoids, paper §2)
+        def exemplar(entry_c, sel, mean):
+            d = jnp.sum((entry_c - mean) ** 2, axis=1)
+            i = jnp.argmin(jnp.where(sel, d, jnp.inf))
+            return entry_c[i]
+        mean_l = exemplar(left_centers, left_sel, mean_l)
+        mean_r = exemplar(right_centers, pos < n_right, mean_r)
+
+    is_root = tree.parent[node_id] < 0
+    p_id = jnp.where(is_root, tree.n_nodes + 1, tree.parent[node_id])
+    p_slot_l = jnp.where(is_root, 0, tree.parent_slot[node_id])
+    p_slot_r = jnp.where(is_root, 1, tree.n_entries[p_id])
+
+    centers = centers.at[p_id, p_slot_l].set(mean_l).at[p_id, p_slot_r].set(mean_r)
+    counts = counts.at[p_id, p_slot_l].set(w_l).at[p_id, p_slot_r].set(w_r)
+    child = child.at[p_id, p_slot_l].set(node_id).at[p_id, p_slot_r].set(new_id)
+    n_entries = n_entries.at[p_id].set(jnp.where(is_root, 2, n_entries[p_id] + 1))
+    is_leaf = is_leaf.at[p_id].set(jnp.where(is_root, False, is_leaf[p_id]))
+    height = height.at[p_id].set(
+        jnp.where(is_root, tree.height[node_id] + 1, height[p_id])
+    )
+    parent = parent.at[node_id].set(p_id).at[new_id].set(p_id)
+    parent = parent.at[p_id].set(jnp.where(is_root, -1, parent[p_id]))
+    parent_slot = parent_slot.at[node_id].set(p_slot_l).at[new_id].set(p_slot_r)
+
+    return dataclasses.replace(
+        tree,
+        centers=centers,
+        counts=counts,
+        child=child,
+        n_entries=n_entries,
+        is_leaf=is_leaf,
+        parent=parent,
+        parent_slot=parent_slot,
+        height=height,
+        root=jnp.where(is_root, p_id, tree.root).astype(jnp.int32),
+        n_nodes=tree.n_nodes + jnp.where(is_root, 2, 1).astype(jnp.int32),
+        depth=jnp.where(is_root, tree.depth + 1, tree.depth).astype(jnp.int32),
+    )
+
+
+def _split_all_overflowing(tree: KTree, key: jax.Array) -> Tuple[KTree, jax.Array]:
+    """Host control plane: split overflowing nodes, shallowest (max height)
+    first, until the m-order invariant holds everywhere."""
+    while True:
+        n_nodes = int(tree.n_nodes)
+        n_entries = np.asarray(tree.n_entries[:n_nodes])
+        over = np.nonzero(n_entries > tree.order)[0]
+        if over.size == 0:
+            return tree, key
+        heights = np.asarray(tree.height[:n_nodes])[over]
+        nid = over[np.argmax(heights)]
+        key, sub = jax.random.split(key)
+        tree = split_node(tree, jnp.int32(nid), sub)
+
+
+# ---------------------------------------------------------------------------
+# build drivers
+# ---------------------------------------------------------------------------
+
+def build(
+    x: jax.Array,
+    order: int,
+    key: Optional[jax.Array] = None,
+    batch_size: int = 256,
+    medoid: bool = False,
+    max_nodes: Optional[int] = None,
+) -> KTree:
+    """Online batched construction (paper §1 semantics; ``batch_size=1`` is the
+    exact sequential algorithm). Host loop: waves of route→accept→insert, then
+    the split cascade, until the batch is fully inserted."""
+    n, d = x.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if max_nodes is None:
+        max_nodes = suggested_max_nodes(n, order)
+    tree = ktree_init(max_nodes, order, d, medoid=medoid, dtype=x.dtype)
+
+    for start in range(0, n, batch_size):
+        idx = np.arange(start, min(start + batch_size, n))
+        pad = batch_size - idx.size
+        doc_ids = jnp.asarray(np.concatenate([idx, np.full(pad, -1)]).astype(np.int32))
+        xb = jnp.concatenate([x[idx[0] : idx[-1] + 1], jnp.zeros((pad, d), x.dtype)])
+        valid = doc_ids >= 0
+        while bool(jnp.any(valid)):
+            levels = int(tree.depth) - 1
+            tree, accepted = _insert_wave(tree, xb, doc_ids, valid, levels)
+            valid = jnp.logical_and(valid, jnp.logical_not(accepted))
+            tree, key = _split_all_overflowing(tree, key)
+    return tree
+
+
+def insert(
+    tree: KTree, x: jax.Array, doc_ids, key: Optional[jax.Array] = None
+) -> KTree:
+    """Incremental insertion into an existing tree (paper §5: "clusters can be
+    produced incrementally ... easy updates as new documents arrive")."""
+    if key is None:
+        key = jax.random.PRNGKey(1)
+    doc_ids = jnp.asarray(doc_ids, jnp.int32)
+    valid = doc_ids >= 0
+    while bool(jnp.any(valid)):
+        levels = int(tree.depth) - 1
+        tree, accepted = _insert_wave(tree, x, doc_ids, valid, levels)
+        valid = jnp.logical_and(valid, jnp.logical_not(accepted))
+        tree, key = _split_all_overflowing(tree, key)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# read APIs
+# ---------------------------------------------------------------------------
+
+def leaf_nodes(tree: KTree) -> np.ndarray:
+    n = int(tree.n_nodes)
+    is_leaf = np.asarray(tree.is_leaf[:n])
+    ne = np.asarray(tree.n_entries[:n])
+    return np.nonzero(np.logical_and(is_leaf, ne > 0))[0]
+
+
+def extract_assignment(tree: KTree, n_docs: int) -> Tuple[np.ndarray, int]:
+    """(cluster i32[n_docs], n_clusters) — cluster = compact id of the containing
+    leaf (the paper's leaf-level clustering solution). Unseen docs get −1."""
+    leaves = leaf_nodes(tree)
+    child = np.asarray(tree.child)
+    ne = np.asarray(tree.n_entries)
+    out = np.full(n_docs, -1, np.int32)
+    for ci, leaf in enumerate(leaves):
+        docs = child[leaf, : ne[leaf]]
+        out[docs] = ci
+    return out, len(leaves)
+
+
+def assign_via_tree(tree: KTree, x: jax.Array, chunk: int = 1024) -> np.ndarray:
+    """Cluster new vectors by NN search to the leaf level (sampled K-tree path,
+    paper §3: tree built on a sample classifies the full corpus)."""
+    leaves = leaf_nodes(tree)
+    remap = np.full(tree.max_nodes, -1, np.int32)
+    remap[leaves] = np.arange(leaves.size, dtype=np.int32)
+    levels = int(tree.depth) - 1
+    outs = []
+    for s in range(0, x.shape[0], chunk):
+        xb = x[s : s + chunk]
+        leaf_ids, _, _ = route(tree, xb, levels)
+        outs.append(remap[np.asarray(leaf_ids)])
+    return np.concatenate(outs)
+
+
+def nn_search(tree: KTree, q: jax.Array) -> Tuple[np.ndarray, np.ndarray]:
+    """Approximate NN doc ids for queries (the search-tree application)."""
+    levels = int(tree.depth) - 1
+    leaf_ids, _, _ = route(tree, q, levels)
+    doc, dist = nearest_in_leaf(tree, leaf_ids, q)
+    return np.asarray(doc), np.asarray(dist)
+
+
+def level_centers(tree: KTree, level: int) -> np.ndarray:
+    """Centres at a given level below the root (0 = root entries) — "a smaller
+    number of clusters higher in the tree" (paper §4) and the §5 browsing API."""
+    n = int(tree.n_nodes)
+    nodes = [int(tree.root)]
+    for _ in range(level):
+        nxt = []
+        child = np.asarray(tree.child[:n])
+        ne = np.asarray(tree.n_entries[:n])
+        leaf = np.asarray(tree.is_leaf[:n])
+        for nd in nodes:
+            if leaf[nd]:
+                continue
+            nxt.extend(child[nd, : ne[nd]].tolist())
+        nodes = nxt
+    cs, ne_all = np.asarray(tree.centers[:n]), np.asarray(tree.n_entries[:n])
+    return np.concatenate([cs[nd, : ne_all[nd]] for nd in nodes], axis=0)
+
+
+def check_invariants(tree: KTree, n_docs: Optional[int] = None, rtol: float = 1e-3):
+    """Structural invariants (tests + post-build validation):
+    1. every allocated node obeys 1 ≤ n_entries ≤ m (root may have ≥ 2),
+    2. leaves all sit at height 0 and the tree is height-balanced,
+    3. parent/child pointers are mutually consistent,
+    4. internal entry count == total weight of the child's entries,
+    5. dense mode: internal entry centre ≈ weighted mean of child entries,
+    6. every inserted doc appears in exactly one leaf slot.
+    Raises AssertionError on violation."""
+    n = int(tree.n_nodes)
+    ne = np.asarray(tree.n_entries[:n])
+    child = np.asarray(tree.child[:n])
+    counts = np.asarray(tree.counts[:n])
+    centers = np.asarray(tree.centers[:n])
+    is_leaf = np.asarray(tree.is_leaf[:n])
+    parent = np.asarray(tree.parent[:n])
+    parent_slot = np.asarray(tree.parent_slot[:n])
+    height = np.asarray(tree.height[:n])
+    root = int(tree.root)
+
+    reachable = set()
+    stack = [root]
+    while stack:
+        nd = stack.pop()
+        reachable.add(nd)
+        if not is_leaf[nd]:
+            stack.extend(int(c) for c in child[nd, : ne[nd]])
+    for nd in sorted(reachable):
+        assert 1 <= ne[nd] <= tree.order, f"node {nd}: {ne[nd]} entries (m={tree.order})"
+        if not is_leaf[nd]:
+            for s in range(ne[nd]):
+                c = int(child[nd, s])
+                assert parent[c] == nd and parent_slot[c] == s, f"bad pointer {nd}->{c}"
+                assert height[c] == height[nd] - 1, "height mismatch"
+                if not tree.medoid:
+                    # medoid centres/counts are frozen at split time (paper §2)
+                    assert abs(counts[nd, s] - counts[c, : ne[c]].sum()) <= max(
+                        rtol * counts[nd, s], 1e-2
+                    ), f"count mismatch at {nd}:{s}"
+                    w = counts[c, : ne[c]]
+                    mean = (centers[c, : ne[c]] * w[:, None]).sum(0) / max(w.sum(), 1e-12)
+                    err = np.abs(centers[nd, s] - mean).max()
+                    scale = max(np.abs(mean).max(), 1e-3)
+                    assert err <= max(rtol * scale, 1e-3), f"mean mismatch {nd}:{s} err={err}"
+    leaf_heights = {height[nd] for nd in reachable if is_leaf[nd]}
+    assert leaf_heights == {0}, f"unbalanced leaves: {leaf_heights}"
+    if n_docs is not None:
+        seen = np.zeros(n_docs, np.int32)
+        for nd in reachable:
+            if is_leaf[nd]:
+                np.add.at(seen, child[nd, : ne[nd]], 1)
+        assert (seen == 1).all(), f"doc conservation broken: {np.unique(seen)}"

@@ -1,0 +1,52 @@
+"""Clustering quality metrics — micro-averaged purity and entropy (paper §3),
+plus NMI as an extra. All pure jnp (differentiability not needed, but jit-able
+and shardable over documents).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def contingency(assign: jax.Array, labels: jax.Array, n_clusters: int, n_labels: int) -> jax.Array:
+    """n[c, l] = #docs in cluster c with label l. assign/labels: i32[N]."""
+    flat = assign.astype(jnp.int32) * n_labels + labels.astype(jnp.int32)
+    counts = jnp.bincount(flat, length=n_clusters * n_labels)
+    return counts.reshape(n_clusters, n_labels).astype(jnp.float32)
+
+
+def micro_purity(assign, labels, n_clusters: int, n_labels: int) -> jax.Array:
+    """Σ_c (n_c/N) · max_l n_cl / n_c = (1/N) Σ_c max_l n_cl — cluster scores
+    weighted by cluster size (micro averaging, paper §3)."""
+    n = contingency(assign, labels, n_clusters, n_labels)
+    total = jnp.maximum(n.sum(), 1.0)
+    return n.max(axis=1).sum() / total
+
+
+def micro_entropy(assign, labels, n_clusters: int, n_labels: int) -> jax.Array:
+    """Σ_c (n_c/N) · H(labels | c), H in bits normalised by log2(n_labels) so the
+    score is in [0,1] (0 = pure). Lower is better."""
+    n = contingency(assign, labels, n_clusters, n_labels)
+    n_c = n.sum(axis=1, keepdims=True)
+    p = n / jnp.maximum(n_c, 1.0)
+    h = -jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0).sum(axis=1)
+    h = h / jnp.log2(jnp.maximum(float(n_labels), 2.0))
+    total = jnp.maximum(n.sum(), 1.0)
+    return (n_c[:, 0] * h).sum() / total
+
+
+def nmi(assign, labels, n_clusters: int, n_labels: int) -> jax.Array:
+    """Normalised mutual information (arith-mean normalisation)."""
+    n = contingency(assign, labels, n_clusters, n_labels)
+    total = jnp.maximum(n.sum(), 1.0)
+    p = n / total
+    pc = p.sum(axis=1, keepdims=True)
+    pl = p.sum(axis=0, keepdims=True)
+    mi = jnp.where(p > 0, p * (jnp.log(jnp.maximum(p, 1e-30)) - jnp.log(jnp.maximum(pc * pl, 1e-30))), 0.0).sum()
+    hc = -jnp.where(pc > 0, pc * jnp.log(jnp.maximum(pc, 1e-30)), 0.0).sum()
+    hl = -jnp.where(pl > 0, pl * jnp.log(jnp.maximum(pl, 1e-30)), 0.0).sum()
+    return 2.0 * mi / jnp.maximum(hc + hl, 1e-30)
+
+
+def cluster_sizes(assign: jax.Array, n_clusters: int) -> jax.Array:
+    return jnp.bincount(assign.astype(jnp.int32), length=n_clusters)

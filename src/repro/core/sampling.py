@@ -1,0 +1,81 @@
+"""Sampled K-tree construction (paper §3).
+
+"The medoid K-tree was also used to select 10% of the corpus for sampling.
+This sample was used to construct a K-tree. The resulting K-tree was used to
+perform a nearest neighbour search and produce a clustering solution."
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ktree as kt
+
+
+def select_sample_medoid(
+    x: jax.Array, fraction: float = 0.1, key: Optional[jax.Array] = None,
+    batch_size: int = 256,
+) -> np.ndarray:
+    """Select ~fraction·N exemplar documents with a medoid K-tree: build with
+    order ≈ 1/(0.7·fraction) (average leaf fill ≈ 0.7·m) and return the
+    above-leaf exemplar doc ids (one per leaf)."""
+    if key is None:
+        key = jax.random.PRNGKey(7)
+    order = max(4, int(round(1.0 / (0.7 * fraction))))
+    tree = kt.build(x, order=order, key=key, batch_size=batch_size, medoid=True)
+    leaves = kt.leaf_nodes(tree)
+    parent = np.asarray(tree.parent)
+    parent_slot = np.asarray(tree.parent_slot)
+    child = np.asarray(tree.child)
+    ne = np.asarray(tree.n_entries)
+    ids = []
+    if int(tree.depth) == 1:  # root is the only leaf — sample its docs
+        root = int(tree.root)
+        ids = child[root, : ne[root]].tolist()
+    else:
+        for leaf in leaves:
+            p, s = int(parent[leaf]), int(parent_slot[leaf])
+            # medoid internal entries store exemplar *vectors*; recover the doc id
+            # as the leaf entry nearest the exemplar — by construction the
+            # exemplar is one of the subtree's documents.
+            ids.append(_leaf_doc_nearest(tree, leaf, p, s))
+    return np.unique(np.asarray(ids, dtype=np.int64))
+
+
+def _leaf_doc_nearest(tree: kt.KTree, leaf: int, p: int, s: int) -> int:
+    c = np.asarray(tree.centers[p, s])
+    ne = int(tree.n_entries[leaf])
+    vecs = np.asarray(tree.centers[leaf, :ne])
+    d = ((vecs - c) ** 2).sum(axis=1)
+    return int(np.asarray(tree.child[leaf, : ne])[int(np.argmin(d))])
+
+
+def select_sample_random(n: int, fraction: float, key: jax.Array) -> np.ndarray:
+    k = max(1, int(round(n * fraction)))
+    return np.asarray(jax.random.choice(key, n, (k,), replace=False))
+
+
+def sampled_ktree_clustering(
+    x: jax.Array,
+    order: int,
+    fraction: float = 0.1,
+    key: Optional[jax.Array] = None,
+    sample_mode: str = "medoid",
+    batch_size: int = 256,
+) -> Tuple[np.ndarray, int, kt.KTree]:
+    """Full paper §3 pipeline: sample → build K-tree on sample → NN-assign the
+    whole corpus. Returns (cluster i32[N], n_clusters, tree)."""
+    if key is None:
+        key = jax.random.PRNGKey(11)
+    k1, k2 = jax.random.split(key)
+    if sample_mode == "medoid":
+        sample = select_sample_medoid(x, fraction, k1, batch_size=batch_size)
+    else:
+        sample = select_sample_random(x.shape[0], fraction, k1)
+    tree = kt.build(x[jnp.asarray(sample)], order=order, key=k2, batch_size=batch_size)
+    assign = kt.assign_via_tree(tree, x)
+    n_clusters = len(kt.leaf_nodes(tree))
+    return assign, n_clusters, tree

@@ -1,0 +1,7 @@
+"""Data substrate: synthetic labelled corpora (the INEX-2008-like and RCV1-like
+collections used by the paper's evaluation), sharded batch pipelines, and the
+GNN neighbour sampler."""
+from repro.data.synth_corpus import make_corpus, CorpusSpec, INEX_LIKE, RCV1_LIKE
+from repro.data.pipeline import ShardedBatcher
+
+__all__ = ["make_corpus", "CorpusSpec", "INEX_LIKE", "RCV1_LIKE", "ShardedBatcher"]

@@ -1,0 +1,57 @@
+"""Sharded, deterministic, restartable batch pipeline.
+
+Design points for 1000+-node runs:
+- determinism: batch contents are a pure function of (seed, step, shard) — any
+  worker can recompute any batch, so a restarted/replaced node needs no state
+  hand-off beyond the step counter in the checkpoint.
+- sharding: each data-parallel group reads only its slice (disjoint strided
+  partition), so input bandwidth scales with the fleet.
+- straggler/fault semantics: batches are addressed by step; a worker that
+  skips a damaged record logs it and substitutes the next index (skip-and-log),
+  keeping the global batch shape static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+import jax
+
+
+@dataclasses.dataclass
+class ShardedBatcher:
+    n_examples: int
+    global_batch: int
+    shard_id: int = 0
+    n_shards: int = 1
+    seed: int = 0
+    drop_remainder: bool = True
+
+    def __post_init__(self):
+        if self.global_batch % self.n_shards:
+            raise ValueError("global_batch must divide evenly across shards")
+        self.per_shard = self.global_batch // self.n_shards
+
+    def batch_indices(self, step: int) -> np.ndarray:
+        """Indices for this shard at `step` — pure function of (seed, step)."""
+        epoch = (step * self.global_batch) // self.n_examples
+        rng = np.random.default_rng((self.seed, epoch))
+        perm = rng.permutation(self.n_examples)
+        start = (step * self.global_batch) % self.n_examples
+        idx = perm[(start + np.arange(self.global_batch)) % self.n_examples]
+        return idx[self.shard_id :: self.n_shards]
+
+    def __call__(self, start_step: int = 0) -> Iterator[np.ndarray]:
+        step = start_step
+        while True:
+            yield self.batch_indices(step)
+            step += 1
+
+
+def shard_bounds(n: int, shard_id: int, n_shards: int) -> tuple[int, int]:
+    """Contiguous [lo, hi) partition of n items over n_shards (for corpus
+    sharding in distributed K-tree / k-means)."""
+    base, rem = divmod(n, n_shards)
+    lo = shard_id * base + min(shard_id, rem)
+    return lo, lo + base + (1 if shard_id < rem else 0)

@@ -1,0 +1,144 @@
+"""Synthetic labelled document corpora.
+
+The paper evaluates on INEX 2008 XML Mining (114,366 docs, 15 labels) and an
+RCV1 subset (193,844 docs, 103 industry labels), both culled to the 8000
+highest-ranked terms (INEX: 10,229,913 nnz after culling → ~89 nnz/doc).
+
+Those corpora are not redistributable and the container is offline, so we
+generate corpora with matching *statistics* via a planted-topic model:
+
+- vocabulary with a Zipfian background distribution (natural-language-like),
+- each label owns a topic: a sparse multinomial concentrated on a label-specific
+  term subset, mixed with the background,
+- per-document length ~ lognormal, terms drawn from mix(topic, background),
+- label sizes follow a power law (real collections are imbalanced).
+
+Ground-truth labels make purity/entropy well-defined — the same protocol as the
+paper, with a knowable generative truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse.csr import Csr
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusSpec:
+    name: str
+    n_docs: int
+    n_labels: int
+    vocab: int            # raw vocabulary before culling
+    culled_vocab: int     # paper: 8000
+    mean_doc_len: float   # tokens per doc (pre-dedup)
+    topic_terms: int      # terms owned by each label topic
+    topic_weight: float   # P(token from topic) vs background
+    label_zipf: float     # power-law exponent for label sizes
+
+
+# Full-size specs (used in dry-runs / docs); benches scale these down.
+INEX_LIKE = CorpusSpec(
+    name="inex2008-like", n_docs=114_366, n_labels=15, vocab=206_868,
+    culled_vocab=8000, mean_doc_len=120.0, topic_terms=600, topic_weight=0.55,
+    label_zipf=1.1,
+)
+RCV1_LIKE = CorpusSpec(
+    name="rcv1-like", n_docs=193_844, n_labels=103, vocab=47_236,
+    culled_vocab=8000, mean_doc_len=80.0, topic_terms=200, topic_weight=0.6,
+    label_zipf=1.3,
+)
+
+
+def scaled(spec: CorpusSpec, n_docs: int, vocab: int | None = None,
+           culled: int | None = None) -> CorpusSpec:
+    """Shrink a spec for CPU-budget benches, keeping its character."""
+    return dataclasses.replace(
+        spec,
+        n_docs=n_docs,
+        vocab=vocab or min(spec.vocab, max(4 * (culled or spec.culled_vocab), 2000)),
+        culled_vocab=culled or spec.culled_vocab,
+    )
+
+
+def _zipf_probs(v: int, s: float = 1.05) -> np.ndarray:
+    p = 1.0 / np.power(np.arange(1, v + 1, dtype=np.float64), s)
+    return p / p.sum()
+
+
+def make_corpus(spec: CorpusSpec, seed: int = 0) -> Tuple[Csr, np.ndarray]:
+    """Returns (term-count CSR [n_docs, vocab], labels i32[n_docs]).
+
+    Vectorised sampling: we draw per-document token counts against a mixed
+    multinomial by sampling token→term ids in one big array pass per label
+    group (documents of one label share a topic distribution).
+    """
+    rng = np.random.default_rng(seed)
+    # label sizes ~ power law, normalised to n_docs
+    raw = 1.0 / np.power(np.arange(1, spec.n_labels + 1, dtype=np.float64), spec.label_zipf)
+    sizes = np.maximum((raw / raw.sum() * spec.n_docs).astype(np.int64), 1)
+    sizes[0] += spec.n_docs - sizes.sum()  # fix rounding on the largest label
+    labels = np.repeat(np.arange(spec.n_labels, dtype=np.int32), sizes)
+    rng.shuffle(labels)
+
+    background = _zipf_probs(spec.vocab)
+    # per-label topic term subsets (disjoint-ish: drawn without replacement from
+    # the mid-frequency band so topics are informative but not trivially split)
+    band = np.arange(spec.vocab // 50, spec.vocab)
+    doc_lens = np.maximum(
+        rng.lognormal(np.log(spec.mean_doc_len), 0.4, spec.n_docs).astype(np.int64), 8
+    )
+
+    rows_parts, cols_parts, vals_parts = [], [], []
+    for lbl in range(spec.n_labels):
+        docs = np.nonzero(labels == lbl)[0]
+        if docs.size == 0:
+            continue
+        topic_ids = rng.choice(band, size=spec.topic_terms, replace=False)
+        topic_p = rng.dirichlet(np.full(spec.topic_terms, 0.5))
+        lens = doc_lens[docs]
+        total = int(lens.sum())
+        # choose source: topic vs background per token
+        from_topic = rng.random(total) < spec.topic_weight
+        n_topic = int(from_topic.sum())
+        toks = np.empty(total, dtype=np.int64)
+        toks[from_topic] = topic_ids[rng.choice(spec.topic_terms, size=n_topic, p=topic_p)]
+        toks[~from_topic] = rng.choice(spec.vocab, size=total - n_topic, p=background)
+        doc_of_tok = np.repeat(docs, lens)
+        # count (doc, term) pairs
+        key = doc_of_tok.astype(np.int64) * spec.vocab + toks
+        uniq, counts = np.unique(key, return_counts=True)
+        rows_parts.append((uniq // spec.vocab).astype(np.int64))
+        cols_parts.append((uniq % spec.vocab).astype(np.int32))
+        vals_parts.append(counts.astype(np.float32))
+
+    rows = np.concatenate(rows_parts)
+    cols = np.concatenate(cols_parts)
+    vals = np.concatenate(vals_parts)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    indptr = np.zeros(spec.n_docs + 1, dtype=np.int32)
+    np.cumsum(np.bincount(rows, minlength=spec.n_docs), out=indptr[1:])
+    counts_csr = Csr(
+        data=jnp.asarray(vals),
+        indices=jnp.asarray(cols),
+        indptr=jnp.asarray(indptr),
+        n_cols=spec.vocab,
+    )
+    return counts_csr, labels
+
+
+def prepared_corpus(spec: CorpusSpec, seed: int = 0):
+    """Full paper preprocessing: counts → TF-IDF → cull top terms → unit rows.
+
+    Returns (culled tf-idf Csr, labels).
+    """
+    from repro.sparse.tfidf import tfidf_weight, cull_terms, unit_normalize_rows
+
+    counts, labels = make_corpus(spec, seed)
+    weighted = tfidf_weight(counts)
+    culled, _ = cull_terms(weighted, spec.culled_vocab)
+    return unit_normalize_rows(culled), labels

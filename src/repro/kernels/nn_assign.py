@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused nearest-centre search (the K-tree hot spot).
+
+dist[b,k] = ‖x_b‖² − 2·x_b·c_k + ‖c_k‖², reduced to (min, argmin) over k with an
+*online* accumulator across centre tiles — flash-attention's online-softmax
+pattern specialised to hard-min (DESIGN.md §3.3). The cross term is a
+[bm,D]×[D,bk] MXU matmul per tile; block dims are multiples of 128.
+
+Grid: (B/bm, K/bk) — the k axis is the inner (sequential, "arbitrary") axis so
+the output block (indexed by b only) stays resident in VMEM and is revisited.
+
+VMEM budget per step (defaults bm=bk=128, D≤8192, fp32):
+x 128·8192·4 = 4 MiB, c 4 MiB, dist 64 KiB, outputs ~1 KiB → ~8.2 MiB < 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nn_assign_kernel(x_ref, c_ref, bias_ref, min_ref, arg_ref, *, bk: int, k_actual: int):
+    k = pl.program_id(1)
+    x = x_ref[...]
+    c = c_ref[...]
+    cross = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                        # [bm, bk]
+    x32 = x.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    x_sq = jnp.sum(x32 * x32, axis=1)                        # [bm]
+    c_sq = jnp.sum(c32 * c32, axis=1)                        # [bk]
+    dist = jnp.maximum(x_sq[:, None] - 2.0 * cross + c_sq[None, :], 0.0)
+    dist = dist + bias_ref[...][None, :]                     # +inf on masked centres
+    col = k * bk + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    dist = jnp.where(col < k_actual, dist, jnp.inf)          # padded-K guard
+
+    local_min = jnp.min(dist, axis=1)
+    local_arg = (k * bk + jnp.argmin(dist, axis=1)).astype(jnp.int32)
+
+    @pl.when(k == 0)
+    def _init():
+        min_ref[...] = local_min
+        arg_ref[...] = local_arg
+
+    @pl.when(k > 0)
+    def _accum():
+        prev = min_ref[...]
+        better = local_min < prev                            # strict: keeps first occurrence
+        min_ref[...] = jnp.where(better, local_min, prev)
+        arg_ref[...] = jnp.where(better, local_arg, arg_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def nn_assign_pallas(
+    x: jax.Array,
+    centers: jax.Array,
+    bias: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """Padded entry point — callers use repro.kernels.ops.nn_assign, which pads
+    B/K/D and builds the centre-mask bias. x: [B,D], centers: [K,D], bias: [K]."""
+    b, d = x.shape
+    k, _ = centers.shape
+    assert b % bm == 0 and k % bk == 0, "pad B and K first"
+    grid = (b // bm, k // bk)
+    kernel = functools.partial(_nn_assign_kernel, bk=bk, k_actual=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, centers, bias)

@@ -1,0 +1,19 @@
+"""Mesh builders. Functions (not module constants) so importing never touches
+jax device state — the dry-run must set XLA_FLAGS before first jax init."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod (data, model); multi-pod adds a leading pod
+    axis: 2×16×16 = 512 chips. The pod axis composes with data for batch/FSDP
+    sharding; crossing it prices DCI, staying inside prices ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many (CPU) devices the test process has."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

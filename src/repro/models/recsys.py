@@ -1,0 +1,378 @@
+"""RecSys architectures: DLRM (MLPerf config), Wide&Deep, BST, DIEN.
+
+The hot path is the sparse embedding lookup over huge tables (10⁶–10⁸ rows).
+JAX has no EmbeddingBag — it is built here from ``jnp.take`` +
+``jax.ops.segment_sum`` (kernel_taxonomy §RecSys: "this IS part of the
+system"). Tables are sharded row-wise over the whole mesh (logical axis
+``table_rows``); GSPMD turns the gathers into partition-local lookups +
+masked all-reduce.
+
+``retrieval_score`` serves the ``retrieval_cand`` shape: one query against 10⁶
+candidates as a sharded batched-dot (and the K-tree ANN path in
+repro.core gives the paper-technique alternative — see examples/retrieval_ann).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+
+# MLPerf DLRM (Criteo 1TB) embedding table sizes — arXiv:1906.00091 / MLPerf.
+MLPERF_TABLE_ROWS: Tuple[int, ...] = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                     # dlrm | wide_deep | bst | dien
+    embed_dim: int
+    table_rows: Tuple[int, ...]   # one entry per sparse field
+    n_dense: int = 0
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    # sequence models
+    seq_len: int = 0
+    n_heads: int = 0
+    n_blocks: int = 0
+    gru_dim: int = 0
+    n_context: int = 0            # non-sequence categorical fields
+    unroll_gru: bool = False      # dry-run cost probes unroll the time scan
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.table_rows)
+
+    def n_params(self) -> int:
+        params = jax.eval_shape(lambda k: init_params(k, self), jax.random.PRNGKey(0))
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Single-hot lookup [..,] → [.., d]; table may be row-sharded."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(
+    table: jax.Array,
+    ids: jax.Array,            # i32[nnz] flat ids
+    segments: jax.Array,       # i32[nnz] output row of each id
+    n_out: int,
+    weights: jax.Array | None = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """EmbeddingBag(sum/mean) = gather + segment_sum (the manual construction)."""
+    vecs = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    out = jax.ops.segment_sum(vecs, segments, num_segments=n_out)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(segments, jnp.float32), segments, num_segments=n_out)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _pad_rows(rows: int) -> int:
+    """Row-sharded tables are padded to 512 (mesh-size) multiples so the
+    NamedSharding divides evenly; ids never reference the padding."""
+    if rows >= 100_000:
+        return -(-rows // 512) * 512
+    return rows
+
+
+def _init_tables(key, cfg: RecsysConfig, dim: int) -> Dict[str, jax.Array]:
+    tables = {}
+    for t, rows in enumerate(cfg.table_rows):
+        key, sub = jax.random.split(key)
+        scale = 1.0 / np.sqrt(dim)
+        tables[f"t{t}"] = (
+            jax.random.uniform(sub, (_pad_rows(rows), dim), minval=-scale, maxval=scale)
+        ).astype(cfg.dtype)
+    return tables
+
+
+def _tables_axes(cfg: RecsysConfig) -> Dict[str, Tuple]:
+    return {f"t{t}": ("table_rows", None) for t in range(cfg.n_sparse)}
+
+
+# ---------------------------------------------------------------------------
+# DLRM (dot interaction)
+# ---------------------------------------------------------------------------
+
+def _init_dlrm(key, cfg: RecsysConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_f = cfg.n_sparse + 1
+    n_inter = n_f * (n_f - 1) // 2
+    top_in = n_inter + cfg.bot_mlp[-1]
+    return {
+        "tables": _init_tables(k1, cfg, cfg.embed_dim),
+        "bot": L.mlp_stack_init(k2, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype),
+        "top": L.mlp_stack_init(k3, (top_in,) + cfg.top_mlp, cfg.dtype),
+    }
+
+
+def _dlrm_forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    dense = batch["dense"].astype(cfg.dtype)                  # [B,13]
+    ids = batch["sparse_ids"]                                 # [B,26]
+    b = dense.shape[0]
+    bot = L.mlp_stack_apply(params["bot"], dense, final_act=True)   # [B,128]
+    embs = [
+        embedding_lookup(params["tables"][f"t{t}"], ids[:, t])
+        for t in range(cfg.n_sparse)
+    ]
+    feats = jnp.stack([bot] + embs, axis=1)                   # [B,27,d]
+    feats = constrain(feats, "batch", None, None)
+    inter = jnp.einsum("bnd,bmd->bnm", feats, feats)          # [B,27,27]
+    iu, ju = np.triu_indices(feats.shape[1], k=1)
+    inter_flat = inter[:, iu, ju]                             # [B,351]
+    top_in = jnp.concatenate([bot, inter_flat], axis=-1)
+    return L.mlp_stack_apply(params["top"], top_in)[:, 0]     # logits [B]
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep
+# ---------------------------------------------------------------------------
+
+def _init_wide_deep(key, cfg: RecsysConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    deep_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    wide = {}
+    for t, rows in enumerate(cfg.table_rows):
+        k3, sub = jax.random.split(k3)
+        wide[f"w{t}"] = (jax.random.normal(sub, (_pad_rows(rows), 1)) * 0.01).astype(cfg.dtype)
+    return {
+        "tables": _init_tables(k1, cfg, cfg.embed_dim),
+        "deep": L.mlp_stack_init(k2, (deep_in,) + cfg.top_mlp + (1,), cfg.dtype),
+        "wide": wide,
+        "bias": jnp.zeros((), cfg.dtype),
+    }
+
+
+def _wide_deep_forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    ids = batch["sparse_ids"]                                 # [B,F]
+    embs = [
+        embedding_lookup(params["tables"][f"t{t}"], ids[:, t])
+        for t in range(cfg.n_sparse)
+    ]
+    deep_in = jnp.concatenate(embs, axis=-1)
+    if cfg.n_dense:
+        deep_in = jnp.concatenate([deep_in, batch["dense"].astype(cfg.dtype)], -1)
+    deep = L.mlp_stack_apply(params["deep"], deep_in)[:, 0]
+    wide = sum(
+        embedding_lookup(params["wide"][f"w{t}"], ids[:, t])[:, 0]
+        for t in range(cfg.n_sparse)
+    )
+    return deep + wide + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# BST (Behavior Sequence Transformer)
+# ---------------------------------------------------------------------------
+
+def _init_bst(key, cfg: RecsysConfig) -> Dict:
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 10)
+    mlp_in = (cfg.seq_len + 1 + cfg.n_context) * d
+    return {
+        "tables": _init_tables(ks[0], cfg, d),               # t0=item, rest context
+        "pos": L.embed_init(ks[1], cfg.seq_len + 1, d, dtype=cfg.dtype),
+        "wq": L.dense_init(ks[2], d, d, dtype=cfg.dtype),
+        "wk": L.dense_init(ks[3], d, d, dtype=cfg.dtype),
+        "wv": L.dense_init(ks[4], d, d, dtype=cfg.dtype),
+        "wo": L.dense_init(ks[5], d, d, dtype=cfg.dtype),
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "ln2": jnp.ones((d,), cfg.dtype),
+        "ffn": L.mlp_stack_init(ks[6], (d, 4 * d, d), cfg.dtype),
+        "mlp": L.mlp_stack_init(ks[7], (mlp_in,) + cfg.top_mlp + (1,), cfg.dtype),
+    }
+
+
+def _bst_forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    d, h = cfg.embed_dim, cfg.n_heads
+    hist = batch["hist_ids"]                                  # [B,S]
+    target = batch["target_id"]                               # [B]
+    b, s = hist.shape
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)    # [B,S+1]
+    x = embedding_lookup(params["tables"]["t0"], seq) + params["pos"][None]
+    x = constrain(x, "batch", None, None)
+    # one post-LN transformer block (paper: n_blocks=1, heads=8)
+    q = (x @ params["wq"]).reshape(b, s + 1, h, d // h)
+    k = (x @ params["wk"]).reshape(b, s + 1, h, d // h)
+    v = (x @ params["wv"]).reshape(b, s + 1, h, d // h)
+    att = L.flash_attention(q, k, v, causal=False, kv_chunk=max(8, s + 1))
+    x = L.rmsnorm(x + att.reshape(b, s + 1, d) @ params["wo"], params["ln1"])
+    x = L.rmsnorm(x + L.mlp_stack_apply(params["ffn"], x), params["ln2"])
+    feats = [x.reshape(b, (s + 1) * d)]
+    if cfg.n_context:
+        ctx = batch["context_ids"]                            # [B,n_context]
+        feats += [
+            embedding_lookup(params["tables"][f"t{t+1}"], ctx[:, t])
+            for t in range(cfg.n_context)
+        ]
+    return L.mlp_stack_apply(params["mlp"], jnp.concatenate(feats, -1), act=lambda z: jax.nn.leaky_relu(z, 0.01))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIEN (GRU + AUGRU)
+# ---------------------------------------------------------------------------
+
+def _gru_init(key, in_dim, hid, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": L.dense_init(k1, in_dim, 3 * hid, dtype=dt),
+        "wh": L.dense_init(k2, hid, 3 * hid, dtype=dt),
+        "b": jnp.zeros((3 * hid,), dt),
+    }
+
+
+def _gru_scan(p, x_seq: jax.Array, hid: int, att: jax.Array | None = None, unroll: bool = False):
+    """x_seq [B,S,D] → (final state [B,hid], states [B,S,hid]). ``att`` [B,S]
+    turns the update gate into AUGRU (DIEN): u ← a_t · u."""
+    b = x_seq.shape[0]
+    augru = att is not None
+
+    def step(hprev, inp):
+        xt, at = inp
+        gx = xt @ p["wx"] + p["b"]                            # [B,3h]
+        gh = hprev @ p["wh"]
+        r = jax.nn.sigmoid(gx[:, :hid] + gh[:, :hid])
+        u = jax.nn.sigmoid(gx[:, hid : 2 * hid] + gh[:, hid : 2 * hid])
+        cand = jnp.tanh(gx[:, 2 * hid :] + (r * hprev) @ p["wh"][:, 2 * hid :])
+        if augru:
+            u = at[:, None] * u
+        h = (1 - u) * hprev + u * cand
+        return h, h
+
+    xs = x_seq.transpose(1, 0, 2)                             # [S,B,D]
+    ats = att.transpose(1, 0) if augru else jnp.zeros((xs.shape[0], b), x_seq.dtype)
+    h0 = jnp.zeros((b, hid), x_seq.dtype)
+    hT, hs = jax.lax.scan(step, h0, (xs, ats), unroll=xs.shape[0] if unroll else 1)
+    return hT, hs.transpose(1, 0, 2)
+
+
+def _init_dien(key, cfg: RecsysConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    d, g = cfg.embed_dim * 2, cfg.gru_dim                     # item+category pairs
+    mlp_in = g + cfg.embed_dim * 2 + cfg.n_context * cfg.embed_dim
+    return {
+        "tables": _init_tables(ks[0], cfg, cfg.embed_dim),    # t0 item, t1 cat, rest ctx
+        "gru1": _gru_init(ks[1], d, g, cfg.dtype),
+        "gru2": _gru_init(ks[2], g, g, cfg.dtype),
+        "att_w": L.dense_init(ks[3], g, d, dtype=cfg.dtype),
+        "mlp": L.mlp_stack_init(ks[4], (mlp_in,) + cfg.top_mlp + (1,), cfg.dtype),
+    }
+
+
+def _dien_forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    hist_i = batch["hist_ids"]                                # [B,S]
+    hist_c = batch["hist_cat_ids"]                            # [B,S]
+    tgt_i, tgt_c = batch["target_id"], batch["target_cat_id"]
+    emb_i = embedding_lookup(params["tables"]["t0"], hist_i)
+    emb_c = embedding_lookup(params["tables"]["t1"], hist_c)
+    x = jnp.concatenate([emb_i, emb_c], axis=-1)              # [B,S,2d]
+    x = constrain(x, "batch", None, None)
+    tgt = jnp.concatenate(
+        [embedding_lookup(params["tables"]["t0"], tgt_i),
+         embedding_lookup(params["tables"]["t1"], tgt_c)], axis=-1
+    )                                                         # [B,2d]
+    _, interest = _gru_scan(params["gru1"], x, cfg.gru_dim, unroll=cfg.unroll_gru)   # [B,S,g]
+    att = jnp.einsum("bsg,gd,bd->bs", interest, params["att_w"], tgt)
+    att = jax.nn.softmax(att, axis=-1)
+    final, _ = _gru_scan(params["gru2"], interest, cfg.gru_dim, att=att, unroll=cfg.unroll_gru)
+    feats = [final, tgt]
+    if cfg.n_context:
+        ctx = batch["context_ids"]
+        feats += [
+            embedding_lookup(params["tables"][f"t{t+2}"], ctx[:, t])
+            for t in range(cfg.n_context)
+        ]
+    return L.mlp_stack_apply(params["mlp"], jnp.concatenate(feats, -1))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# dispatch + losses + retrieval
+# ---------------------------------------------------------------------------
+
+_FWD = {
+    "dlrm": _dlrm_forward,
+    "wide_deep": _wide_deep_forward,
+    "bst": _bst_forward,
+    "dien": _dien_forward,
+}
+_INIT = {
+    "dlrm": _init_dlrm,
+    "wide_deep": _init_wide_deep,
+    "bst": _init_bst,
+    "dien": _init_dien,
+}
+
+
+def init_params(key: jax.Array, cfg: RecsysConfig) -> Dict:
+    return _INIT[cfg.kind](key, cfg)
+
+
+def forward(params: Dict, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    return _FWD[cfg.kind](params, batch, cfg)
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    """Binary cross-entropy on CTR labels."""
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def param_logical_axes(cfg: RecsysConfig) -> Dict:
+    params = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+    def leaf_axes(path, leaf) -> Tuple:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if "tables" in names or "wide" in names:
+            # only genuinely large tables shard row-wise; tiny ones (some
+            # MLPerf fields have 3 rows) replicate — sharding a 3-row table
+            # over 512 devices is pure padding
+            if leaf.ndim == 2 and leaf.shape[0] >= 100_000:
+                return ("table_rows", None)
+            return tuple(None for _ in leaf.shape)
+        return tuple(None for _ in leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, params)
+
+
+def retrieval_score(params: Dict, query_vec: jax.Array, cand_table: jax.Array, topk: int = 100):
+    """Score 1..B query vectors against n_cand candidate embeddings (sharded
+    over `cand`) — batched dot + top-k, the `retrieval_cand` serving path."""
+    cand_table = constrain(cand_table, "cand", None)
+    scores = query_vec @ cand_table.T                          # [B, n_cand]
+    return jax.lax.top_k(scores, topk)
+
+
+def user_embedding(params: Dict, batch: Dict, cfg: RecsysConfig) -> jax.Array:
+    """A user-tower vector for retrieval (two-tower style): model-specific
+    pooling of its non-candidate features."""
+    if cfg.kind == "dlrm":
+        return L.mlp_stack_apply(params["bot"], batch["dense"].astype(cfg.dtype), final_act=True)
+    if cfg.kind == "wide_deep":
+        ids = batch["sparse_ids"]
+        embs = [embedding_lookup(params["tables"][f"t{t}"], ids[:, t]) for t in range(min(4, cfg.n_sparse))]
+        return sum(embs)
+    # sequence models: mean of history item embeddings
+    emb = embedding_lookup(params["tables"]["t0"], batch["hist_ids"])
+    return emb.mean(axis=1)

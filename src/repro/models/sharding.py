@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every tensor dim carries a logical name; a ``Rules`` table maps logical names to
+mesh axes (or None = replicated). Models call :func:`constrain` at the
+boundaries where the partitioning must change (e.g. Megatron-style sequence
+parallelism: activations are seq-sharded between blocks, head/ff-sharded inside
+them) so GSPMD emits exactly the collectives we price in the roofline.
+
+The table is carried in a context var set by the launcher / dry-run so model
+code never hard-codes mesh axis names.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis name → mesh axis (or tuple of axes, or None)."""
+
+    table: Mapping[str, Axis]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        axes = []
+        used: set = set()
+        for name in logical:
+            ax = self.table.get(name) if name else None
+            # one mesh axis may shard only one dim — later claims degrade to None
+            if ax is None:
+                axes.append(None)
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            free = tuple(a for a in flat if a not in used)
+            used.update(free)
+            axes.append(free if len(free) > 1 else (free[0] if free else None))
+        return P(*axes)
+
+
+# Default training rules for the production (pod, data, model) mesh. ``fsdp``
+# shards big weights over the data axes (ZeRO-3); ``tensor`` is classic TP.
+def make_rules(multi_pod: bool, **overrides: Axis) -> Rules:
+    dp: Axis = ("pod", "data") if multi_pod else "data"
+    table: dict = {
+        "batch": dp,
+        "seq": "model",          # sequence/context parallelism between blocks
+        "act_embed": None,
+        "act_heads": None,
+        "act_ff": "model",       # inside-MLP activations
+        "act_vocab": "model",
+        "fsdp": "data",          # weight dim sharded ZeRO-style
+        "tensor": "model",       # weight dim sharded Megatron-style
+        "vocab": "model",
+        "expert": "model",
+        "kv_seq": "model",       # decode KV cache length
+        "kv_seq_b1": ("data", "model") if not multi_pod else ("pod", "data", "model"),
+        "edges": (dp, "model") if isinstance(dp, str) else (*dp, "model"),
+        "nodes": None,
+        "table_rows": ("data", "model") if not multi_pod else ("pod", "data", "model"),
+        "cand": ("data", "model") if not multi_pod else ("pod", "data", "model"),
+        "centers_k": "model",    # §Perf: cluster-centre set sharded over model
+        "layers": None,
+        "stage": None,
+    }
+    table.update(overrides)
+    return Rules(table)
+
+
+_RULES: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "sharding_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules, mesh: Optional[Mesh] = None):
+    t1 = _RULES.set(rules)
+    t2 = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _RULES.reset(t1)
+        _MESH.reset(t2)
+
+
+def current_rules() -> Optional[Rules]:
+    return _RULES.get()
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a rules context
+    (so models run unmodified in single-device tests)."""
+    rules = _RULES.get()
+    mesh = _MESH.get()
+    if rules is None or mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, rules.spec(*logical))
+    )
+
+
+def spec_for(*logical: Optional[str]) -> P:
+    rules = _RULES.get()
+    if rules is None:
+        return P()
+    return rules.spec(*logical)
+
+
+def named_sharding(mesh: Mesh, rules: Rules, *logical: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(*logical))

@@ -1,0 +1,453 @@
+"""Decoder-only transformer LM (dense + MoE) in pure JAX.
+
+Covers the five assigned LM architectures: GQA/MQA/MHA, optional QKV bias
+(qwen), RoPE, SwiGLU, MoE with top-k routing (grok-1: 8e top-2, dbrx: 16e
+top-4). Layers are scanned (stacked params) with configurable remat so the
+48–64-layer configs lower to one compiled block × L — essential for the 512-way
+dry-run compile.
+
+Sharding is expressed through logical names (repro.models.sharding): batch→dp,
+sequence→model between blocks (Megatron-SP / context parallelism), feed-forward
+and vocab →model inside blocks, experts→model where E divides the axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # numerics / memory
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"            # "full" | "dots" | "none"
+    kv_chunk: int = 1024
+    flash_unroll: bool = False     # dry-run cost probes unroll the KV scan
+    train_attn: str = "dense"      # "dense" (remat-friendly) | "flash"
+    cache_update: str = "mask"     # "mask" | "dus" — §Perf iteration 1: a
+                                   # dynamic_update_slice at a dynamic position
+                                   # on the seq-sharded cache makes GSPMD
+                                   # all-gather the cache every layer (measured
+                                   # 2.9 GiB/layer on qwen decode_32k); the
+                                   # iota-compare masked update is elementwise
+                                   # and partitions cleanly.
+    aux_loss_weight: float = 0.01
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6·N·D roofline accounting)."""
+        d, f, v, hd = self.d_model, self.d_ff, self.vocab, self.hd
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (self.n_heads * hd) * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        if self.moe:
+            ff = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            ff = 3 * d * f
+        per_layer = attn + ff + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        dense_ff = self.n_experts * 3 * d * f
+        active_ff = self.top_k * 3 * d * f
+        return self.n_params() - self.n_layers * (dense_ff - active_ff)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: LMConfig) -> Dict:
+    ks = jax.random.split(key, 16)
+    d, hd, lcount = cfg.d_model, cfg.hd, cfg.n_layers
+    h, hk, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    dt = cfg.dtype
+
+    def w(key, *shape, scale=None):
+        scale = scale if scale is not None else 1.0 / np.sqrt(shape[-2])
+        return (jax.random.normal(key, shape) * scale).astype(dt)
+
+    layers: Dict[str, jax.Array] = {
+        "attn_norm": jnp.ones((lcount, d), dt),
+        "mlp_norm": jnp.ones((lcount, d), dt),
+        "wq": w(ks[0], lcount, d, h * hd),
+        "wk": w(ks[1], lcount, d, hk * hd),
+        "wv": w(ks[2], lcount, d, hk * hd),
+        "wo": w(ks[3], lcount, h * hd, d),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((lcount, h * hd), dt)
+        layers["bk"] = jnp.zeros((lcount, hk * hd), dt)
+        layers["bv"] = jnp.zeros((lcount, hk * hd), dt)
+    if cfg.moe:
+        e = cfg.n_experts
+        layers["router"] = w(ks[4], lcount, d, e, scale=0.02)
+        layers["w_gate"] = w(ks[5], lcount, e, d, f)
+        layers["w_up"] = w(ks[6], lcount, e, d, f)
+        layers["w_down"] = w(ks[7], lcount, e, f, d)
+    else:
+        layers["w_gate"] = w(ks[5], lcount, d, f)
+        layers["w_up"] = w(ks[6], lcount, d, f)
+        layers["w_down"] = w(ks[7], lcount, f, d)
+    return {
+        "embed": L.embed_init(ks[8], cfg.vocab, d, dtype=dt),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": w(ks[9], d, cfg.vocab, scale=1.0 / np.sqrt(d)),
+    }
+
+
+def param_logical_axes(cfg: LMConfig) -> Dict:
+    lay = {
+        "attn_norm": ("layers", None),
+        "mlp_norm": ("layers", None),
+        "wq": ("layers", "fsdp", "tensor"),
+        "wk": ("layers", "fsdp", "tensor"),
+        "wv": ("layers", "fsdp", "tensor"),
+        "wo": ("layers", "tensor", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        lay.update({"bq": ("layers", "tensor"), "bk": ("layers", "tensor"), "bv": ("layers", "tensor")})
+    if cfg.moe:
+        lay.update({
+            "router": ("layers", "fsdp", None),
+            "w_gate": ("layers", "expert", "fsdp", "tensor"),
+            "w_up": ("layers", "expert", "fsdp", "tensor"),
+            "w_down": ("layers", "expert", "tensor", "fsdp"),
+        })
+    else:
+        lay.update({
+            "w_gate": ("layers", "fsdp", "tensor"),
+            "w_up": ("layers", "fsdp", "tensor"),
+            "w_down": ("layers", "tensor", "fsdp"),
+        })
+    return {
+        # embed sharded on vocab ONLY: a 2-D-sharded operand defeats GSPMD's
+        # gather partitioning and the whole table gets all-gathered (measured:
+        # full bf16[V,D] + f32 grads replicated per device on grok-1)
+        "embed": ("vocab", None),
+        "layers": lay,
+        "final_norm": (None,),
+        "lm_head": (None, "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE block — sort-based dispatch with static capacity (DESIGN §5)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn(x: jax.Array, lp: Dict, cfg: LMConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] → (out, aux_loss). Groups = batch rows (GShard groups);
+    experts sharded over model when divisible (rules decide)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * s * k / e))
+
+    logits = jnp.einsum("bsd,de->bse", x, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                    # [B,S,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * Σ_e f_e · p_e
+    me = probs.mean(axis=(0, 1))                            # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (b * s * k)
+    aux = e * jnp.sum(me * ce)
+
+    # flatten choices: [B, S*k] token slots sorted by expert id per batch row
+    flat_e = eidx.reshape(b, s * k)
+    flat_gate = gate.reshape(b, s * k).astype(x.dtype)
+    src = jnp.broadcast_to(jnp.arange(s)[:, None], (s, k)).reshape(s * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)        # [B, S*k]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_src = src[order]                                 # [B, S*k]
+    # position within expert group (vectorised per row)
+    first = jax.vmap(lambda r: jnp.searchsorted(r, r, side="left"))(sorted_e)
+    pos = jnp.arange(s * k)[None, :] - first                # [B, S*k]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)   # OOB rows dropped
+
+    # Per-row (vmapped) gathers/scatters keep index tensors at [S*k] — a
+    # jnp.take_along_axis over the D axis would broadcast u32 indices to
+    # [B, S*k, D] (measured 48–60 GiB unsharded in the 314B HLO; see
+    # EXPERIMENTS.md §Perf hypothesis log). Batched single-dim gathers also
+    # partition cleanly along the batch dim under GSPMD.
+    def _row_dispatch(xr, dest_r, src_r):
+        xb = xr[src_r]                                      # [S*k, D]
+        return jnp.zeros((e * cap, d), x.dtype).at[dest_r].set(xb, mode="drop")
+
+    buf = jax.vmap(_row_dispatch)(x, dest, sorted_src)      # [B, E*C, D]
+    buf = buf.reshape(b, e, cap, d)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    hg = jnp.einsum("becd,edf->becf", buf, lp["w_gate"])
+    hu = jnp.einsum("becd,edf->becf", buf, lp["w_up"])
+    ho = jnp.einsum("becf,efd->becd", jax.nn.silu(hg) * hu, lp["w_down"])
+    ho = constrain(ho, "batch", "expert", None, None)
+    ho = ho.reshape(b, e * cap, d)
+
+    gate_sorted = jnp.take_along_axis(flat_gate, order, axis=1)  # [B,S*k] (no D)
+
+    def _row_combine(hor, dest_r, keep_r, gate_r, src_r):
+        out_sorted = hor[jnp.minimum(dest_r, e * cap - 1)]  # [S*k, D]
+        contrib = jnp.where(keep_r[:, None], out_sorted, 0.0) * gate_r[:, None]
+        return jnp.zeros((s, d), x.dtype).at[src_r].add(contrib)
+
+    out = jax.vmap(_row_combine)(ho, dest, keep, gate_sorted, sorted_src)
+    return out, aux
+
+
+def _dense_ffn(x: jax.Array, lp: Dict) -> jax.Array:
+    hg = jnp.einsum("bsd,df->bsf", x, lp["w_gate"])
+    hu = jnp.einsum("bsd,df->bsf", x, lp["w_up"])
+    h = jax.nn.silu(hg) * hu
+    h = constrain(h, "batch", "seq", "act_ff")
+    return jnp.einsum("bsf,fd->bsd", h, lp["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(x: jax.Array, lp: Dict, cfg: LMConfig, positions: jax.Array):
+    b, s, d = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xa = L.rmsnorm(x, lp["attn_norm"])
+    q = jnp.einsum("bsd,dh->bsh", xa, lp["wq"])
+    k = jnp.einsum("bsd,dh->bsh", xa, lp["wk"])
+    v = jnp.einsum("bsd,dh->bsh", xa, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hk, hd)
+    v = v.reshape(b, s, hk, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    # context parallelism: K/V replicated over the seq axis for the local-Q ×
+    # global-KV attention (all-gather of the small GQA KV)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    if cfg.train_attn == "dense":
+        attn = L.dense_attention(q, k, v, causal=True)
+    else:
+        attn = L.flash_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk, unroll=cfg.flash_unroll)
+    attn = attn.reshape(b, s, h * hd)
+    x = x + jnp.einsum("bsh,hd->bsd", attn, lp["wo"])
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    xm = L.rmsnorm(x, lp["mlp_norm"])
+    if cfg.moe:
+        ff, aux = _moe_ffn(xm, lp, cfg)
+    else:
+        ff, aux = _dense_ffn(xm, lp), jnp.float32(0.0)
+    x = x + ff
+    x = constrain(x, "batch", "seq", "act_embed")
+    return x, aux
+
+
+def _remat_wrap(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: LMConfig) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B,S] → (logits [B,S,V], aux_loss). Scan over stacked layers."""
+    b, s = tokens.shape
+    from repro.models.vocab_parallel import embed_lookup
+
+    tok_ax = (None if b == 1 else "batch", "seq")
+    x = embed_lookup(params["embed"], tokens, tok_logical=tok_ax)
+    x = constrain(x, "batch", "seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    block = _remat_wrap(
+        lambda x, lp: _block(x, lp, cfg, positions), cfg
+    )
+
+    def scan_body(x, lp):
+        x, aux = block(x, lp)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"])
+    # Megatron vocab-parallel loss boundary: gather seq, shard vocab — the
+    # head grad einsum then yields [D, V/shards] locally (a seq-sharded logits
+    # layout makes the [D,V] head grad replicate; measured 2×3 GiB on grok-1)
+    x = constrain(x, "batch", None, "act_embed")
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain(logits, "batch", None, "act_vocab")
+    return logits, auxs.sum()
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: LMConfig) -> jax.Array:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    ce = L.softmax_xent(logits, batch["labels"])
+    return ce + cfg.aux_loss_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> Dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def cache_logical_axes(batch: int) -> Tuple:
+    # batch=1 long-context cells shard the cache length over every axis
+    kv = "kv_seq_b1" if batch == 1 else "kv_seq"
+    b = None if batch == 1 else "batch"
+    return (None, b, kv, None, None)
+
+
+def block_prefill(x: jax.Array, lp: Dict, cfg: LMConfig, positions: jax.Array, max_seq: int):
+    """One prefill layer: returns (x', padded per-layer KV). Public so the
+    dry-run cost probe can price a single layer exactly (scan bodies are
+    costed once by XLA's analysis)."""
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xa = L.rmsnorm(x, lp["attn_norm"])
+    q = jnp.einsum("bsd,dh->bsh", xa, lp["wq"])
+    k = jnp.einsum("bsd,dh->bsh", xa, lp["wk"])
+    v = jnp.einsum("bsd,dh->bsh", xa, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = L.apply_rope(q.reshape(b, s, h, hd), positions, cfg.rope_theta)
+    k = L.apply_rope(k.reshape(b, s, hk, hd), positions, cfg.rope_theta)
+    v = v.reshape(b, s, hk, hd)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    kg = constrain(k, "batch", None, None, None)
+    vg = constrain(v, "batch", None, None, None)
+    attn = L.flash_attention(q, kg, vg, causal=True, kv_chunk=cfg.kv_chunk, unroll=cfg.flash_unroll)
+    x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(b, s, h * hd), lp["wo"])
+    xm = L.rmsnorm(x, lp["mlp_norm"])
+    ff = _moe_ffn(xm, lp, cfg)[0] if cfg.moe else _dense_ffn(xm, lp)
+    x = constrain(x + ff, "batch", "seq", "act_embed")
+    kv_pad = max_seq - s
+    k_out = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    v_out = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    return x, {"k": k_out, "v": v_out}
+
+
+def prefill(params: Dict, tokens: jax.Array, cfg: LMConfig, max_seq: int):
+    """Full-sequence forward that also fills the KV cache. Returns
+    (last-token logits [B,V], cache)."""
+    b, s = tokens.shape
+    from repro.models.vocab_parallel import embed_lookup
+
+    x = embed_lookup(params["embed"], tokens, tok_logical=(None if b == 1 else "batch", "seq"))
+    x = constrain(x, "batch", "seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def scan_body(x, lp):
+        return block_prefill(x, lp, cfg, positions, max_seq)
+
+    body = _remat_wrap(scan_body, cfg) if cfg.remat != "none" else scan_body
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x[:, -1], params["final_norm"])
+    x = constrain(x, "batch", "act_embed")
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+    cax = cache_logical_axes(b)
+    cache = {
+        "k": constrain(cache["k"], *cax),
+        "v": constrain(cache["v"], *cax),
+    }
+    return constrain(logits, "batch", "act_vocab"), cache
+
+
+def block_decode(x, lp, kc, vc, pos, positions, cfg: LMConfig, cax):
+    """One decode layer (cache update + attention + FFN). Public for the
+    dry-run cost probe."""
+    b = x.shape[0]
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xa = L.rmsnorm(x, lp["attn_norm"])
+    q = jnp.einsum("bsd,dh->bsh", xa, lp["wq"])
+    k = jnp.einsum("bsd,dh->bsh", xa, lp["wk"])
+    v = jnp.einsum("bsd,dh->bsh", xa, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = L.apply_rope(q.reshape(b, 1, h, hd), positions, cfg.rope_theta)
+    k = L.apply_rope(k.reshape(b, 1, hk, hd), positions, cfg.rope_theta)
+    v = v.reshape(b, 1, hk, hd)
+    if cfg.cache_update == "mask":
+        sel = (jnp.arange(kc.shape[1]) == pos)[None, :, None, None]
+        kc = jnp.where(sel, k.astype(kc.dtype), kc)
+        vc = jnp.where(sel, v.astype(vc.dtype), vc)
+    else:  # "dus" — kept for the §Perf before/after measurement
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+    kc = constrain(kc, *cax[1:])
+    vc = constrain(vc, *cax[1:])
+    from repro.models.sharding import current_rules
+    if current_rules() is not None:
+        # §Perf iteration 2: explicit flash-decoding (partial softmax per
+        # cache shard + tiny stat combine) instead of GSPMD's choice
+        attn = L.flash_decode_attention(q, kc, vc, pos + 1)
+    else:
+        attn = L.decode_attention(q, kc, vc, pos + 1)
+    x = x + jnp.einsum("bsh,hd->bsd", attn.reshape(b, 1, h * hd), lp["wo"])
+    xm = L.rmsnorm(x, lp["mlp_norm"])
+    ff = _moe_ffn(xm, lp, cfg)[0] if cfg.moe else _dense_ffn(xm, lp)
+    return x + ff, kc, vc
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jax.Array, pos: jax.Array, cfg: LMConfig):
+    """One decode step: tokens [B,1] at position ``pos`` (i32 scalar) against a
+    cache of static max length. Returns (logits [B,V], new cache)."""
+    b = tokens.shape[0]
+    from repro.models.vocab_parallel import embed_lookup
+
+    x = embed_lookup(params["embed"], tokens, tok_logical=(None if b == 1 else "batch", None))
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    cax = cache_logical_axes(b)
+
+    def scan_body(x, inp):
+        lp, kc, vc = inp
+        x, kc, vc = block_decode(x, lp, kc, vc, pos, positions, cfg, cax)
+        return x, {"k": kc, "v": vc}
+
+    x, new_cache = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = L.rmsnorm(x[:, 0], params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+    new_cache = {
+        "k": constrain(new_cache["k"], *cax),
+        "v": constrain(new_cache["v"], *cax),
+    }
+    return constrain(logits, "batch", "act_vocab"), new_cache

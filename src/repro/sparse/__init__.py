@@ -1,0 +1,38 @@
+"""Sparse document-matrix substrate.
+
+JAX has no native CSR/CSC (only experimental BCOO), so this package builds the
+sparse layer the paper needs from first principles:
+
+- :mod:`repro.sparse.csr`  — CSR container + take/segment_sum products.
+- :mod:`repro.sparse.ell`  — padded (ELL) layout, the TPU-friendly form used by
+  the ``ell_spmm`` Pallas kernel.
+- :mod:`repro.sparse.tfidf` — TF-IDF weighting and the paper's rank-based term
+  culling (top-8000 terms).
+"""
+from repro.sparse.csr import (
+    Csr,
+    csr_from_dense,
+    csr_to_dense,
+    csr_matmat,
+    csr_row_norms,
+    csr_row_gather_dense,
+    csr_select_columns,
+)
+from repro.sparse.ell import Ell, ell_from_csr, ell_to_dense, ell_dot_dense
+from repro.sparse.tfidf import tfidf_weight, cull_terms
+
+__all__ = [
+    "Csr",
+    "csr_from_dense",
+    "csr_to_dense",
+    "csr_matmat",
+    "csr_row_norms",
+    "csr_row_gather_dense",
+    "csr_select_columns",
+    "Ell",
+    "ell_from_csr",
+    "ell_to_dense",
+    "ell_dot_dense",
+    "tfidf_weight",
+    "cull_terms",
+]

@@ -1,0 +1,138 @@
+"""CSR sparse matrix built on ``jnp.take`` + ``jax.ops.segment_sum``.
+
+The container is a NamedTuple of plain arrays so it is a pytree and crosses
+jit/pjit boundaries. Row counts are static (shape metadata), nnz is static per
+instance — standard for JAX sparse work.
+
+Semantics follow scipy.sparse.csr_matrix: ``indptr[i]:indptr[i+1]`` delimits the
+column indices / values of row ``i``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Csr(NamedTuple):
+    """Compressed sparse row matrix of logical shape ``(n_rows, n_cols)``."""
+
+    data: jax.Array     # f[nnz]
+    indices: jax.Array  # i32[nnz] column ids
+    indptr: jax.Array   # i32[n_rows + 1]
+    n_cols: int         # static
+
+    @property
+    def n_rows(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows, self.n_cols)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def row_ids(self) -> jax.Array:
+        """i32[nnz] — the row id of every stored element."""
+        return row_ids_from_indptr(self.indptr, self.nnz)
+
+
+def row_ids_from_indptr(indptr: jax.Array, nnz: int) -> jax.Array:
+    """Expand an indptr into per-element row ids (the CSR→COO row expansion)."""
+    n_rows = indptr.shape[0] - 1
+    # searchsorted('right') maps element position -> row; O(nnz log n_rows).
+    return (
+        jnp.searchsorted(indptr, jnp.arange(nnz, dtype=indptr.dtype), side="right")
+        .astype(jnp.int32)
+        - 1
+    ).clip(0, n_rows - 1)
+
+
+def csr_from_dense(x, threshold: float = 0.0) -> Csr:
+    """Host-side constructor (numpy) — used by data pipelines and tests."""
+    x = np.asarray(x)
+    mask = np.abs(x) > threshold
+    counts = mask.sum(axis=1)
+    indptr = np.zeros(x.shape[0] + 1, dtype=np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    rows, cols = np.nonzero(mask)
+    return Csr(
+        data=jnp.asarray(x[rows, cols]),
+        indices=jnp.asarray(cols.astype(np.int32)),
+        indptr=jnp.asarray(indptr),
+        n_cols=x.shape[1],
+    )
+
+
+def csr_to_dense(m: Csr) -> jax.Array:
+    out = jnp.zeros(m.shape, m.dtype)
+    return out.at[m.row_ids(), m.indices].add(m.data)
+
+
+def csr_matmat(m: Csr, dense: jax.Array) -> jax.Array:
+    """``m @ dense`` — gather rhs rows by column id, scale, segment-sum by row.
+
+    dense: f[n_cols, d] -> f[n_rows, d]. This is the message-passing primitive
+    (gather → scale → segment reduce) the kernel taxonomy calls out.
+    """
+    gathered = jnp.take(dense, m.indices, axis=0)          # [nnz, d]
+    scaled = gathered * m.data[:, None]
+    return jax.ops.segment_sum(scaled, m.row_ids(), num_segments=m.n_rows)
+
+
+def csr_row_norms(m: Csr) -> jax.Array:
+    """Squared L2 norm of every row — needed for ‖x−c‖² expansion."""
+    return jax.ops.segment_sum(m.data * m.data, m.row_ids(), num_segments=m.n_rows)
+
+
+def csr_row_gather_dense(m: Csr, rows: jax.Array, max_nnz_row: int) -> jax.Array:
+    """Gather a set of rows as *dense* vectors: f[len(rows), n_cols].
+
+    Used by the medoid K-tree: internal nodes store document ids; NN search
+    against medoid centres gathers those documents. ``max_nnz_row`` bounds the
+    per-row scatter (static shape); rows with more nnz are truncated (callers
+    pass the corpus-wide max).
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    starts = m.indptr[rows]                                 # [R]
+    lengths = m.indptr[rows + 1] - starts                   # [R]
+    offs = jnp.arange(max_nnz_row, dtype=jnp.int32)         # [L]
+    gidx = starts[:, None] + offs[None, :]                  # [R, L]
+    valid = offs[None, :] < lengths[:, None]
+    gidx = jnp.where(valid, gidx, 0)
+    cols = jnp.where(valid, jnp.take(m.indices, gidx), 0)
+    vals = jnp.where(valid, jnp.take(m.data, gidx), 0.0)
+    out = jnp.zeros((rows.shape[0], m.n_cols), m.dtype)
+    r = jnp.broadcast_to(jnp.arange(rows.shape[0])[:, None], cols.shape)
+    return out.at[r, cols].add(vals)
+
+
+def csr_select_columns(m: Csr, keep: np.ndarray) -> Csr:
+    """Host-side column filter + re-index (term culling). ``keep``: sorted ids."""
+    keep = np.asarray(keep)
+    data = np.asarray(m.data)
+    indices = np.asarray(m.indices)
+    indptr = np.asarray(m.indptr)
+    remap = -np.ones(m.n_cols, dtype=np.int32)
+    remap[keep] = np.arange(keep.shape[0], dtype=np.int32)
+    new_cols = remap[indices]
+    mask = new_cols >= 0
+    # per-row surviving counts -> new indptr
+    rows = np.repeat(np.arange(m.n_rows), np.diff(indptr))
+    surv = np.bincount(rows[mask], minlength=m.n_rows)
+    new_indptr = np.zeros(m.n_rows + 1, dtype=np.int32)
+    np.cumsum(surv, out=new_indptr[1:])
+    return Csr(
+        data=jnp.asarray(data[mask]),
+        indices=jnp.asarray(new_cols[mask]),
+        indptr=jnp.asarray(new_indptr),
+        n_cols=int(keep.shape[0]),
+    )

@@ -1,0 +1,60 @@
+"""TF-IDF weighting and the paper's rank-based term culling (§1).
+
+The paper: "TF-IDF culling is performed by ranking terms. A rank is calculated
+by summing all weights for each term. The 8000 terms with the highest rank are
+selected." Host-side (numpy) — this is corpus preprocessing.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse.csr import Csr, csr_select_columns
+
+
+def tfidf_weight(counts: Csr, smooth: bool = True) -> Csr:
+    """Turn a term-count CSR into TF-IDF weights. tf = raw count,
+    idf = log(N / df) (smoothed: log((1+N)/(1+df)) + 1)."""
+    data = np.asarray(counts.data, dtype=np.float64)
+    indices = np.asarray(counts.indices)
+    n_docs = counts.n_rows
+    df = np.bincount(indices, minlength=counts.n_cols).astype(np.float64)
+    if smooth:
+        idf = np.log((1.0 + n_docs) / (1.0 + df)) + 1.0
+    else:
+        idf = np.log(np.maximum(n_docs / np.maximum(df, 1.0), 1.0))
+    return Csr(
+        data=jnp.asarray((data * idf[indices]).astype(np.float32)),
+        indices=counts.indices,
+        indptr=counts.indptr,
+        n_cols=counts.n_cols,
+    )
+
+
+def term_ranks(weighted: Csr) -> np.ndarray:
+    """Rank of each term = sum of its weights over the corpus (paper §1)."""
+    data = np.asarray(weighted.data, dtype=np.float64)
+    indices = np.asarray(weighted.indices)
+    return np.bincount(indices, weights=data, minlength=weighted.n_cols)
+
+
+def cull_terms(weighted: Csr, n_keep: int = 8000) -> tuple[Csr, np.ndarray]:
+    """Keep the ``n_keep`` highest-ranked terms; re-index columns.
+
+    Returns (culled matrix, kept original term ids).
+    """
+    ranks = term_ranks(weighted)
+    n_keep = min(n_keep, weighted.n_cols)
+    keep = np.sort(np.argpartition(-ranks, n_keep - 1)[:n_keep])
+    return csr_select_columns(weighted, keep), keep
+
+
+def unit_normalize_rows(m: Csr) -> Csr:
+    """L2-normalise document vectors (cosine ≡ euclidean on the unit sphere —
+    standard for document clustering; CLUTO does the same)."""
+    from repro.sparse.csr import csr_row_norms
+
+    norms = np.sqrt(np.maximum(np.asarray(csr_row_norms(m)), 1e-12))
+    rows = np.asarray(m.row_ids())
+    data = np.asarray(m.data) / norms[rows]
+    return Csr(jnp.asarray(data), m.indices, m.indptr, m.n_cols)

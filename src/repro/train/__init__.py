@@ -1,0 +1,8 @@
+"""Training runtime: optimizers (AdamW, factored Adafactor for the ≥100B
+configs), the train-step factory (microbatch accumulation, remat, optional
+int8 error-feedback gradient compression), and the training loop with
+checkpoint/restart fault tolerance."""
+from repro.train.optim import adamw, adafactor, Optimizer
+from repro.train.loop import make_train_step, TrainState
+
+__all__ = ["adamw", "adafactor", "Optimizer", "make_train_step", "TrainState"]

@@ -1,0 +1,170 @@
+"""Train-step factory + fault-tolerant training loop.
+
+Distributed-optimization features (DESIGN §5):
+- microbatch gradient accumulation (scan) for activation memory,
+- optional int8 error-feedback gradient compression on the DP all-reduce,
+- donated state (params update in place),
+- deterministic, restartable stepping (checkpoint/resume handled by
+  repro.ckpt; the data pipeline is a pure function of the step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optim import Optimizer
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def as_dict(self):
+        return {"params": self.params, "opt": self.opt, "step": self.step}
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+def _compress_int8(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """int8 quantise with error feedback: returns (q, scale, new_err).
+    The all-reduce then moves 1 byte/grad instead of 2–4 (beyond-paper trick;
+    ablated in EXPERIMENTS §Perf)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale, g32 - q.astype(jnp.float32) * scale
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Dict], jax.Array],
+    optimizer: Optimizer,
+    n_microbatches: int = 1,
+    compress_grads: bool = False,
+    param_specs: Any = None,
+    mesh: Any = None,
+):
+    """Returns step(state, batch) -> (state, metrics). ``batch`` leading dim is
+    split into ``n_microbatches`` chunks and gradients are accumulated in fp32.
+
+    ``param_specs``/``mesh``: PartitionSpecs matching params — the fp32
+    accumulator is constrained to them (otherwise the scan carry defaults to
+    replicated and a vocab×d_model f32 grad materialises on every device;
+    measured 2×3 GiB/device on grok-1 before this constraint).
+    """
+
+    def _constrain_like(g):
+        if param_specs is None or mesh is None:
+            return g
+        from jax.sharding import NamedSharding
+
+        return jax.tree.map(
+            lambda gg, sp: jax.lax.with_sharding_constraint(gg, NamedSharding(mesh, sp)),
+            g, param_specs,
+        )
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state.params
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+            grads = _constrain_like(grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb_i):
+                loss_acc, g_acc = carry
+                loss_i, g_i = grads_of(params, mb_i)
+                # constrain BEFORE accumulating: the data-reduction of dW can
+                # then lower to reduce-scatter onto the param shards (ZeRO-2)
+                # instead of all-reduce + slice — halves DP grad traffic
+                g_i = _constrain_like(g_i)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, g_i
+                )
+                return (loss_acc + loss_i, g_acc), None
+
+            g0 = _constrain_like(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), g0), mb)
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+
+        if compress_grads:
+            # error-feedback state rides in opt state under "_ef"
+            ef = state.opt.get("_ef") if isinstance(state.opt, dict) else None
+            if ef is None:
+                ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+            qse = jax.tree.map(
+                _compress_int8, grads, ef,
+                is_leaf=lambda x: isinstance(x, jax.Array) or hasattr(x, "shape"),
+            )
+            grads = jax.tree.map(
+                lambda t: t[0].astype(jnp.float32) * t[1],
+                qse, is_leaf=lambda x: isinstance(x, tuple),
+            )
+            new_ef = jax.tree.map(lambda t: t[2], qse, is_leaf=lambda x: isinstance(x, tuple))
+        opt_state = {k: v for k, v in state.opt.items() if k != "_ef"} if isinstance(state.opt, dict) else state.opt
+        new_params, new_opt = optimizer.update(grads, opt_state, params, state.step)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+        )
+        if compress_grads and isinstance(new_opt, dict):
+            new_opt = dict(new_opt)
+            new_opt["_ef"] = new_ef
+        return (
+            TrainState(new_params, new_opt, state.step + 1),
+            {"loss": loss, "grad_norm": gnorm},
+        )
+
+    return step
+
+
+def init_state(key, init_params_fn, optimizer: Optimizer) -> TrainState:
+    params = init_params_fn(key)
+    return TrainState(params, optimizer.init(params), jnp.int32(0))
+
+
+def train_loop(
+    state: TrainState,
+    step_fn,
+    batch_fn: Callable[[int], Dict],
+    n_steps: int,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 100,
+    log_every: int = 10,
+    on_metrics: Optional[Callable[[int, Dict], None]] = None,
+):
+    """Fault-tolerant loop: resumable by construction — the batch is a pure
+    function of the step and the checkpoint stores the step. A crashed or
+    preempted worker restarts, restores the latest atomic checkpoint and
+    continues bit-identically."""
+    from repro import ckpt as ckpt_lib
+
+    start = int(state.step)
+    t0 = time.time()
+    for step in range(start, n_steps):
+        batch = batch_fn(step)
+        state, metrics = step_fn(state, batch)
+        if on_metrics and (step % log_every == 0):
+            on_metrics(step, jax.tree.map(float, metrics))
+        if ckpt_dir and ((step + 1) % ckpt_every == 0 or step + 1 == n_steps):
+            ckpt_lib.save(ckpt_dir, state.as_dict(), step + 1)
+    return state, time.time() - t0

@@ -1,0 +1,143 @@
+"""Optimizers in pure JAX (no optax): AdamW and factored Adafactor.
+
+Optimizer states follow the param sharding (ZeRO: the state pytree reuses the
+param PartitionSpecs), so memory scales with the mesh. Adafactor's factored
+second moment makes the 314B/132B MoE configs feasible (DESIGN §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    # update(grads, state, params, step) -> (new_params, new_state)
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # state_logical_axes(param_axes, abstract_params) -> state axes pytree
+    state_logical_axes: Callable[[Any, Any], Any]
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, (str, tuple)) for a in x)
+
+
+def adamw(
+    lr: float = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        m_leaves = treedef.flatten_up_to(state["m"])
+        v_leaves = treedef.flatten_up_to(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for g, m, v, p in zip(g_leaves, m_leaves, v_leaves, p_leaves):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * u).astype(p.dtype))
+            new_m.append(m)
+            new_v.append(v)
+        return treedef.unflatten(new_p), {
+            "m": treedef.unflatten(new_m),
+            "v": treedef.unflatten(new_v),
+        }
+
+    def state_axes(param_axes, _abstract_params):
+        return {"m": param_axes, "v": param_axes}
+
+    return Optimizer(init, update, state_axes)
+
+
+def adafactor(
+    lr: float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    """Factored second moment (Shazeer & Stern, arXiv:1804.04235); no first
+    moment. State for an [.., a, b] matrix is [.., a] + [.., b] — the memory
+    trick that makes grok-1-314b trainable on 512 chips."""
+
+    def _factored(shape) -> bool:
+        return (
+            len(shape) >= 2
+            and shape[-1] >= min_dim_size_to_factor
+            and shape[-2] >= min_dim_size_to_factor
+        )
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(one, params)
+
+    _is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                denom = r[..., :, None] * vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        s_leaves = jax.tree.flatten(state, is_leaf=_is_state)[0]
+        results = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+        return (
+            treedef.unflatten([r[0] for r in results]),
+            treedef.unflatten([r[1] for r in results]),
+        )
+
+    def state_axes(param_axes, abstract_params):
+        ax_leaves, treedef = jax.tree.flatten(param_axes, is_leaf=_is_axes_leaf)
+        p_leaves = treedef.flatten_up_to(abstract_params)
+        out = []
+        for ax, p in zip(ax_leaves, p_leaves):
+            ax = tuple(ax)
+            if _factored(p.shape):
+                out.append({"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]})
+            else:
+                out.append({"v": ax})
+        return treedef.unflatten(out)
+
+    return Optimizer(init, update, state_axes)

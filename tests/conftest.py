@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src layout import without install; tests run single-device (the 512-device
+# override belongs ONLY to the dry-run entry point)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,115 @@
+"""Dry-run machinery tests: registry completeness + an end-to-end compile of a
+small-but-real cell on an 8-device mesh in a subprocess (the full 512-device
+sweep runs via ``python -m repro.launch.dryrun --all``)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import registry
+
+ASSIGNED = [
+    "qwen2.5-14b", "granite-20b", "phi3-mini-3.8b", "grok-1-314b", "dbrx-132b",
+    "dimenet", "dlrm-mlperf", "wide-deep", "bst", "dien",
+]
+
+
+def test_all_assigned_archs_registered():
+    archs = registry.list_archs()
+    for a in ASSIGNED:
+        assert a in archs
+
+
+def test_40_cells_defined():
+    cells = [
+        (a, s) for a in ASSIGNED for s in registry.get(a).shapes
+    ]
+    assert len(cells) == 40
+
+
+def test_exact_published_dims():
+    q = registry.get("qwen2.5-14b").cfg
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff, q.vocab) == \
+           (48, 5120, 40, 8, 13824, 152064) and q.qkv_bias
+    g = registry.get("granite-20b").cfg
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff, g.vocab) == \
+           (52, 6144, 48, 1, 24576, 49152)
+    p = registry.get("phi3-mini-3.8b").cfg
+    assert (p.n_layers, p.d_model, p.n_heads, p.n_kv_heads, p.d_ff, p.vocab) == \
+           (32, 3072, 32, 32, 8192, 32064)
+    gk = registry.get("grok-1-314b").cfg
+    assert (gk.n_layers, gk.d_model, gk.n_experts, gk.top_k) == (64, 6144, 8, 2)
+    db = registry.get("dbrx-132b").cfg
+    assert (db.n_layers, db.d_ff, db.n_experts, db.top_k) == (40, 10752, 16, 4)
+    dn = registry.get("dimenet").cfg
+    assert (dn.n_blocks, dn.d_hidden, dn.n_bilinear, dn.n_spherical, dn.n_radial) == \
+           (6, 128, 8, 7, 6)
+    dl = registry.get("dlrm-mlperf").cfg
+    assert dl.n_dense == 13 and dl.n_sparse == 26 and dl.embed_dim == 128
+
+
+def test_abstract_specs_build_for_every_cell():
+    for a in ASSIGNED:
+        spec = registry.get(a)
+        for s in spec.shapes:
+            ins, axes = registry.abstract_inputs(spec, s)
+            st, sax = registry.abstract_state(spec, s)
+            assert ins and st is not None
+            fn = registry.step_fn(spec, s)
+            assert callable(fn)
+
+
+def test_param_counts_match_published_sizes():
+    # n_params within 10% of the advertised model size
+    import math
+    for arch, target in [("qwen2.5-14b", 14e9), ("grok-1-314b", 314e9),
+                         ("dbrx-132b", 132e9), ("phi3-mini-3.8b", 3.8e9)]:
+        n = registry.get(arch).cfg.n_params()
+        assert abs(n - target) / target < 0.12, (arch, n)
+
+
+_COMPILE_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import jax
+    from repro.launch.dryrun import compile_cell
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    compiled, rec = compile_cell("dien", "serve_p99", multi_pod=False, mesh=mesh)
+    assert rec["cost"]["flops"] > 0
+    assert rec["memory"].get("temp_size_in_bytes", 0) >= 0
+    print("COMPILE_OK", rec["cost"]["flops"])
+    """
+)
+
+
+def test_compile_cell_small_mesh():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _COMPILE_SCRIPT.format(src=src)],
+        capture_output=True, text=True, timeout=420,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "COMPILE_OK" in proc.stdout
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes, _shape_bytes
+
+    hlo = """
+      %ag = bf16[32,1024,8,128] all-gather(%x), replica_groups={}
+      %ar.1 = f32[256,128] all-reduce-start(%y)
+      %ard = f32[256,128] all-reduce-done(%ar.1)
+      %a2a = (f32[16,64], f32[16,64]) all-to-all(%a, %b)
+      %cp = u32[8] collective-permute(%c)
+    """
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 32 * 1024 * 8 * 128 * 2
+    assert out["all-reduce"] == 256 * 128 * 4
+    assert out["all-to-all"] == 2 * 16 * 64 * 4
+    assert out["collective-permute"] == 8 * 4

@@ -1,0 +1,114 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+SHAPES = [
+    (1, 1, 1), (7, 5, 3), (128, 128, 128), (130, 257, 64),
+    (64, 1000, 96), (200, 300, 1000), (33, 129, 2048),
+]
+
+
+@pytest.mark.parametrize("b,k,d", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nn_assign_sweep(b, k, d, dtype):
+    rng = np.random.default_rng(b * 1000 + k + d)
+    x = jnp.asarray(rng.normal(0, 1, (b, d)).astype(np.float32)).astype(dtype)
+    c = jnp.asarray(rng.normal(0, 1, (k, d)).astype(np.float32)).astype(dtype)
+    idx, dist = ops.nn_assign(x, c)
+    ridx, rdist = ref.nn_assign_ref(x, c)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    # discrete boundary: accept either equal idx or equal distance within tol
+    same = np.asarray(idx) == np.asarray(ridx)
+    close = np.abs(np.asarray(dist) - np.asarray(rdist)) <= tol * (1 + np.abs(np.asarray(rdist)))
+    assert (same | close).all()
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=tol, atol=tol)
+
+
+def test_nn_assign_valid_mask():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (50, 64)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (300, 64)).astype(np.float32))
+    valid = jnp.asarray(rng.random(300) > 0.7)
+    idx, dist = ops.nn_assign(x, c, valid=valid)
+    ridx, rdist = ref.nn_assign_ref(x, c, valid=valid)
+    assert (np.asarray(idx) == np.asarray(ridx)).all()
+    assert np.asarray(valid)[np.asarray(idx)].all()
+
+
+def test_nn_assign_block_sizes():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (100, 70)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (190, 70)).astype(np.float32))
+    ridx, _ = ref.nn_assign_ref(x, c)
+    for bm, bk in [(32, 64), (128, 128), (256, 128)]:
+        idx, _ = ops.nn_assign(x, c, bm=bm, bk=bk)
+        assert (np.asarray(idx) == np.asarray(ridx)).all(), (bm, bk)
+
+
+ELL_SHAPES = [(1, 8, 1, 16), (8, 16, 9, 40), (130, 32, 120, 256), (64, 64, 200, 1000)]
+
+
+@pytest.mark.parametrize("b,nz,k,d", ELL_SHAPES)
+def test_ell_spmm_sweep(b, nz, k, d):
+    rng = np.random.default_rng(b + nz + k)
+    vals = rng.normal(0, 1, (b, nz)).astype(np.float32)
+    vals[:, nz // 2:] *= rng.random((b, nz - nz // 2)) > 0.4  # padding pattern
+    cols = rng.integers(0, d, (b, nz)).astype(np.int32)
+    c = rng.normal(0, 1, (k, d)).astype(np.float32)
+    s = ops.ell_spmm(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(c))
+    rs = ref.ell_spmm_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=3e-5, atol=3e-5)
+
+
+def test_ell_spmm_duplicate_columns():
+    # repeated column ids within a row must accumulate
+    vals = jnp.asarray([[1.0, 2.0, 3.0, 0.0]])
+    cols = jnp.asarray([[2, 2, 5, 0]], dtype=jnp.int32)
+    c = jnp.asarray(np.eye(8, dtype=np.float32))
+    s = ops.ell_spmm(vals, cols, c)
+    assert float(s[0, 2]) == pytest.approx(3.0)
+    assert float(s[0, 5]) == pytest.approx(3.0)
+
+
+def test_medoid_assign_sparse_matches_dense():
+    rng = np.random.default_rng(2)
+    from repro.sparse import csr_from_dense, ell_from_csr
+    x = (rng.normal(0, 1, (40, 64)) * (rng.random((40, 64)) < 0.3)).astype(np.float32)
+    m = csr_from_dense(x)
+    e = ell_from_csr(m)
+    centers = jnp.asarray(rng.normal(0, 1, (17, 64)).astype(np.float32))
+    row_sq = jnp.asarray((x * x).sum(1))
+    idx, dist = ops.medoid_assign_sparse(e.values, e.cols, row_sq, centers)
+    ridx, rdist = ref.nn_assign_ref(jnp.asarray(x), centers)
+    assert (np.asarray(idx) == np.asarray(ridx)).all()
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 150), st.integers(1, 128), st.integers(0, 9999))
+def test_nn_assign_property(b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (b, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (k, d)).astype(np.float32))
+    idx, dist = ops.nn_assign(x, c)
+    ridx, rdist = ref.nn_assign_ref(x, c)
+    assert (np.asarray(idx) == np.asarray(ridx)).all()
+
+
+def test_kernel_flag_in_kmeans():
+    """assign(use_kernel=True) plugs into the clustering stack."""
+    from repro.core.kmeans import assign as km_assign
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (60, 32)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (9, 32)).astype(np.float32))
+    i1, d1 = km_assign(x, c, use_kernel=False)
+    i2, d2 = km_assign(x, c, use_kernel=True)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)

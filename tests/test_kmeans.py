@@ -1,0 +1,102 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import (
+    kmeans, kmeans_fixed_iters, bisecting_kmeans, minibatch_kmeans,
+    assign, pairwise_sqdist, lloyd_step, kmeans_pp_init,
+)
+
+
+def planted(rng, k=5, per=60, d=8, spread=6.0):
+    means = rng.normal(0, spread, (k, d))
+    x = np.concatenate([rng.normal(means[i], 1.0, (per, d)) for i in range(k)])
+    return jnp.asarray(x.astype(np.float32)), np.repeat(np.arange(k), per)
+
+
+def test_pairwise_sqdist_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (20, 6)).astype(np.float32)
+    c = rng.normal(0, 1, (7, 6)).astype(np.float32)
+    d = np.asarray(pairwise_sqdist(jnp.asarray(x), jnp.asarray(c)))
+    ref = ((x[:, None] - c[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(d, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_recovers_planted_clusters():
+    rng = np.random.default_rng(1)
+    x, labels = planted(rng)
+    res = kmeans(jax.random.PRNGKey(0), x, 5)
+    from repro.core.metrics import micro_purity
+    p = float(micro_purity(res.assign, jnp.asarray(labels), 5, 5))
+    assert p > 0.95
+
+
+def test_lloyd_sse_non_increasing():
+    rng = np.random.default_rng(2)
+    x, _ = planted(rng, k=4, per=40)
+    key = jax.random.PRNGKey(3)
+    centers = kmeans_pp_init(key, x, 4)
+    prev = np.inf
+    for _ in range(8):
+        centers, idx, counts, sse = lloyd_step(x, centers)
+        assert float(sse) <= prev + 1e-3
+        prev = float(sse)
+
+
+def test_weighted_equals_duplicated():
+    rng = np.random.default_rng(3)
+    x, _ = planted(rng, k=3, per=20, d=4)
+    w = jnp.ones(x.shape[0]).at[5].set(3.0)
+    x_dup = jnp.concatenate([x, x[5:6], x[5:6]])
+    c0 = x[:3]
+    c_w, *_ = lloyd_step(x, c0, w=w)
+    c_d, *_ = lloyd_step(x_dup, c0)
+    np.testing.assert_allclose(np.asarray(c_w), np.asarray(c_d), rtol=1e-4, atol=1e-5)
+
+
+def test_fixed_iters_runs_exact_count():
+    rng = np.random.default_rng(4)
+    x, _ = planted(rng, k=3, per=30)
+    res = kmeans_fixed_iters(jax.random.PRNGKey(0), x, 3, iters=4)
+    assert int(res.iters) == 4 and np.isfinite(float(res.sse))
+
+
+def test_bisecting_produces_k_clusters():
+    rng = np.random.default_rng(5)
+    x, labels = planted(rng, k=6, per=30)
+    res = bisecting_kmeans(jax.random.PRNGKey(1), x, 6)
+    sizes = np.bincount(np.asarray(res.assign), minlength=6)
+    assert (sizes > 0).all()
+    from repro.core.metrics import micro_purity
+    assert float(micro_purity(res.assign, jnp.asarray(labels), 6, 6)) > 0.8
+
+
+def test_minibatch_kmeans_reasonable():
+    rng = np.random.default_rng(6)
+    x, labels = planted(rng, k=4, per=80)
+    res = minibatch_kmeans(jax.random.PRNGKey(2), x, 4, batch=64, steps=100)
+    full = kmeans(jax.random.PRNGKey(2), x, 4)
+    assert float(res.sse) < 3.0 * float(full.sse) + 1e-3
+
+
+def test_assign_respects_valid_mask():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 1, (10, 4)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (5, 4)).astype(np.float32))
+    valid = jnp.asarray([True, False, True, False, True])
+    idx, _ = assign(x, c, valid=valid)
+    assert set(np.asarray(idx).tolist()) <= {0, 2, 4}
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 99999))
+def test_kmeans_sse_beats_random_centers(k, seed):
+    rng = np.random.default_rng(seed)
+    x, _ = planted(rng, k=k, per=25, d=5)
+    res = kmeans(jax.random.PRNGKey(seed), x, k)
+    rand_c = x[: k]
+    _, d_rand = assign(x, rand_c)
+    assert float(res.sse) <= float(d_rand.sum()) + 1e-3

@@ -1,0 +1,43 @@
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import micro_purity, micro_entropy, nmi, contingency
+
+
+def test_perfect_clustering():
+    labels = jnp.asarray([0, 0, 1, 1, 2, 2])
+    assign = jnp.asarray([2, 2, 0, 0, 1, 1])  # permuted but pure
+    assert float(micro_purity(assign, labels, 3, 3)) == 1.0
+    assert float(micro_entropy(assign, labels, 3, 3)) == 0.0
+    assert float(nmi(assign, labels, 3, 3)) > 0.99
+
+
+def test_single_cluster_worst_entropy():
+    labels = jnp.asarray([0, 1] * 8)
+    assign = jnp.zeros(16, jnp.int32)
+    # uniform 2-label mix in one cluster: entropy (normalised) = 1
+    assert abs(float(micro_entropy(assign, labels, 1, 2)) - 1.0) < 1e-5
+    assert abs(float(micro_purity(assign, labels, 1, 2)) - 0.5) < 1e-5
+
+
+def test_contingency_counts():
+    labels = jnp.asarray([0, 1, 1, 0])
+    assign = jnp.asarray([0, 0, 1, 1])
+    n = np.asarray(contingency(assign, labels, 2, 2))
+    assert n.tolist() == [[1, 1], [1, 1]]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(10, 60), st.integers(0, 10_000))
+def test_metric_bounds(n_clusters, n_labels, n, seed):
+    rng = np.random.default_rng(seed)
+    assign = jnp.asarray(rng.integers(0, n_clusters, n))
+    labels = jnp.asarray(rng.integers(0, n_labels, n))
+    p = float(micro_purity(assign, labels, n_clusters, n_labels))
+    h = float(micro_entropy(assign, labels, n_clusters, n_labels))
+    m = float(nmi(assign, labels, n_clusters, n_labels))
+    assert 0.0 <= p <= 1.0 and 0.0 <= h <= 1.0 + 1e-6 and -1e-6 <= m <= 1.0 + 1e-6
+    # purity at least the share of the globally most common label
+    top = max(np.bincount(np.asarray(labels), minlength=n_labels)) / n
+    assert p >= top - 1e-6

@@ -1,0 +1,76 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import ShardedBatcher, shard_bounds
+from repro.data.synth_corpus import make_corpus, prepared_corpus, scaled, INEX_LIKE, RCV1_LIKE
+
+
+def test_batcher_determinism():
+    b1 = ShardedBatcher(n_examples=1000, global_batch=64, seed=3)
+    b2 = ShardedBatcher(n_examples=1000, global_batch=64, seed=3)
+    for step in [0, 5, 17]:
+        np.testing.assert_array_equal(b1.batch_indices(step), b2.batch_indices(step))
+
+
+def test_batcher_shards_disjoint_and_cover():
+    shards = [
+        ShardedBatcher(n_examples=512, global_batch=64, shard_id=i, n_shards=4, seed=0)
+        for i in range(4)
+    ]
+    parts = [s.batch_indices(3) for s in shards]
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == 64  # disjoint union = the global batch
+    for p in parts:
+        assert p.size == 16
+
+
+def test_batcher_epoch_coverage():
+    b = ShardedBatcher(n_examples=256, global_batch=64, seed=1)
+    seen = np.concatenate([b.batch_indices(s) for s in range(4)])
+    assert len(np.unique(seen)) == 256  # one epoch covers every example
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 1000), st.integers(1, 16))
+def test_shard_bounds_partition(n, k):
+    spans = [shard_bounds(n, i, k) for i in range(k)]
+    assert spans[0][0] == 0 and spans[-1][1] == n
+    for (a1, b1), (a2, b2) in zip(spans, spans[1:]):
+        assert b1 == a2
+        assert 0 <= (b1 - a1) - (b2 - a2) <= 1  # balanced
+
+
+def test_corpus_statistics():
+    spec = scaled(INEX_LIKE, n_docs=500, culled=300)
+    counts, labels = make_corpus(spec, seed=0)
+    assert counts.n_rows == 500 and labels.shape[0] == 500
+    assert len(np.unique(labels)) == spec.n_labels
+    nnz_per_doc = np.diff(np.asarray(counts.indptr))
+    assert nnz_per_doc.min() >= 1
+    assert 10 < nnz_per_doc.mean() < 400
+
+
+def test_prepared_corpus_unit_rows_and_culling():
+    spec = scaled(RCV1_LIKE, n_docs=300, culled=200)
+    m, labels = prepared_corpus(spec, seed=1)
+    assert m.n_cols == 200
+    from repro.sparse.csr import csr_row_norms
+    norms = np.asarray(csr_row_norms(m))
+    nz = np.diff(np.asarray(m.indptr)) > 0
+    np.testing.assert_allclose(norms[nz], 1.0, rtol=1e-3)
+
+
+def test_labels_give_signal():
+    """Docs of the same label must be measurably closer (the planted topics
+    are real signal, so purity/entropy curves mean something)."""
+    spec = scaled(INEX_LIKE, n_docs=400, culled=250)
+    m, labels = prepared_corpus(spec, seed=2)
+    from repro.sparse.csr import csr_to_dense
+    x = np.asarray(csr_to_dense(m))
+    lab = labels
+    same = x[lab == lab[0]][:20]
+    other = x[lab != lab[0]][:20]
+    d_same = ((same[:10, None] - same[None, 10:20]) ** 2).sum(-1).mean()
+    d_other = ((same[:10, None] - other[None, :10]) ** 2).sum(-1).mean()
+    assert d_same < d_other

@@ -1,0 +1,93 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    Csr, csr_from_dense, csr_to_dense, csr_matmat, csr_row_norms,
+    csr_row_gather_dense, Ell, ell_from_csr, ell_to_dense, ell_dot_dense,
+    tfidf_weight, cull_terms,
+)
+from repro.sparse.tfidf import unit_normalize_rows, term_ranks
+
+
+def rand_sparse(rng, n, d, density=0.2):
+    x = rng.normal(0, 1, (n, d)) * (rng.random((n, d)) < density)
+    return x.astype(np.float32)
+
+
+def test_csr_roundtrip():
+    rng = np.random.default_rng(0)
+    x = rand_sparse(rng, 13, 7)
+    m = csr_from_dense(x)
+    np.testing.assert_allclose(np.asarray(csr_to_dense(m)), x, rtol=1e-6)
+
+
+def test_csr_matmat_matches_dense():
+    rng = np.random.default_rng(1)
+    x = rand_sparse(rng, 11, 9)
+    w = rng.normal(0, 1, (9, 5)).astype(np.float32)
+    m = csr_from_dense(x)
+    np.testing.assert_allclose(np.asarray(csr_matmat(m, jnp.asarray(w))), x @ w, rtol=1e-4, atol=1e-5)
+
+
+def test_csr_row_norms():
+    rng = np.random.default_rng(2)
+    x = rand_sparse(rng, 10, 20)
+    m = csr_from_dense(x)
+    np.testing.assert_allclose(np.asarray(csr_row_norms(m)), (x * x).sum(1), rtol=1e-5)
+
+
+def test_csr_row_gather_dense():
+    rng = np.random.default_rng(3)
+    x = rand_sparse(rng, 10, 15)
+    m = csr_from_dense(x)
+    rows = jnp.asarray([0, 3, 7])
+    out = csr_row_gather_dense(m, rows, max_nnz_row=15)
+    np.testing.assert_allclose(np.asarray(out), x[[0, 3, 7]], rtol=1e-6)
+
+
+def test_ell_roundtrip_and_dot():
+    rng = np.random.default_rng(4)
+    x = rand_sparse(rng, 12, 18)
+    m = csr_from_dense(x)
+    e = ell_from_csr(m)
+    np.testing.assert_allclose(np.asarray(ell_to_dense(e)), x, rtol=1e-6)
+    c = rng.normal(0, 1, (6, 18)).astype(np.float32)
+    s = ell_dot_dense(e, jnp.asarray(c.T))
+    np.testing.assert_allclose(np.asarray(s), x @ c.T, rtol=1e-4, atol=1e-5)
+
+
+def test_tfidf_culling_keeps_top_ranked():
+    rng = np.random.default_rng(5)
+    x = np.abs(rand_sparse(rng, 40, 30))
+    m = csr_from_dense(x)
+    w = tfidf_weight(m)
+    ranks = term_ranks(w)
+    culled, keep = cull_terms(w, 10)
+    assert culled.n_cols == 10
+    worst_kept = ranks[keep].min()
+    dropped = np.setdiff1d(np.arange(30), keep)
+    assert (ranks[dropped] <= worst_kept + 1e-9).all()
+
+
+def test_unit_normalize_rows():
+    rng = np.random.default_rng(6)
+    x = np.abs(rand_sparse(rng, 15, 12)) + 0.0
+    m = csr_from_dense(x)
+    n = unit_normalize_rows(m)
+    norms = np.asarray(csr_row_norms(n))
+    nonzero = np.asarray(m.indptr[1:]) > np.asarray(m.indptr[:-1])
+    np.testing.assert_allclose(norms[nonzero], 1.0, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(2, 25), st.integers(0, 10_000))
+def test_csr_matmat_property(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_sparse(rng, n, d, density=0.3)
+    w = rng.normal(0, 1, (d, 3)).astype(np.float32)
+    m = csr_from_dense(x)
+    np.testing.assert_allclose(
+        np.asarray(csr_matmat(m, jnp.asarray(w))), x @ w, rtol=2e-4, atol=1e-4
+    )

@@ -1,0 +1,153 @@
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import adamw, adafactor, make_train_step
+from repro.train.loop import TrainState, init_state, train_loop
+from repro import ckpt as ckpt_lib
+
+
+def toy_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def toy_data(n=256, d=10, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(0, 1, (d, 1)).astype(np.float32)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(0, 1, (n, 1)).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (10, 1)) * 0.1, "b": jnp.zeros((1,))}
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizers_reduce_loss(opt_name):
+    opt = adamw(lr=3e-2, weight_decay=0.0) if opt_name == "adamw" else adafactor(lr=3e-1)
+    step = make_train_step(toy_loss, opt)
+    state = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    batch = toy_data()
+    first = last = None
+    for i in range(60):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < 0.15 * first, (first, last)
+
+
+def test_adafactor_factored_state_is_small():
+    opt = adafactor()
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((4, 4))}
+    st = opt.init(params)
+    assert set(st["big"].keys()) == {"vr", "vc"}
+    assert st["big"]["vr"].shape == (256,) and st["big"]["vc"].shape == (512,)
+    assert set(st["small"].keys()) == {"v"}
+
+
+def test_adafactor_state_axes_match_state():
+    opt = adafactor()
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((4, 4))}
+    axes = {"big": ("fsdp", "tensor"), "small": (None, None)}
+    st = opt.init(params)
+    sx = opt.state_logical_axes(axes, params)
+    assert jax.tree.structure(jax.tree.map(lambda _: 0, st)) == \
+           jax.tree.structure(jax.tree.map(lambda _: 0, sx, is_leaf=lambda x: isinstance(x, tuple)))
+    assert sx["big"]["vr"] == ("fsdp",) and sx["big"]["vc"] == ("tensor",)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    opt = adamw(lr=1e-2)
+    step1 = make_train_step(toy_loss, opt, n_microbatches=1)
+    step4 = make_train_step(toy_loss, opt, n_microbatches=4)
+    batch = toy_data()
+    s1 = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    s4 = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    s1, m1 = step1(s1, batch)
+    s4, m4 = step4(s4, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s4.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6)
+
+
+def test_grad_compression_still_learns():
+    opt = adamw(lr=3e-2, weight_decay=0.0)
+    step = make_train_step(toy_loss, opt, compress_grads=True)
+    state = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    batch = toy_data()
+    first = last = None
+    for _ in range(60):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < 0.3 * first
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    opt = adamw()
+    state = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    d = str(tmp_path / "ckpt")
+    ckpt_lib.save(d, state.as_dict(), 7)
+    assert ckpt_lib.latest_step(d) == 7
+    like = jax.tree.map(lambda x: x, state.as_dict())
+    restored = ckpt_lib.restore(d, like)
+    for a, b in zip(jax.tree.leaves(state.as_dict()), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    opt = adamw()
+    state = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    d = str(tmp_path / "ckpt")
+    for s in [1, 2, 3, 4, 5]:
+        ckpt_lib.save(d, state.as_dict(), s)
+    assert ckpt_lib.latest_step(d) == 5
+    kept = sorted(os.listdir(d))
+    assert len(kept) == 3  # gc keep=3
+
+
+def test_train_loop_resume_is_deterministic(tmp_path):
+    """Fault tolerance: crash after step 5, resume from checkpoint, final
+    params identical to an uninterrupted run."""
+    opt = adamw(lr=1e-2)
+    step = make_train_step(toy_loss, opt)
+    data = toy_data()
+    batch_fn = lambda s: data
+
+    # uninterrupted 10 steps
+    s_full = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    s_full, _ = train_loop(s_full, step, batch_fn, n_steps=10)
+
+    # interrupted at 5 + resume
+    d = str(tmp_path / "ck")
+    s_a = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    s_a, _ = train_loop(s_a, step, batch_fn, n_steps=5, ckpt_dir=d, ckpt_every=5)
+    like = init_state(jax.random.PRNGKey(0), toy_params, opt).as_dict()
+    restored = ckpt_lib.restore(d, like)
+    s_b = TrainState(restored["params"], restored["opt"], jnp.asarray(restored["step"]))
+    assert int(s_b.step) == 5
+    s_b, _ = train_loop(s_b, step, batch_fn, n_steps=10)
+    for a, b in zip(jax.tree.leaves(s_full.params), jax.tree.leaves(s_b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_elastic_restore_replaces_sharding(tmp_path):
+    """Elastic scaling: restore onto a (different) mesh via explicit shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    opt = adamw()
+    state = init_state(jax.random.PRNGKey(0), toy_params, opt)
+    d = str(tmp_path / "ck")
+    ckpt_lib.save(d, state.as_dict(), 1)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), state.as_dict()
+    )
+    restored = ckpt_lib.restore(d, state.as_dict(), shardings=shardings)
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding.mesh.shape == {"data": 1}
