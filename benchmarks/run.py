@@ -1,4 +1,5 @@
-"""Benchmark entry point: ``python -m benchmarks.run``.
+"""Benchmark entry point: ``python -m benchmarks.run`` (or
+``python benchmarks/run.py``).
 
 One section per paper table/figure + the system benches:
   paper_quality — Figures 1 & 2 (quality + runtime vs cluster count)
@@ -16,6 +17,12 @@ import os
 import sys
 import time
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:  # allow `python benchmarks/run.py` from anywhere
+    sys.path.insert(0, _ROOT)
+if os.path.join(_ROOT, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -23,7 +30,15 @@ def main() -> None:
     ap.add_argument("--culled", type=int, default=800)
     ap.add_argument("--orders", type=int, nargs="+", default=[16, 32])
     ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run: tiny corpora, one order, small scaling sweep "
+             "(CPU-friendly; Pallas kernels run via kernels/ref.py fallback / "
+             "interpret mode)",
+    )
     args = ap.parse_args()
+    if args.smoke:
+        args.docs, args.culled, args.orders = 400, 200, [8]
 
     t_all = time.time()
 
@@ -35,13 +50,15 @@ def main() -> None:
     if "sparse" not in args.skip:
         print("\n== sparse_dense (paper §1) ==", flush=True)
         from benchmarks import sparse_dense
-        for name, us, extra in sparse_dense.main():
+        sd_args = (400, 200) if args.smoke else ()
+        for name, us, extra in sparse_dense.main(*sd_args):
             print(f"{name},{us:.1f},{extra}", flush=True)
 
     if "scaling" not in args.skip:
         print("\n== scaling (complexity claim) ==", flush=True)
         from benchmarks import scaling
-        for name, us, extra in scaling.main(sizes=(1000, 2000, 4000)):
+        sizes = (300, 600) if args.smoke else (1000, 2000, 4000)
+        for name, us, extra in scaling.main(sizes=sizes):
             print(f"{name},{us:.1f},{extra}", flush=True)
 
     if "kernels" not in args.skip:

@@ -7,6 +7,10 @@
    (take+segment_sum CSR path) vs dense docs (matmul). The paper's point:
    near the root everything is dense, so the dense path wins on systolic/BLAS
    hardware while sparse wins on storage.
+3. backends end-to-end — the same prepared corpus through ``ktree.build``
+   under both vector backends (dense vs ELL sparse, medoid mode): build
+   time, assignment purity, and the corpus bytes each backend holds
+   resident. One entry point, two representations.
 """
 from __future__ import annotations
 
@@ -18,6 +22,44 @@ import jax.numpy as jnp
 
 from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
 from repro.sparse.csr import csr_matmat, csr_to_dense
+
+
+def backend_compare(n_docs: int = 1500, culled: int = 600, order: int = 16, seed: int = 0):
+    """Build the medoid K-tree over one TF-IDF corpus with both backends."""
+    from repro.core import ktree as kt
+    from repro.core.backend import make_backend
+    from repro.core.metrics import micro_purity
+
+    spec = scaled(INEX_LIKE, n_docs=n_docs, culled=culled)
+    m, labels = prepared_corpus(spec, seed=seed)
+    rows = []
+    for name, be in [
+        ("dense", make_backend(m, "dense")),
+        ("sparse", make_backend(m, "sparse")),
+    ]:
+        t0 = time.time()
+        tree = kt.build(be, order=order, medoid=True, key=jax.random.PRNGKey(seed))
+        jax.block_until_ready(tree.centers)
+        dt = time.time() - t0
+        kt.check_invariants(tree, n_docs=n_docs)
+        assign, nc = kt.extract_assignment(tree, n_docs)
+        p = float(micro_purity(
+            jnp.asarray(assign), jnp.asarray(labels), nc, spec.n_labels
+        ))
+        if name == "dense":
+            corpus_mb = be.x.size * be.x.dtype.itemsize / 1e6
+        else:
+            corpus_mb = (
+                be.values.size * 4 + be.cols.size * 4
+                + be.csr_data.size * 4 + be.csr_indices.size * 4
+            ) / 1e6
+        rows.append((
+            f"ktree_build_{name}_backend",
+            dt * 1e6,
+            f"docs={n_docs} order={order} clusters={nc} "
+            f"purity={p:.3f} corpus={corpus_mb:.1f}MB",
+        ))
+    return rows
 
 
 def main(n_docs: int = 4000, culled: int = 2000):
@@ -56,6 +98,11 @@ def main(n_docs: int = 4000, culled: int = 2000):
         for _ in range(5):
             jax.block_until_ready(f(*args))
         rows.append((name, (time.time() - t0) / 5 * 1e6, f"k={k}"))
+
+    # --- the two K-tree vector backends end-to-end (tentpole path)
+    rows.extend(backend_compare(
+        n_docs=min(n_docs, 1500), culled=min(culled, 600), order=16
+    ))
     return rows
 
 

@@ -9,6 +9,9 @@ CFG = {
     "orders": (20, 35, 50, 80, 120),   # order m sweep → leaf-cluster counts
     "sample_fraction": 0.1,            # paper §3 sampled variant
     "cluto_iters": 10,                 # CLUTO-style fixed-iteration baseline
+    # document representation fed to the K-tree (repro.core.backend): the
+    # paper's §4 experiments keep the culled matrix dense on this collection
+    "representation": "dense",
 }
 
 register(ArchSpec(

@@ -257,6 +257,8 @@ def step_fn(spec: ArchSpec, shape_name: str) -> Callable:
     sh = dict(spec.shapes[shape_name])
     kind = sh["kind"]
     if kind == "cluster":
+        if _paper_representation(spec) == "sparse_medoid":
+            return _cluster_step_sparse
         return _cluster_step
     M = _model_api(spec)
     cfg = cfg_for_shape(spec, shape_name)
@@ -305,16 +307,44 @@ def step_fn(spec: ArchSpec, shape_name: str) -> Callable:
     raise ValueError(kind)
 
 
+def _paper_representation(spec) -> str:
+    """Document representation for the K-tree families ("dense" — the seed
+    behaviour — or "sparse_medoid", paper §2's ELL layout). Configs carry it
+    in their cfg dict; absent means dense."""
+    cfg = spec.cfg
+    if isinstance(cfg, Mapping):
+        return cfg.get("representation", "dense")
+    return "dense"
+
+
 def _paper_inputs(spec, sh):
     """The paper's own workload on the production mesh: one distributed
-    k-means/K-tree assignment step over the (dense-culled) corpus matrix —
-    documents sharded over data axes, centres over model (§Perf iteration:
-    the replicated-centre baseline left the model axis idle; sharding the
-    centre set 16-ways shards both N×K×D matmuls)."""
+    k-means/K-tree assignment step over the culled corpus matrix — documents
+    sharded over data axes, centres over model (§Perf iteration: the
+    replicated-centre baseline left the model axis idle; sharding the centre
+    set 16-ways shards both N×K×D matmuls).
+
+    Representation (cfg["representation"]):
+    - dense: corpus stored bf16 on device (§Perf: casting f32→bf16 in-step
+      *added* a copy; storing bf16 halves the dominant X-read bytes; centres
+      and all accumulations stay f32);
+    - sparse_medoid: the corpus arrives in ELL layout (values/cols padded to
+      nnz_max) — HBM traffic ∝ sparse bytes, the paper's §1 point.
+    """
     n, d, k = sh["n_docs"], sh["n_terms"], sh["k"]
-    # corpus stored bf16 on device (§Perf: casting f32→bf16 in-step *added*
-    # a copy; storing bf16 halves the dominant X-read bytes; centres and all
-    # accumulations stay f32)
+    if _paper_representation(spec) == "sparse_medoid":
+        nnz = sh.get("nnz_max", 128)
+        specs = {
+            "x_vals": SDS((n, nnz), f32),
+            "x_cols": SDS((n, nnz), i32),
+            "centers": SDS((k, d), f32),
+        }
+        axes = {
+            "x_vals": ("batch", None),
+            "x_cols": ("batch", None),
+            "centers": ("centers_k", None),
+        }
+        return specs, axes
     specs = {"x": SDS((n, d), jnp.bfloat16), "centers": SDS((k, d), f32)}
     axes = {"x": ("batch", None), "centers": ("centers_k", None)}
     return specs, axes
@@ -347,6 +377,49 @@ def _cluster_step(_state, inputs):
     # min-distance (for SSE) needs the dropped ‖x‖² back
     x_sq = jnp.einsum("nd,nd->n", x.astype(jnp.float32), x.astype(jnp.float32))
     sse = (jnp.take_along_axis(dist, idx[:, None], 1)[:, 0] + x_sq).sum()
+    return new_c, sse
+
+
+def _cluster_step_sparse(_state, inputs):
+    """One Lloyd step over an ELL-laid-out corpus (sparse_medoid
+    representation). Row blocks are densified into a bounded scratch and hit
+    the MXU as plain matmuls — the ``ell_spmm`` kernel's densify-then-matmul
+    pattern (DESIGN.md §3.4) expressed in XLA so GSPMD can shard it; the HBM
+    resident corpus stays sparse."""
+    vals, colids, c = inputs["x_vals"], inputs["x_cols"], inputs["centers"]
+    n, nnz = vals.shape
+    k, d = c.shape
+    block = next((b for b in (4096, 2048, 1024, 512, 256, 128) if n % b == 0), n)
+    c_sq = jnp.einsum("kd,kd->k", c, c)
+    rows = jnp.arange(block, dtype=jnp.int32)[:, None]
+
+    def body(carry, xb):
+        sums, counts, sse = carry
+        vb, cb = xb                                          # [block, nnz]
+        xd = jnp.zeros((block, d), jnp.float32).at[
+            jnp.broadcast_to(rows, cb.shape), cb
+        ].add(vb)
+        cross = jax.lax.dot_general(
+            xd, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                    # [block, k]
+        dist = c_sq[None, :] - 2.0 * cross                   # ‖x‖² constant-dropped
+        idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+        onehot = jax.nn.one_hot(idx, k, dtype=jnp.float32)
+        sums = sums + jax.lax.dot_general(
+            onehot, xd, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        counts = counts + onehot.sum(axis=0)
+        x_sq = jnp.einsum("bn,bn->b", vb, vb)                # exact on ELL padding
+        sse = sse + (jnp.take_along_axis(dist, idx[:, None], 1)[:, 0] + x_sq).sum()
+        return (sums, counts, sse), None
+
+    init = (jnp.zeros((k, d), jnp.float32), jnp.zeros((k,), jnp.float32), jnp.float32(0.0))
+    xs = (
+        vals.reshape(n // block, block, nnz),
+        colids.reshape(n // block, block, nnz),
+    )
+    (sums, counts, sse), _ = jax.lax.scan(body, init, xs)
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1e-12), c)
     return new_c, sse
 
 

@@ -1,0 +1,240 @@
+"""Vector backends — how the K-tree touches document vectors (DESIGN.md §5).
+
+The tree itself is representation-agnostic: node centres are always dense
+rows of ``tree.centers`` (means in dense mode, document exemplars in medoid
+mode). What varies is the *corpus side* — how a batch of documents, addressed
+by row id, is scored against centres, norm'ed, and densified for leaf
+appends / node splits. That seam is a backend:
+
+- :class:`DenseBackend` — the seed behaviour: documents are rows of a dense
+  ``f32[N, d]`` matrix. Scoring is an MXU matmul; the flat-centre path goes
+  through the ``nn_assign`` Pallas kernel (interpret mode on CPU).
+- :class:`EllSparseBackend` — the paper's sparse extension (§2): documents
+  stay in ELL layout (values/cols padded to ``nnz_max``) with CSR alongside
+  for exact-length dense row gathers. Scoring against a flat centre set goes
+  through the ``ell_spmm`` Pallas kernel; scoring against per-query gathered
+  node centres uses an ``nnz``-sized column gather (compute ∝ nnz, not d).
+
+Both are registered dataclass pytrees, so they cross jit boundaries and the
+jitted tree ops (`route`, `_insert_wave`) specialise per backend type.
+
+Distances everywhere drop the ‖x‖² constant: ``‖c‖² − 2·x·c`` has the same
+argmin. ``row_sq`` supplies the constant back when a true distance is needed
+(leaf NN search).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import Csr, csr_from_dense, csr_row_gather_dense
+from repro.sparse.ell import Ell, ell_from_csr
+
+
+def _use_pallas() -> bool:
+    """Kernel dispatch: the Pallas kernels are compiled on TPU; elsewhere the
+    pure-jnp oracles in :mod:`repro.kernels.ref` serve as the fallback (the
+    kernels themselves stay testable off-TPU through interpret mode in
+    :mod:`repro.kernels.ops`)."""
+    return jax.default_backend() == "tpu"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseBackend:
+    """Documents are rows of a dense matrix — the seed K-tree's representation."""
+
+    x: jax.Array  # f[N, d]
+
+    @property
+    def n_docs(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def dtype(self):
+        return self.x.dtype
+
+    def take(self, rows: jax.Array) -> jax.Array:
+        """Dense vectors for a batch of row ids — f[B, d]."""
+        return self.x[rows]
+
+    def row_sq(self, rows: jax.Array) -> jax.Array:
+        xb = self.x[rows].astype(jnp.float32)
+        return jnp.einsum("bd,bd->b", xb, xb)
+
+    def cross_nodes(self, rows: jax.Array, centers: jax.Array) -> jax.Array:
+        """x_b · c_bm for per-query gathered node centres ``centers`` [B, m1, d]."""
+        return jnp.einsum("bd,bmd->bm", self.x[rows], centers)
+
+    def cross_flat(self, rows: jax.Array, centers: jax.Array) -> jax.Array:
+        """x_b · c_k against a flat centre set [K, d] → [B, K]."""
+        return self.x[rows] @ centers.T
+
+    def nn_flat(
+        self, rows: jax.Array, centers: jax.Array, valid: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(idx i32[B], sqdist f32[B]) vs a flat centre set — Pallas ``nn_assign``
+        kernel on TPU, ``ref.nn_assign_ref`` oracle elsewhere."""
+        if _use_pallas():
+            from repro.kernels.ops import nn_assign
+
+            return nn_assign(self.x[rows], centers, valid=valid)
+        from repro.kernels.ref import nn_assign_ref
+
+        return nn_assign_ref(self.x[rows], centers, valid=valid)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllSparseBackend:
+    """Documents stay sparse (paper §2): ELL for kernel scoring, CSR for exact
+    dense row gathers (leaf appends densify only the routed batch, never the
+    corpus)."""
+
+    values: jax.Array      # f[N, nnz_max] (0 on padding)
+    cols: jax.Array        # i32[N, nnz_max] (0 on padding)
+    sq: jax.Array          # f32[N] row squared norms
+    csr_data: jax.Array    # f[nnz]
+    csr_indices: jax.Array # i32[nnz]
+    csr_indptr: jax.Array  # i32[N+1]
+    n_cols: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_docs(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.n_cols
+
+    @property
+    def nnz_max(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def _csr(self) -> Csr:
+        return Csr(self.csr_data, self.csr_indices, self.csr_indptr, self.n_cols)
+
+    def take(self, rows: jax.Array) -> jax.Array:
+        """Densify a batch of rows — f[B, d]. O(B·nnz_max) scatter; this is the
+        only densification point in the sparse K-tree (wave-sized, not
+        corpus-sized)."""
+        return csr_row_gather_dense(self._csr(), rows, self.nnz_max)
+
+    def row_sq(self, rows: jax.Array) -> jax.Array:
+        return self.sq[rows]
+
+    def cross_nodes(self, rows: jax.Array, centers: jax.Array) -> jax.Array:
+        """Per-query gathered node centres [B, m1, d]: gather only the nnz
+        touched columns of each query's own centre block — compute is
+        B·m1·nnz, not B·m1·d."""
+        v = self.values[rows]                                  # [B, nnz]
+        c = self.cols[rows]                                    # [B, nnz]
+        gathered = jnp.take_along_axis(centers, c[:, None, :], axis=2)  # [B, m1, nnz]
+        return jnp.einsum("bn,bmn->bm", v, gathered)
+
+    def cross_flat(self, rows: jax.Array, centers: jax.Array) -> jax.Array:
+        """Flat centre set [K, d] → scores via the ``ell_spmm`` Pallas kernel
+        on TPU, the ``ref.ell_spmm_ref`` oracle elsewhere."""
+        if _use_pallas():
+            from repro.kernels.ops import ell_spmm
+
+            return ell_spmm(self.values[rows], self.cols[rows], centers)
+        from repro.kernels.ref import ell_spmm_ref
+
+        return ell_spmm_ref(self.values[rows], self.cols[rows], centers)
+
+    def nn_flat(
+        self, rows: jax.Array, centers: jax.Array, valid: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(idx, sqdist) vs a flat centre set: ‖x‖² − 2·S + ‖c‖² with S from
+        the ``ell_spmm`` scoring path (``medoid_assign_sparse`` on TPU)."""
+        if _use_pallas():
+            from repro.kernels.ops import medoid_assign_sparse
+
+            return medoid_assign_sparse(
+                self.values[rows], self.cols[rows], self.sq[rows], centers,
+                valid=valid,
+            )
+        s = self.cross_flat(rows, centers)
+        c32 = centers.astype(jnp.float32)
+        c_sq = jnp.einsum("kd,kd->k", c32, c32)
+        dist = jnp.maximum(self.sq[rows][:, None] - 2.0 * s + c_sq[None, :], 0.0)
+        dist = jnp.where(valid[None, :], dist, jnp.inf)
+        idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+        return idx, jnp.take_along_axis(dist, idx[:, None], axis=1)[:, 0]
+
+
+VectorBackend = Union[DenseBackend, EllSparseBackend]
+
+
+def sparse_backend_from_csr(m: Csr, nnz_max: int | None = None) -> EllSparseBackend:
+    """Build the ELL+CSR backend from a CSR corpus (host-side layout pass).
+
+    ``sq`` is computed from the ELL values so that when an explicit ``nnz_max``
+    truncates long rows, norms stay consistent with what ``cross_*``/``take``
+    actually see (``take`` also clips at ``nnz_max``)."""
+    e = ell_from_csr(m, nnz_max=nnz_max)
+    return EllSparseBackend(
+        values=e.values,
+        cols=e.cols,
+        sq=jnp.sum(e.values.astype(jnp.float32) ** 2, axis=1),
+        csr_data=m.data,
+        csr_indices=m.indices,
+        csr_indptr=m.indptr,
+        n_cols=m.n_cols,
+    )
+
+
+def make_backend(x, backend: str = "auto") -> VectorBackend:
+    """Normalise (corpus, backend-name) into a backend instance.
+
+    ``x``: dense array, :class:`Csr`, :class:`Ell`-producing Csr, or an
+    existing backend. ``backend``: "auto" (follow the input layout), "dense",
+    or "sparse".
+    """
+    if backend not in ("auto", "dense", "sparse"):
+        raise ValueError(f"unknown backend {backend!r}; use auto|dense|sparse")
+    if isinstance(x, (DenseBackend, EllSparseBackend)):
+        return x
+    if isinstance(x, Csr):
+        if backend == "dense":
+            from repro.sparse.csr import csr_to_dense
+
+            return DenseBackend(csr_to_dense(x))
+        return sparse_backend_from_csr(x)
+    if isinstance(x, Ell):
+        if backend == "dense":
+            from repro.sparse.ell import ell_to_dense
+
+            return DenseBackend(ell_to_dense(x))
+        # rebuild CSR host-side straight from the padded layout (O(nnz);
+        # never materialises the dense corpus): value-0 slots are padding
+        vals = np.asarray(x.values)
+        cols = np.asarray(x.cols)
+        mask = vals != 0
+        indptr = np.zeros(vals.shape[0] + 1, dtype=np.int32)
+        np.cumsum(mask.sum(axis=1), out=indptr[1:])
+        m = Csr(
+            data=jnp.asarray(vals[mask]),
+            indices=jnp.asarray(cols[mask].astype(np.int32)),
+            indptr=jnp.asarray(indptr),
+            n_cols=x.n_cols,
+        )
+        return sparse_backend_from_csr(m, nnz_max=x.nnz_max)
+    # array-like
+    xa = jnp.asarray(x)
+    if backend == "sparse":
+        return sparse_backend_from_csr(csr_from_dense(np.asarray(xa)))
+    return DenseBackend(xa)

@@ -18,9 +18,20 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:  # jax>=0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
+    _shard_map = jax.shard_map
 except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+
+def shard_map(f, **kwargs):
+    """Version shim: jax<0.6 spells ``check_vma`` as ``check_rep``."""
+    try:
+        return _shard_map(f, **kwargs)
+    except TypeError:
+        if "check_vma" in kwargs:
+            kwargs = dict(kwargs)
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, **kwargs)
 
 from repro.core.kmeans import assign as _assign
 

@@ -132,27 +132,20 @@ def kmeans_pp_init(key: jax.Array, x: jax.Array, k: int, w: Optional[jax.Array] 
     return centers
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "max_iters", "update_via", "use_kernel", "init")
-)
-def kmeans(
+def _kmeans_single(
     key: jax.Array,
     x: jax.Array,
     k: int,
-    w: Optional[jax.Array] = None,
-    max_iters: int = 300,
-    tol: float = 0.0,
-    init: str = "kmeanspp",
-    init_centers: Optional[jax.Array] = None,
-    update_via: str = "matmul",
-    use_kernel: bool = False,
+    w: jax.Array,
+    max_iters: int,
+    tol: float,
+    init: str,
+    init_centers: Optional[jax.Array],
+    update_via: str,
+    use_kernel: bool,
 ) -> KMeansResult:
-    """Weighted Lloyd **to convergence** (assignments fixed-point) — the k-means
-    the paper runs inside K-tree. ``tol=0`` means exact assignment convergence;
-    ``max_iters`` is a safety cap."""
+    """One Lloyd-to-convergence run from one seeding (see :func:`kmeans`)."""
     n = x.shape[0]
-    if w is None:
-        w = jnp.ones(n, x.dtype)
     if init_centers is not None:
         centers = init_centers
     elif init == "kmeanspp":
@@ -183,6 +176,45 @@ def kmeans(
     sums, counts = _centroid_update(x, idx, w, k, via=update_via)
     centers = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1e-12), centers)
     return KMeansResult(centers, idx, counts, jnp.sum(w * dist), iters)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "max_iters", "update_via", "use_kernel", "init", "n_init"),
+)
+def kmeans(
+    key: jax.Array,
+    x: jax.Array,
+    k: int,
+    w: Optional[jax.Array] = None,
+    max_iters: int = 300,
+    tol: float = 0.0,
+    init: str = "kmeanspp",
+    init_centers: Optional[jax.Array] = None,
+    update_via: str = "matmul",
+    use_kernel: bool = False,
+    n_init: int = 4,
+) -> KMeansResult:
+    """Weighted Lloyd **to convergence** (assignments fixed-point) — the k-means
+    the paper runs inside K-tree. ``tol=0`` means exact assignment convergence;
+    ``max_iters`` is a safety cap.
+
+    ``n_init`` independent seedings run and the lowest-SSE solution wins
+    (standard Lloyd restarts — k-means++ alone still lands in local optima on
+    a bad draw). Explicit ``init_centers`` forces a single run."""
+    if w is None:
+        w = jnp.ones(x.shape[0], x.dtype)
+    if init_centers is not None or n_init <= 1:
+        return _kmeans_single(
+            key, x, k, w, max_iters, tol, init, init_centers, update_via, use_kernel
+        )
+    runs = [
+        _kmeans_single(kk, x, k, w, max_iters, tol, init, None, update_via, use_kernel)
+        for kk in jax.random.split(key, n_init)
+    ]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *runs)
+    best = jnp.argmin(stacked.sse)
+    return jax.tree.map(lambda a: a[best], stacked)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "update_via", "use_kernel"))
@@ -236,8 +268,10 @@ def bisecting_kmeans(
     @functools.partial(jax.jit, static_argnames=())
     def split(key, assign_full, centers, target, n_current):
         mask = (assign_full == target).astype(x.dtype) * w
+        # n_init=1: this is the CLUTO-style baseline the paper benchmarks
+        # against — keep its per-split cost at one Lloyd run, not best-of-N
         res = kmeans(key, x, 2, w=mask, max_iters=inner_iters, init="kmeanspp",
-                     use_kernel=use_kernel)
+                     use_kernel=use_kernel, n_init=1)
         sel = jnp.logical_and(assign_full == target, res.assign == 1)
         assign_full = jnp.where(sel, n_current, assign_full)
         centers = centers.at[target].set(res.centers[0]).at[n_current].set(res.centers[1])

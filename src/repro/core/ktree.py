@@ -17,17 +17,31 @@ Semantics (paper §1):
 Medoid variant (paper §2): centres are document exemplars (nearest entry to
 each 2-means mean), entries are *not* weighted and means are *not* updated on
 insertion — ``medoid=True``.
+
+Vector backends (DESIGN.md §5): documents reach the tree through a
+:mod:`repro.core.backend` instance — dense rows (seed behaviour) or the
+paper's sparse representation (ELL + CSR; distances via the ``ell_spmm`` /
+``nn_assign`` Pallas kernels on TPU, ``kernels/ref.py`` oracles on CPU).
+Node centres are always dense; the sparse corpus is densified only one
+routed wave at a time (leaf appends and node splits), never wholesale.
+
+Control plane (DESIGN.md §6): ``route`` compilations are bucketed by level
+count (one compile per power-of-two descent depth, with inactive levels
+masked), and all overflowing nodes of one height are split in a single
+jitted ``split_nodes_batch`` call (vmapped 2-means) instead of one jit call
+per node.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import VectorBackend, make_backend
 from repro.core.kmeans import kmeans
 
 
@@ -90,59 +104,125 @@ def suggested_max_nodes(n_docs: int, order: int) -> int:
     return int(leaves * 1.8) + 32
 
 
+def _levels_bucket(levels: int) -> int:
+    """Round a descent depth up to a power of two — ``route``/``_insert_wave``
+    compile once per bucket (inactive levels are masked), so a growing tree
+    triggers O(log depth) compiles instead of one per depth."""
+    if levels <= 0:
+        return 0
+    b = 1
+    while b < levels:
+        b *= 2
+    return b
+
+
 # ---------------------------------------------------------------------------
 # routing (NN search root→leaf) — the hot path
 # ---------------------------------------------------------------------------
 
-def _node_nearest_slot(tree: KTree, node_ids: jax.Array, x: jax.Array) -> jax.Array:
-    """For each (node, query) pick the nearest *valid* entry slot. [B] → i32[B].
+def _node_nearest_slot(
+    tree: KTree, node_ids: jax.Array, backend: VectorBackend, rows: jax.Array
+) -> jax.Array:
+    """For each (node, query-row) pick the nearest *valid* entry slot → i32[B].
 
-    Distances drop the ‖x‖² constant (same argmin). The gathered einsum keeps
-    the MXU-shaped contraction; on flat big-K problems the Pallas kernel is
-    used instead (repro.kernels)."""
+    Distances drop the ‖x‖² constant (same argmin). Per-query gathered node
+    centres: the backend supplies the cross term — MXU einsum for dense rows,
+    an nnz-bounded column gather for sparse rows."""
     c = tree.centers[node_ids]                                   # [B, m1, d]
     c_sq = jnp.einsum("bmd,bmd->bm", c, c)
-    cross = jnp.einsum("bd,bmd->bm", x, c)
+    cross = backend.cross_nodes(rows, c)
     dist = c_sq - 2.0 * cross
     valid = jnp.arange(tree.slots)[None, :] < tree.n_entries[node_ids][:, None]
     dist = jnp.where(valid, dist, jnp.inf)
     return jnp.argmin(dist, axis=1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("levels",))
-def route(
-    tree: KTree, x: jax.Array, levels: int
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Descend ``levels`` internal levels from the root.
+def _root_nearest_slot(
+    tree: KTree, backend: VectorBackend, rows: jax.Array
+) -> jax.Array:
+    """Level-0 descent: every query is at the root, so its entries form one
+    flat centre set — the fused flat-NN path (``nn_assign`` / ``ell_spmm``
+    Pallas kernels on TPU, ref oracles elsewhere)."""
+    c = tree.centers[tree.root]                                  # [m1, d]
+    valid = jnp.arange(tree.slots) < tree.n_entries[tree.root]
+    idx, _ = backend.nn_flat(rows, c, valid)
+    return idx
 
-    Returns (leaf_ids i32[B], path_nodes i32[levels, B], path_slots i32[levels, B]).
-    ``levels = depth - 1`` reaches the leaf level. levels is static (the tree is
-    height-balanced, so every query descends the same number of steps).
-    """
-    b = x.shape[0]
+
+def _route_descend(
+    tree: KTree,
+    backend: VectorBackend,
+    rows: jax.Array,
+    levels: jax.Array,
+    max_levels: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Descend up to ``max_levels`` internal levels; levels ≥ ``levels`` are
+    masked no-ops (the node sticks once the true leaf level is reached).
+
+    Returns (leaf_ids i32[B], path_nodes i32[max_levels, B],
+    path_slots i32[max_levels, B]); path rows at l ≥ levels are stale and must
+    be masked by the caller."""
+    b = rows.shape[0]
     node = jnp.full((b,), 1, jnp.int32) * tree.root
     nodes_l, slots_l = [], []
-    for _ in range(levels):
-        slot = _node_nearest_slot(tree, node, x)
+    for l in range(max_levels):
+        if l == 0:
+            slot = _root_nearest_slot(tree, backend, rows)
+        else:
+            slot = _node_nearest_slot(tree, node, backend, rows)
         nodes_l.append(node)
         slots_l.append(slot)
-        node = tree.child[node, slot]
-    path_nodes = jnp.stack(nodes_l) if levels else jnp.zeros((0, b), jnp.int32)
-    path_slots = jnp.stack(slots_l) if levels else jnp.zeros((0, b), jnp.int32)
+        active = jnp.asarray(l, jnp.int32) < levels
+        node = jnp.where(active, tree.child[node, slot], node)
+    path_nodes = jnp.stack(nodes_l) if max_levels else jnp.zeros((0, b), jnp.int32)
+    path_slots = jnp.stack(slots_l) if max_levels else jnp.zeros((0, b), jnp.int32)
     return node, path_nodes, path_slots
 
 
+@functools.partial(jax.jit, static_argnames=("max_levels",))
+def _route_jit(tree, backend, rows, levels, max_levels):
+    return _route_descend(tree, backend, rows, levels, max_levels)
+
+
+def route(
+    tree: KTree, x, levels: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Descend ``levels`` internal levels from the root.
+
+    ``x``: dense array, Csr, or a backend instance. Returns (leaf_ids i32[B],
+    path_nodes i32[levels, B], path_slots i32[levels, B]). ``levels = depth-1``
+    reaches the leaf level (the tree is height-balanced, so every query
+    descends the same number of steps). Compilation is bucketed: one compile
+    per power-of-two level count, not one per depth."""
+    backend = make_backend(x)
+    rows = jnp.arange(backend.n_docs, dtype=jnp.int32)
+    leaf, pn, ps = _route_jit(
+        tree, backend, rows, jnp.int32(levels), max_levels=_levels_bucket(levels)
+    )
+    return leaf, pn[:levels], ps[:levels]
+
+
 @jax.jit
-def nearest_in_leaf(tree: KTree, leaf_ids: jax.Array, x: jax.Array):
-    """(doc_id i32[B], sqdist f32[B]) — exact NN among the reached leaf's vectors."""
+def _nearest_in_leaf_backend(
+    tree: KTree, leaf_ids: jax.Array, backend: VectorBackend, rows: jax.Array
+):
+    """(doc_id i32[B], sqdist f32[B]) — exact NN among the reached leaf's
+    vectors, for any backend."""
     c = tree.centers[leaf_ids]                                   # [B, m1, d]
-    diff_sq = jnp.einsum("bmd,bmd->bm", c, c) - 2.0 * jnp.einsum("bd,bmd->bm", x, c)
+    c_sq = jnp.einsum("bmd,bmd->bm", c, c)
+    diff_sq = c_sq - 2.0 * backend.cross_nodes(rows, c)
     valid = jnp.arange(tree.slots)[None, :] < tree.n_entries[leaf_ids][:, None]
     diff_sq = jnp.where(valid, diff_sq, jnp.inf)
     slot = jnp.argmin(diff_sq, axis=1).astype(jnp.int32)
-    x_sq = jnp.einsum("bd,bd->b", x, x)
-    best = jnp.take_along_axis(diff_sq, slot[:, None], 1)[:, 0] + x_sq
+    best = jnp.take_along_axis(diff_sq, slot[:, None], 1)[:, 0] + backend.row_sq(rows)
     return tree.child[leaf_ids, slot], jnp.maximum(best, 0.0)
+
+
+def nearest_in_leaf(tree: KTree, leaf_ids: jax.Array, x: jax.Array):
+    """(doc_id i32[B], sqdist f32[B]) — dense-query convenience wrapper."""
+    backend = make_backend(x)
+    rows = jnp.arange(backend.n_docs, dtype=jnp.int32)
+    return _nearest_in_leaf_backend(tree, leaf_ids, backend, rows)
 
 
 # ---------------------------------------------------------------------------
@@ -159,22 +239,29 @@ def _group_rank(leaf_ids: jax.Array) -> jax.Array:
     return jnp.zeros((b,), jnp.int32).at[perm].set(rank_sorted)
 
 
-@functools.partial(jax.jit, static_argnames=("levels",))
+@functools.partial(jax.jit, static_argnames=("max_levels",))
 def _insert_wave(
-    tree: KTree, x: jax.Array, doc_ids: jax.Array, valid: jax.Array, levels: int
+    tree: KTree,
+    backend: VectorBackend,
+    rows: jax.Array,
+    doc_ids: jax.Array,
+    valid: jax.Array,
+    levels: jax.Array,
+    max_levels: int,
 ) -> Tuple[KTree, jax.Array]:
     """One insertion wave at the current tree shape.
 
-    Routes every (valid) vector to its leaf, accepts per-leaf up to the m+1
-    overflow capacity, applies the paper's weighted-mean updates along the
-    accepted paths (dense mode), and appends accepted vectors to leaves.
-    Returns (tree, accepted bool[B]). Callers split overflowing nodes and loop
-    until nothing is pending (see :func:`build`).
-    """
-    b = x.shape[0]
+    Routes every (valid) backend row to its leaf, accepts per-leaf up to the
+    m+1 overflow capacity, applies the paper's weighted-mean updates along the
+    accepted paths (dense mode), and appends accepted vectors to leaves —
+    densifying *only this wave's rows* via the backend. Returns
+    (tree, accepted bool[B]). Callers split overflowing nodes and loop until
+    nothing is pending (see :func:`build`)."""
     m1 = tree.slots
     nmax = tree.max_nodes
-    leaf_ids, path_nodes, path_slots = route(tree, x, levels)
+    leaf_ids, path_nodes, path_slots = _route_descend(
+        tree, backend, rows, levels, max_levels
+    )
 
     # ---- acceptance: per leaf, up to (m+1 − n_entries) new vectors this wave.
     # Invalid (already-inserted / padding) vectors must not consume capacity:
@@ -183,13 +270,17 @@ def _insert_wave(
     free = (m1 - tree.n_entries[leaf_ids]).astype(jnp.int32)
     accepted = jnp.logical_and(valid, rank < free)
 
+    # the only densification point: one wave's worth of rows
+    x = backend.take(rows).astype(tree.centers.dtype)
+
     # ---- path mean updates for accepted vectors (dense K-tree only)
     if not tree.medoid:
-        wa = accepted.astype(x.dtype)
         centers, counts = tree.centers, tree.counts
-        for l in range(levels):
+        for l in range(max_levels):
+            upd = jnp.logical_and(accepted, jnp.asarray(l, jnp.int32) < levels)
+            wa = upd.astype(x.dtype)
             n_l, s_l = path_nodes[l], path_slots[l]
-            n_safe = jnp.where(accepted, n_l, nmax)  # OOB rows are dropped
+            n_safe = jnp.where(upd, n_l, nmax)  # OOB rows are dropped
             sum_x = jnp.zeros_like(centers).at[n_safe, s_l].add(x * wa[:, None])
             cnt = jnp.zeros_like(counts).at[n_safe, s_l].add(wa)
             new_counts = counts + cnt
@@ -218,23 +309,40 @@ def _insert_wave(
 # node split (k-means k=2) + promotion — the B+-tree machinery
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def split_node(tree: KTree, node_id: jax.Array, key: jax.Array) -> KTree:
-    """Split an overflowing node (n_entries == m+1) into two with 2-means and
-    promote the two means (or exemplars, medoid mode) to the parent. The caller
-    guarantees the parent has a free slot (split shallowest-first)."""
-    m1 = tree.slots
-    nmax = tree.max_nodes
-    node_id = jnp.asarray(node_id, jnp.int32)
-    e_centers = tree.centers[node_id]            # [m1, d]
-    e_counts = tree.counts[node_id]              # [m1]
-    e_child = tree.child[node_id]                # [m1]
-    n_e = tree.n_entries[node_id]
-    validm = jnp.arange(m1) < n_e
-    leaf = tree.is_leaf[node_id]
+class _SplitParts(NamedTuple):
+    """Pure per-node split computation (no tree writes) — shared by the scalar
+    root split and the batched same-height split."""
+    left_centers: jax.Array   # [m1, d]
+    left_counts: jax.Array    # [m1]
+    left_child: jax.Array     # [m1]
+    n_left: jax.Array         # i32[]
+    right_centers: jax.Array  # [m1, d]
+    right_counts: jax.Array   # [m1]
+    right_child: jax.Array    # [m1]
+    n_right: jax.Array        # i32[]
+    mean_l: jax.Array         # [d] promoted centre (mean or exemplar)
+    mean_r: jax.Array         # [d]
+    w_l: jax.Array            # f32[] promoted weight
+    w_r: jax.Array            # f32[]
 
-    w = jnp.where(validm, jnp.where(tree.medoid, 1.0, e_counts), 0.0)
-    res = kmeans(key, e_centers, 2, w=w, max_iters=50, init="kmeanspp")
+
+def _split_parts(
+    key: jax.Array,
+    e_centers: jax.Array,
+    e_counts: jax.Array,
+    e_child: jax.Array,
+    n_e: jax.Array,
+    medoid: bool,
+) -> _SplitParts:
+    """2-means an overflowing node's entries and partition them into the
+    (stay, move) halves plus the two promoted summaries."""
+    m1 = e_centers.shape[0]
+    validm = jnp.arange(m1) < n_e
+
+    w = jnp.where(validm, jnp.ones_like(e_counts) if medoid else e_counts, 0.0)
+    # n_init=2: one retry guards against a degenerate k-means++ draw without
+    # doubling the split cascade's cost the way the standalone default would
+    res = kmeans(key, e_centers, 2, w=w, max_iters=50, init="kmeanspp", n_init=2)
     grp = res.assign.astype(jnp.int32)
 
     # enforce two non-empty groups (degenerate data / identical vectors)
@@ -254,55 +362,85 @@ def split_node(tree: KTree, node_id: jax.Array, key: jax.Array) -> KTree:
     p_centers, p_counts, p_child = e_centers[perm], e_counts[perm], e_child[perm]
     pos = jnp.arange(m1, dtype=jnp.int32)
     left_sel = pos < n_left
-    right_sel = jnp.logical_and(pos >= n_left, pos < n_e)
-
-    new_id = tree.n_nodes
-    zero_c = jnp.zeros_like(e_centers)
+    right_sel = pos < n_right
 
     left_centers = jnp.where(left_sel[:, None], p_centers, 0.0)
     left_counts = jnp.where(left_sel, p_counts, 0.0)
     left_child = jnp.where(left_sel, p_child, -1)
     # right entries compacted to the front of the new node
     r_perm = jnp.where(pos + n_left < m1, pos + n_left, m1 - 1)
-    right_centers = jnp.where((pos < n_right)[:, None], p_centers[r_perm], 0.0)
-    right_counts = jnp.where(pos < n_right, p_counts[r_perm], 0.0)
-    right_child = jnp.where(pos < n_right, p_child[r_perm], -1)
-
-    centers = tree.centers.at[node_id].set(left_centers).at[new_id].set(right_centers)
-    counts = tree.counts.at[node_id].set(left_counts).at[new_id].set(right_counts)
-    child = tree.child.at[node_id].set(left_child).at[new_id].set(right_child)
-    n_entries = tree.n_entries.at[node_id].set(n_left).at[new_id].set(n_right)
-    is_leaf = tree.is_leaf.at[new_id].set(leaf)
-    height = tree.height.at[new_id].set(tree.height[node_id])
-
-    # children of an internal node follow their entries
-    int_node = jnp.logical_not(leaf)
-    lc_safe = jnp.where(jnp.logical_and(int_node, left_sel), left_child, nmax)
-    rc_safe = jnp.where(jnp.logical_and(int_node, pos < n_right), right_child, nmax)
-    parent = tree.parent.at[lc_safe].set(node_id).at[rc_safe].set(new_id)
-    parent_slot = tree.parent_slot.at[lc_safe].set(pos).at[rc_safe].set(pos)
+    right_centers = jnp.where(right_sel[:, None], p_centers[r_perm], 0.0)
+    right_counts = jnp.where(right_sel, p_counts[r_perm], 0.0)
+    right_child = jnp.where(right_sel, p_child[r_perm], -1)
 
     # subtree summaries to promote
     w_l = jnp.sum(left_counts)
     w_r = jnp.sum(right_counts)
     mean_l = jnp.sum(left_centers * left_counts[:, None], 0) / jnp.maximum(w_l, 1e-12)
     mean_r = jnp.sum(right_centers * right_counts[:, None], 0) / jnp.maximum(w_r, 1e-12)
-    if tree.medoid:
+    if medoid:
         # exemplar = nearest entry vector to each mean (k-medoids, paper §2)
         def exemplar(entry_c, sel, mean):
             d = jnp.sum((entry_c - mean) ** 2, axis=1)
             i = jnp.argmin(jnp.where(sel, d, jnp.inf))
             return entry_c[i]
         mean_l = exemplar(left_centers, left_sel, mean_l)
-        mean_r = exemplar(right_centers, pos < n_right, mean_r)
+        mean_r = exemplar(right_centers, right_sel, mean_r)
+
+    return _SplitParts(
+        left_centers, left_counts, left_child, n_left,
+        right_centers, right_counts, right_child, n_right,
+        mean_l, mean_r, w_l, w_r,
+    )
+
+
+@jax.jit
+def split_node(tree: KTree, node_id: jax.Array, key: jax.Array) -> KTree:
+    """Split one overflowing node (n_entries == m+1) into two with 2-means and
+    promote the two means (or exemplars, medoid mode) to the parent. The caller
+    guarantees the parent has a free slot. This scalar path also handles the
+    root split (the only split that grows the tree); same-height non-root
+    splits go through :func:`split_nodes_batch`."""
+    m1 = tree.slots
+    nmax = tree.max_nodes
+    node_id = jnp.asarray(node_id, jnp.int32)
+    parts = _split_parts(
+        key,
+        tree.centers[node_id],
+        tree.counts[node_id],
+        tree.child[node_id],
+        tree.n_entries[node_id],
+        tree.medoid,
+    )
+    leaf = tree.is_leaf[node_id]
+    new_id = tree.n_nodes
+    pos = jnp.arange(m1, dtype=jnp.int32)
+
+    centers = tree.centers.at[node_id].set(parts.left_centers).at[new_id].set(parts.right_centers)
+    counts = tree.counts.at[node_id].set(parts.left_counts).at[new_id].set(parts.right_counts)
+    child = tree.child.at[node_id].set(parts.left_child).at[new_id].set(parts.right_child)
+    n_entries = tree.n_entries.at[node_id].set(parts.n_left).at[new_id].set(parts.n_right)
+    is_leaf = tree.is_leaf.at[new_id].set(leaf)
+    height = tree.height.at[new_id].set(tree.height[node_id])
+
+    # children of an internal node follow their entries
+    int_node = jnp.logical_not(leaf)
+    lc_safe = jnp.where(
+        jnp.logical_and(int_node, pos < parts.n_left), parts.left_child, nmax
+    )
+    rc_safe = jnp.where(
+        jnp.logical_and(int_node, pos < parts.n_right), parts.right_child, nmax
+    )
+    parent = tree.parent.at[lc_safe].set(node_id).at[rc_safe].set(new_id)
+    parent_slot = tree.parent_slot.at[lc_safe].set(pos).at[rc_safe].set(pos)
 
     is_root = tree.parent[node_id] < 0
     p_id = jnp.where(is_root, tree.n_nodes + 1, tree.parent[node_id])
     p_slot_l = jnp.where(is_root, 0, tree.parent_slot[node_id])
     p_slot_r = jnp.where(is_root, 1, tree.n_entries[p_id])
 
-    centers = centers.at[p_id, p_slot_l].set(mean_l).at[p_id, p_slot_r].set(mean_r)
-    counts = counts.at[p_id, p_slot_l].set(w_l).at[p_id, p_slot_r].set(w_r)
+    centers = centers.at[p_id, p_slot_l].set(parts.mean_l).at[p_id, p_slot_r].set(parts.mean_r)
+    counts = counts.at[p_id, p_slot_l].set(parts.w_l).at[p_id, p_slot_r].set(parts.w_r)
     child = child.at[p_id, p_slot_l].set(node_id).at[p_id, p_slot_r].set(new_id)
     n_entries = n_entries.at[p_id].set(jnp.where(is_root, 2, n_entries[p_id] + 1))
     is_leaf = is_leaf.at[p_id].set(jnp.where(is_root, False, is_leaf[p_id]))
@@ -329,19 +467,130 @@ def split_node(tree: KTree, node_id: jax.Array, key: jax.Array) -> KTree:
     )
 
 
+@jax.jit
+def split_nodes_batch(
+    tree: KTree, node_ids: jax.Array, valid: jax.Array, keys: jax.Array
+) -> KTree:
+    """Split a batch of overflowing *same-height, non-root* nodes in one jitted
+    call: vmapped 2-means + one set of fused scatters.
+
+    ``node_ids`` i32[S] (padding rows have ``valid=False``), ``keys`` [S]-batch
+    of PRNG keys. Splits whose parent lacks free slots are deferred (their
+    ``valid`` drops) — the driver loop picks them up after the parent itself
+    splits. The caller must exclude the root (its split grows the tree; use
+    :func:`split_node`)."""
+    m1 = tree.slots
+    nmax = tree.max_nodes
+    node_ids = jnp.asarray(node_ids, jnp.int32)
+    read = jnp.where(valid, node_ids, 0)                 # safe gather index
+    p_id = tree.parent[read]                             # [S] ≥ 0 for valid rows
+    p_read = jnp.maximum(p_id, 0)
+
+    # per-parent capacity: rank splits sharing a parent; only the first
+    # (m+1 − n_entries[parent]) proceed this round
+    rank = _group_rank(jnp.where(valid, p_id, nmax))
+    free = (m1 - tree.n_entries[p_read]).astype(jnp.int32)
+    valid = jnp.logical_and(valid, rank < free)
+
+    parts = jax.vmap(
+        functools.partial(_split_parts, medoid=tree.medoid)
+    )(
+        keys,
+        tree.centers[read],
+        tree.counts[read],
+        tree.child[read],
+        tree.n_entries[read],
+    )
+
+    leaf = tree.is_leaf[read]                            # [S]
+    new_id = (tree.n_nodes + jnp.cumsum(valid) - valid).astype(jnp.int32)
+    node_safe = jnp.where(valid, node_ids, nmax)
+    new_safe = jnp.where(valid, new_id, nmax)
+
+    centers = tree.centers.at[node_safe].set(parts.left_centers).at[new_safe].set(parts.right_centers)
+    counts = tree.counts.at[node_safe].set(parts.left_counts).at[new_safe].set(parts.right_counts)
+    child = tree.child.at[node_safe].set(parts.left_child).at[new_safe].set(parts.right_child)
+    n_entries = tree.n_entries.at[node_safe].set(parts.n_left).at[new_safe].set(parts.n_right)
+    is_leaf = tree.is_leaf.at[new_safe].set(leaf)
+    height = tree.height.at[new_safe].set(tree.height[read])
+
+    # children of internal nodes follow their entries
+    pos = jnp.arange(m1, dtype=jnp.int32)[None, :]       # [1, m1]
+    ok = jnp.logical_and(valid, jnp.logical_not(leaf))[:, None]
+    lc_safe = jnp.where(jnp.logical_and(ok, pos < parts.n_left[:, None]), parts.left_child, nmax)
+    rc_safe = jnp.where(jnp.logical_and(ok, pos < parts.n_right[:, None]), parts.right_child, nmax)
+    node_b = jnp.broadcast_to(node_ids[:, None], lc_safe.shape)
+    new_b = jnp.broadcast_to(new_id[:, None], rc_safe.shape)
+    pos_b = jnp.broadcast_to(pos, lc_safe.shape)
+    parent = tree.parent.at[lc_safe].set(node_b).at[rc_safe].set(new_b)
+    parent_slot = tree.parent_slot.at[lc_safe].set(pos_b).at[rc_safe].set(pos_b)
+
+    # promotion: left keeps the node's (parent, slot); right appends after the
+    # parent's current entries, ordered by the per-parent rank
+    p_safe = jnp.where(valid, p_id, nmax)
+    p_slot_l = tree.parent_slot[read]
+    p_slot_r = tree.n_entries[p_read] + rank
+    centers = centers.at[p_safe, p_slot_l].set(parts.mean_l).at[p_safe, p_slot_r].set(parts.mean_r)
+    counts = counts.at[p_safe, p_slot_l].set(parts.w_l).at[p_safe, p_slot_r].set(parts.w_r)
+    child = child.at[p_safe, p_slot_l].set(node_ids).at[p_safe, p_slot_r].set(new_id)
+    n_entries = n_entries.at[p_safe].add(valid.astype(jnp.int32))
+    parent = parent.at[node_safe].set(p_id).at[new_safe].set(p_id)
+    parent_slot = parent_slot.at[node_safe].set(p_slot_l).at[new_safe].set(p_slot_r)
+
+    return dataclasses.replace(
+        tree,
+        centers=centers,
+        counts=counts,
+        child=child,
+        n_entries=n_entries,
+        is_leaf=is_leaf,
+        parent=parent,
+        parent_slot=parent_slot,
+        height=height,
+        n_nodes=tree.n_nodes + jnp.sum(valid).astype(jnp.int32),
+    )
+
+
+_SPLIT_BATCH_CAP = 64  # bounds vmapped-kmeans memory (S · m1 · d fp32)
+
+
+def _split_batch_size(n: int) -> int:
+    """Pad split batches to powers of two so ``split_nodes_batch`` compiles
+    once per bucket."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, _SPLIT_BATCH_CAP)
+
+
 def _split_all_overflowing(tree: KTree, key: jax.Array) -> Tuple[KTree, jax.Array]:
-    """Host control plane: split overflowing nodes, shallowest (max height)
-    first, until the m-order invariant holds everywhere."""
+    """Host control plane: split overflowing nodes shallowest (max height)
+    first — all overflowing nodes of one height in a single jitted call — until
+    the m-order invariant holds everywhere. Splitting top-down guarantees a
+    parent has spare capacity before its children promote into it (splits that
+    would overflow a full parent are deferred one round by the batch op)."""
     while True:
         n_nodes = int(tree.n_nodes)
         n_entries = np.asarray(tree.n_entries[:n_nodes])
         over = np.nonzero(n_entries > tree.order)[0]
         if over.size == 0:
             return tree, key
+        root = int(tree.root)
+        if n_entries[root] > tree.order:
+            # the root split grows the tree — scalar path
+            key, sub = jax.random.split(key)
+            tree = split_node(tree, jnp.int32(root), sub)
+            continue
         heights = np.asarray(tree.height[:n_nodes])[over]
-        nid = over[np.argmax(heights)]
+        batch = over[heights == heights.max()][:_SPLIT_BATCH_CAP]
+        size = _split_batch_size(batch.size)
+        ids = np.zeros(size, np.int32)
+        ids[: batch.size] = batch[:size]
+        valid = np.arange(size) < batch.size
         key, sub = jax.random.split(key)
-        tree = split_node(tree, jnp.int32(nid), sub)
+        tree = split_nodes_batch(
+            tree, jnp.asarray(ids), jnp.asarray(valid), jax.random.split(sub, size)
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -349,50 +598,71 @@ def _split_all_overflowing(tree: KTree, key: jax.Array) -> Tuple[KTree, jax.Arra
 # ---------------------------------------------------------------------------
 
 def build(
-    x: jax.Array,
+    x,
     order: int,
     key: Optional[jax.Array] = None,
     batch_size: int = 256,
     medoid: bool = False,
     max_nodes: Optional[int] = None,
+    backend: str = "auto",
 ) -> KTree:
     """Online batched construction (paper §1 semantics; ``batch_size=1`` is the
     exact sequential algorithm). Host loop: waves of route→accept→insert, then
-    the split cascade, until the batch is fully inserted."""
-    n, d = x.shape
+    the split cascade, until the batch is fully inserted.
+
+    ``x``: dense f[N, d] array, a :class:`repro.sparse.Csr` corpus, or a
+    prebuilt backend. ``backend``: "auto" follows the input layout; "sparse"
+    builds the paper's sparse-document tree (§2 — typically with
+    ``medoid=True``) even from a dense input; "dense" densifies a sparse
+    input. The pending set between waves is derived from the fetched
+    ``accepted`` mask — no extra device→host sync per wave."""
+    be = make_backend(x, backend)
+    n = be.n_docs
     if key is None:
         key = jax.random.PRNGKey(0)
     if max_nodes is None:
         max_nodes = suggested_max_nodes(n, order)
-    tree = ktree_init(max_nodes, order, d, medoid=medoid, dtype=x.dtype)
+    tree = ktree_init(max_nodes, order, be.dim, medoid=medoid, dtype=jnp.float32)
 
     for start in range(0, n, batch_size):
         idx = np.arange(start, min(start + batch_size, n))
         pad = batch_size - idx.size
-        doc_ids = jnp.asarray(np.concatenate([idx, np.full(pad, -1)]).astype(np.int32))
-        xb = jnp.concatenate([x[idx[0] : idx[-1] + 1], jnp.zeros((pad, d), x.dtype)])
-        valid = doc_ids >= 0
-        while bool(jnp.any(valid)):
+        ids_np = np.concatenate([idx, np.full(pad, -1)]).astype(np.int32)
+        rows = jnp.asarray(np.where(ids_np >= 0, ids_np, 0))
+        doc_ids = jnp.asarray(ids_np)
+        valid_np = ids_np >= 0
+        while valid_np.any():
             levels = int(tree.depth) - 1
-            tree, accepted = _insert_wave(tree, xb, doc_ids, valid, levels)
-            valid = jnp.logical_and(valid, jnp.logical_not(accepted))
+            tree, accepted = _insert_wave(
+                tree, be, rows, doc_ids, jnp.asarray(valid_np),
+                jnp.int32(levels), max_levels=_levels_bucket(levels),
+            )
+            valid_np &= ~np.asarray(accepted)
             tree, key = _split_all_overflowing(tree, key)
     return tree
 
 
 def insert(
-    tree: KTree, x: jax.Array, doc_ids, key: Optional[jax.Array] = None
+    tree: KTree, x, doc_ids, key: Optional[jax.Array] = None
 ) -> KTree:
     """Incremental insertion into an existing tree (paper §5: "clusters can be
-    produced incrementally ... easy updates as new documents arrive")."""
+    produced incrementally ... easy updates as new documents arrive").
+
+    ``x``: the new documents (dense array, Csr, or backend); ``doc_ids``: their
+    global ids (−1 = padding)."""
     if key is None:
         key = jax.random.PRNGKey(1)
+    be = make_backend(x)
     doc_ids = jnp.asarray(doc_ids, jnp.int32)
-    valid = doc_ids >= 0
-    while bool(jnp.any(valid)):
+    rows = jnp.arange(be.n_docs, dtype=jnp.int32)
+    valid_np = np.asarray(doc_ids) >= 0
+    while valid_np.any():
         levels = int(tree.depth) - 1
-        tree, accepted = _insert_wave(tree, x, doc_ids, valid, levels)
-        valid = jnp.logical_and(valid, jnp.logical_not(accepted))
+        tree, accepted = _insert_wave(
+            tree, be, rows, doc_ids, jnp.asarray(valid_np),
+            jnp.int32(levels), max_levels=_levels_bucket(levels),
+        )
+        valid_np &= ~np.asarray(accepted)
         tree, key = _split_all_overflowing(tree, key)
     return tree
 
@@ -421,26 +691,41 @@ def extract_assignment(tree: KTree, n_docs: int) -> Tuple[np.ndarray, int]:
     return out, len(leaves)
 
 
-def assign_via_tree(tree: KTree, x: jax.Array, chunk: int = 1024) -> np.ndarray:
+def assign_via_tree(tree: KTree, x, chunk: int = 1024) -> np.ndarray:
     """Cluster new vectors by NN search to the leaf level (sampled K-tree path,
-    paper §3: tree built on a sample classifies the full corpus)."""
+    paper §3: tree built on a sample classifies the full corpus). ``x`` may be
+    dense, a Csr corpus, or a backend."""
+    be = make_backend(x)
     leaves = leaf_nodes(tree)
     remap = np.full(tree.max_nodes, -1, np.int32)
     remap[leaves] = np.arange(leaves.size, dtype=np.int32)
     levels = int(tree.depth) - 1
+    max_levels = _levels_bucket(levels)
+    n = be.n_docs
     outs = []
-    for s in range(0, x.shape[0], chunk):
-        xb = x[s : s + chunk]
-        leaf_ids, _, _ = route(tree, xb, levels)
-        outs.append(remap[np.asarray(leaf_ids)])
+    for s in range(0, n, chunk):
+        rows_np = np.arange(s, min(s + chunk, n))
+        pad = chunk - rows_np.size
+        rows = jnp.asarray(
+            np.concatenate([rows_np, np.full(pad, rows_np[-1])]).astype(np.int32)
+        )
+        leaf_ids, _, _ = _route_jit(
+            tree, be, rows, jnp.int32(levels), max_levels=max_levels
+        )
+        outs.append(remap[np.asarray(leaf_ids)][: rows_np.size])
     return np.concatenate(outs)
 
 
-def nn_search(tree: KTree, q: jax.Array) -> Tuple[np.ndarray, np.ndarray]:
-    """Approximate NN doc ids for queries (the search-tree application)."""
+def nn_search(tree: KTree, q) -> Tuple[np.ndarray, np.ndarray]:
+    """Approximate NN doc ids for queries (the search-tree application).
+    ``q`` may be dense vectors, a Csr matrix, or a backend."""
+    be = make_backend(q)
     levels = int(tree.depth) - 1
-    leaf_ids, _, _ = route(tree, q, levels)
-    doc, dist = nearest_in_leaf(tree, leaf_ids, q)
+    rows = jnp.arange(be.n_docs, dtype=jnp.int32)
+    leaf_ids, _, _ = _route_jit(
+        tree, be, rows, jnp.int32(levels), max_levels=_levels_bucket(levels)
+    )
+    doc, dist = _nearest_in_leaf_backend(tree, leaf_ids, be, rows)
     return np.asarray(doc), np.asarray(dist)
 
 

@@ -55,3 +55,30 @@ def shard_bounds(n: int, shard_id: int, n_shards: int) -> tuple[int, int]:
     base, rem = divmod(n, n_shards)
     lo = shard_id * base + min(shard_id, rem)
     return lo, lo + base + (1 if shard_id < rem else 0)
+
+
+# ---------------------------------------------------------------------------
+# corpus → K-tree backend path (paper preprocessing, both representations)
+# ---------------------------------------------------------------------------
+
+def corpus_backend(spec, representation: str = "sparse_medoid", seed: int = 0):
+    """Full paper corpus path in one call: term counts → TF-IDF → cull top
+    terms → unit rows, then lay the culled matrix out for the requested
+    K-tree representation.
+
+    ``representation``:
+    - ``"dense"``         — densify (the seed/paper-§4 dense K-tree path);
+    - ``"sparse_medoid"`` — keep documents sparse in ELL(+CSR) layout (paper
+      §2's medoid K-tree; the ``ell_spmm`` scoring path).
+
+    Returns (backend, labels i32[n_docs]). The backend plugs straight into
+    ``repro.core.ktree.build(backend, ...)``.
+    """
+    from repro.core.backend import make_backend
+    from repro.data.synth_corpus import prepared_corpus
+
+    if representation not in ("dense", "sparse_medoid"):
+        raise ValueError(f"unknown representation {representation!r}")
+    culled, labels = prepared_corpus(spec, seed=seed)
+    kind = "dense" if representation == "dense" else "sparse"
+    return make_backend(culled, kind), labels

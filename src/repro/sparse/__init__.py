@@ -17,6 +17,7 @@ from repro.sparse.csr import (
     csr_row_norms,
     csr_row_gather_dense,
     csr_select_columns,
+    csr_slice_rows,
 )
 from repro.sparse.ell import Ell, ell_from_csr, ell_to_dense, ell_dot_dense
 from repro.sparse.tfidf import tfidf_weight, cull_terms
@@ -29,6 +30,7 @@ __all__ = [
     "csr_row_norms",
     "csr_row_gather_dense",
     "csr_select_columns",
+    "csr_slice_rows",
     "Ell",
     "ell_from_csr",
     "ell_to_dense",

@@ -115,6 +115,19 @@ def csr_row_gather_dense(m: Csr, rows: jax.Array, max_nnz_row: int) -> jax.Array
     return out.at[r, cols].add(vals)
 
 
+def csr_slice_rows(m: Csr, lo: int, hi: int) -> Csr:
+    """Host-side contiguous row slice ``m[lo:hi]`` (corpus sharding: each
+    shard's documents feed ``build``/``insert`` as their own matrix)."""
+    indptr = np.asarray(m.indptr)
+    start, stop = int(indptr[lo]), int(indptr[hi])
+    return Csr(
+        data=m.data[start:stop],
+        indices=m.indices[start:stop],
+        indptr=jnp.asarray(indptr[lo : hi + 1] - indptr[lo]),
+        n_cols=m.n_cols,
+    )
+
+
 def csr_select_columns(m: Csr, keep: np.ndarray) -> Csr:
     """Host-side column filter + re-index (term culling). ``keep``: sorted ids."""
     keep = np.asarray(keep)

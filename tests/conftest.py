@@ -1,6 +1,56 @@
 import os
 import sys
+import types
 
 # src layout import without install; tests run single-device (the 512-device
 # override belongs ONLY to the dry-run entry point)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# ---------------------------------------------------------------------------
+# hypothesis guard: the property tests import `hypothesis` at module scope, so
+# a missing install used to kill collection of six whole modules. When the
+# package is absent, install a shim that (a) lets the modules import, and
+# (b) turns every @given test into a clean pytest skip — the non-property
+# tests in those modules still run. `pip install -r requirements-dev.txt`
+# restores the real thing.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies(types.ModuleType):
+        def __getattr__(self, name):
+            def _strategy(*_args, **_kwargs):
+                return None
+
+            _strategy.__name__ = name
+            return _strategy
+
+    _st = _Strategies("hypothesis.strategies")
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.assume = lambda *_a, **_k: True
+    _hyp.note = lambda *_a, **_k: None
+    _hyp.example = _settings
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -44,8 +44,11 @@ _SCRIPT = textwrap.dedent(
 
     # 2. full distributed kmeans converges to good sse (fixed 40 iters vs the
     # single-device run-to-convergence reference: same ballpark, not equality)
+    # n_init=1 pins the reference to a single to-convergence run — the
+    # quantity this ratio was calibrated against (the multi-restart default
+    # would compare a one-shot pipeline to a best-of-N reference)
     centers, idx, sse = distributed_kmeans(mesh, x, 8, iters=40)
-    res = kmeans(jax.random.PRNGKey(0), x, 8)
+    res = kmeans(jax.random.PRNGKey(0), x, 8, n_init=1)
     out["dist_sse_ratio"] = float(sse) / float(res.sse)
 
     # 3. sharded-centers assignment exact
