@@ -1,0 +1,98 @@
+"""Query-engine bench: beam-search recall@k vs brute force, and QPS.
+
+Sweeps beam width × k for both vector backends (dense and ELL-sparse medoid)
+over one synthetic TF-IDF corpus (DESIGN.md §7): recall@k must grow
+(monotonically, within noise) with beam width, with beam=1 equal to the greedy
+single-path descent — the recall/latency dial the serving path exposes.
+
+Run:  PYTHONPATH=src python benchmarks/query_recall.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
+from repro.sparse.csr import csr_slice_rows, csr_to_dense
+
+
+def main(
+    n_docs: int = 3000,
+    culled: int = 800,
+    order: int = 16,
+    k: int = 10,
+    beams=(1, 2, 4, 8),
+    n_queries: int = 256,
+    seed: int = 0,
+):
+    from repro.core import ktree as kt
+    from repro.core.backend import make_backend
+    from repro.core.query import brute_force_topk, recall_at_k, topk_search
+
+    spec = scaled(INEX_LIKE, n_docs=n_docs, culled=culled)
+    m, _ = prepared_corpus(spec, seed=seed)
+    x_all = np.asarray(csr_to_dense(m))
+    nq = min(n_queries, n_docs)
+    true_k = brute_force_topk(x_all[:nq], x_all, k)
+
+    rows = []
+    for name, be, medoid in [
+        ("dense", make_backend(m, "dense"), False),
+        ("sparse", make_backend(m, "sparse"), True),
+    ]:
+        # queries travel in the backend's own layout, so the sparse rows
+        # benchmark the actual ELL query path (topk_flat via ell_spmm +
+        # nnz-bounded cross_nodes), not the dense einsum path
+        x_q = jnp.asarray(x_all[:nq]) if name == "dense" else csr_slice_rows(m, 0, nq)
+        tree = kt.build(be, order=order, medoid=medoid,
+                        key=jax.random.PRNGKey(seed))
+        greedy_doc, _ = kt.nn_search_greedy(tree, x_q)
+        recall_greedy = float(np.mean([
+            greedy_doc[i] in true_k[i] for i in range(nq)
+        ]))
+        rows.append((
+            f"query_greedy_{name}", 0.0,
+            f"docs={n_docs} order={order} greedy 1NN-in-top{k}={recall_greedy:.3f}",
+        ))
+        prev = -1.0
+        for beam in beams:
+            topk_search(tree, x_q, k=k, beam=beam)  # warm the jit cache
+            t0 = time.time()
+            docs, _ = topk_search(tree, x_q, k=k, beam=beam)
+            dt = time.time() - t0
+            rec = recall_at_k(docs, true_k)
+            trend = "+" if rec >= prev - 0.02 else "REGRESSION"
+            prev = rec
+            rows.append((
+                f"query_beam{beam}_{name}",
+                dt / nq * 1e6,
+                f"recall@{k}={rec:.3f} qps={nq/max(dt,1e-9):.0f} trend={trend}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=3000)
+    ap.add_argument("--culled", type=int, default=800)
+    ap.add_argument("--order", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beams", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run: tiny corpus, short beam sweep",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.docs, args.culled, args.order = 500, 250, 10
+        args.beams, args.queries = [1, 2, 4], 96
+    for name, us, extra in main(
+        n_docs=args.docs, culled=args.culled, order=args.order, k=args.k,
+        beams=tuple(args.beams), n_queries=args.queries,
+    ):
+        print(f"{name},{us:.1f},{extra}")

@@ -5,6 +5,7 @@ One section per paper table/figure + the system benches:
   paper_quality — Figures 1 & 2 (quality + runtime vs cluster count)
   sparse_dense  — §1 storage/speed observation
   scaling       — complexity claim (build time vs n)
+  query_recall  — beam-search recall@k vs brute force + QPS (DESIGN.md §7)
   kernel_bench  — kernel micro-benches + oracle agreement
   roofline      — §Roofline terms from the dry-run artifacts (if present)
 
@@ -59,6 +60,16 @@ def main() -> None:
         from benchmarks import scaling
         sizes = (300, 600) if args.smoke else (1000, 2000, 4000)
         for name, us, extra in scaling.main(sizes=sizes):
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "query" not in args.skip:
+        print("\n== query_recall (beam-search engine, DESIGN.md §7) ==", flush=True)
+        from benchmarks import query_recall
+        qr_kwargs = (
+            dict(n_docs=500, culled=250, order=10, beams=(1, 2, 4), n_queries=96)
+            if args.smoke else {}
+        )
+        for name, us, extra in query_recall.main(**qr_kwargs):
             print(f"{name},{us:.1f},{extra}", flush=True)
 
     if "kernels" not in args.skip:

@@ -2,11 +2,15 @@
 nearest-neighbour-search-tree application meeting the ``retrieval_cand``
 serving shape).
 
-Scores queries against item embeddings (a) brute force and (b) via the K-tree,
-reporting recall@10 and the search-cost ratio (distances computed).
+Scores queries against item embeddings (a) brute force and (b) through the
+top-k beam-search query engine (DESIGN.md §7), sweeping the beam width —
+the serving-side recall/latency dial — and reporting recall@10 plus the
+search-cost ratio (distances computed).
 
 Run:  PYTHONPATH=src python examples/retrieval_ann.py
+(size via env: RETRIEVAL_N_ITEMS / RETRIEVAL_N_QUERIES, for CI smoke)
 """
+import os
 import time
 
 import numpy as np
@@ -14,8 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ktree as kt
+from repro.core.query import recall_at_k, topk_search
 
-N_ITEMS, DIM, N_QUERIES = 50_000, 64, 32
+N_ITEMS = int(os.environ.get("RETRIEVAL_N_ITEMS", 50_000))
+N_QUERIES = int(os.environ.get("RETRIEVAL_N_QUERIES", 32))
+DIM = 64
 ORDER = 64
 
 rng = np.random.default_rng(0)
@@ -37,17 +44,16 @@ t_brute = time.time() - t0
 t0 = time.time()
 tree = kt.build(xi, order=ORDER, batch_size=1024)
 t_build = time.time() - t0
-
-t0 = time.time()
-doc, dist = kt.nn_search(tree, xq)
-t_query = time.time() - t0
-
-recall1 = float(np.mean([doc[i] in true_top[i, :10] for i in range(N_QUERIES)]))
-# search cost: brute = N_ITEMS distances/query; tree = m * depth + leaf size
 depth = int(tree.depth)
-tree_cost = ORDER * depth
 print(f"items={N_ITEMS} order={ORDER} depth={depth}")
-print(f"brute: {t_brute*1e3:.0f}ms; tree build {t_build:.1f}s, query {t_query*1e3:.0f}ms")
-print(f"ANN recall@10 (top-1 hit) = {recall1:.2f}")
-print(f"distances/query: brute={N_ITEMS}, ktree≈{tree_cost} "
-      f"({N_ITEMS/tree_cost:.0f}x fewer)")
+print(f"brute: {t_brute*1e3:.0f}ms over {N_ITEMS} candidates; build {t_build:.1f}s")
+
+# beam sweep: recall@10 vs search cost (distances/query ≈ beam · m · depth)
+for beam in (1, 2, 4):
+    t0 = time.time()
+    docs, _ = topk_search(tree, xq, k=10, beam=beam)
+    t_query = time.time() - t0
+    recall10 = recall_at_k(docs, true_top)
+    tree_cost = beam * ORDER * depth
+    print(f"beam={beam}: recall@10={recall10:.2f} query {t_query*1e3:.0f}ms "
+          f"distances/query≈{tree_cost} ({N_ITEMS/tree_cost:.0f}x fewer than brute)")

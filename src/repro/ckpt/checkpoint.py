@@ -88,17 +88,32 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None, shardings: Any
 
 # --- K-tree persistence (paper: "efficient disk based implementations") -----
 
-def save_ktree(path: str, tree) -> None:
+def save_ktree(path: str, tree) -> str:
+    """Atomic single-file K-tree snapshot (tmp + rename, like :func:`save`).
+
+    Extended dtypes (bfloat16 & friends) are not understood by the .npy
+    format's descr — ``np.save`` silently writes them as opaque void bytes
+    that ``jnp.asarray`` then rejects on load. Each field's true dtype is
+    recorded in the meta blob and non-native float dtypes are stored upcast
+    to float32 (lossless); :func:`restore_ktree` casts back."""
     import dataclasses
 
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    arrays = {
-        f.name: np.asarray(getattr(tree, f.name))
-        for f in dataclasses.fields(tree)
-        if not f.metadata.get("static")
-    }
-    meta = {"order": tree.order, "medoid": tree.medoid}
-    np.savez(path, **arrays, _meta=np.frombuffer(msgpack.packb(meta), dtype=np.uint8))
+    final = path if path.endswith(".npz") else path + ".npz"
+    os.makedirs(os.path.dirname(final) or ".", exist_ok=True)
+    arrays, dtypes = {}, {}
+    for f in dataclasses.fields(tree):
+        if f.metadata.get("static"):
+            continue
+        arr = np.asarray(jax.device_get(getattr(tree, f.name)))
+        dtypes[f.name] = str(arr.dtype)
+        if arr.dtype.kind == "V":  # extended float (e.g. bfloat16)
+            arr = arr.astype(np.float32)
+        arrays[f.name] = arr
+    meta = {"order": tree.order, "medoid": tree.medoid, "dtypes": dtypes}
+    tmp = final + ".tmp.npz"
+    np.savez(tmp, **arrays, _meta=np.frombuffer(msgpack.packb(meta), dtype=np.uint8))
+    os.replace(tmp, final)
+    return final
 
 
 def restore_ktree(path: str):
@@ -106,5 +121,10 @@ def restore_ktree(path: str):
 
     data = np.load(path if path.endswith(".npz") else path + ".npz")
     meta = msgpack.unpackb(data["_meta"].tobytes())
-    kwargs = {k: jnp.asarray(v) for k, v in data.items() if k != "_meta"}
-    return KTree(order=meta["order"], medoid=meta["medoid"], **kwargs)
+    dtypes = meta.get("dtypes", {})  # absent in pre-fix checkpoints
+    kwargs = {
+        k: jnp.asarray(v, dtype=dtypes.get(k))
+        for k, v in data.items()
+        if k != "_meta"
+    }
+    return KTree(order=int(meta["order"]), medoid=bool(meta["medoid"]), **kwargs)

@@ -1,7 +1,8 @@
 """The paper's primary contribution: K-tree (and its medoid/sampled variants),
-the k-means family it builds on, clustering metrics, and the distributed
-(shard_map) layer. See DESIGN.md §1–3."""
-from repro.core import kmeans, ktree, metrics, sampling
+the k-means family it builds on, the top-k beam-search query engine,
+clustering metrics, and the distributed (shard_map) layer. See DESIGN.md §1–3
+and §7."""
+from repro.core import kmeans, ktree, metrics, query, sampling
 from repro.core.kmeans import (
     kmeans as run_kmeans,
     kmeans_fixed_iters,
@@ -18,16 +19,19 @@ from repro.core.ktree import (
     extract_assignment,
     assign_via_tree,
     nn_search,
+    nn_search_greedy,
     check_invariants,
 )
 from repro.core.metrics import micro_purity, micro_entropy, nmi
+from repro.core.query import topk_search
 from repro.core.sampling import sampled_ktree_clustering
 
 __all__ = [
-    "kmeans", "ktree", "metrics", "sampling",
+    "kmeans", "ktree", "metrics", "query", "sampling",
     "run_kmeans", "kmeans_fixed_iters", "bisecting_kmeans", "minibatch_kmeans",
     "assign", "pairwise_sqdist",
     "KTree", "ktree_init", "build", "insert", "extract_assignment",
-    "assign_via_tree", "nn_search", "check_invariants",
+    "assign_via_tree", "nn_search", "nn_search_greedy", "check_invariants",
+    "topk_search",
     "micro_purity", "micro_entropy", "nmi", "sampled_ktree_clustering",
 ]

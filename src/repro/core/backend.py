@@ -91,6 +91,21 @@ class DenseBackend:
 
         return nn_assign_ref(self.x[rows], centers, valid=valid)
 
+    def topk_flat(
+        self, rows: jax.Array, centers: jax.Array, valid: jax.Array, k: int
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(idx i32[B,k], sqdist f32[B,k]) — k nearest flat centres per query,
+        ascending (DESIGN.md §7). Pallas ``nn_topk`` kernel on TPU, the
+        ``ref.nn_topk_ref`` oracle elsewhere; rows with fewer than k valid
+        centres pad with (−1, +inf)."""
+        if _use_pallas():
+            from repro.kernels.ops import nn_topk
+
+            return nn_topk(self.x[rows], centers, k, valid=valid)
+        from repro.kernels.ref import nn_topk_ref
+
+        return nn_topk_ref(self.x[rows], centers, k, valid=valid)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -168,12 +183,31 @@ class EllSparseBackend:
                 valid=valid,
             )
         s = self.cross_flat(rows, centers)
-        c32 = centers.astype(jnp.float32)
-        c_sq = jnp.einsum("kd,kd->k", c32, c32)
-        dist = jnp.maximum(self.sq[rows][:, None] - 2.0 * s + c_sq[None, :], 0.0)
-        dist = jnp.where(valid[None, :], dist, jnp.inf)
+        dist = self._flat_sqdist(rows, s, centers, valid)
         idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
         return idx, jnp.take_along_axis(dist, idx[:, None], axis=1)[:, 0]
+
+    def _flat_sqdist(
+        self, rows: jax.Array, scores: jax.Array, centers: jax.Array, valid: jax.Array
+    ) -> jax.Array:
+        """‖x‖² − 2·S + ‖c‖², clamped, masked → f32[B, K] (shared by the nn/topk
+        flat paths so their top-1 agree bit-for-bit)."""
+        c32 = centers.astype(jnp.float32)
+        c_sq = jnp.einsum("kd,kd->k", c32, c32)
+        dist = jnp.maximum(self.sq[rows][:, None] - 2.0 * scores + c_sq[None, :], 0.0)
+        return jnp.where(valid[None, :], dist, jnp.inf)
+
+    def topk_flat(
+        self, rows: jax.Array, centers: jax.Array, valid: jax.Array, k: int
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(idx i32[B,k], sqdist f32[B,k]) — k nearest flat centres per query,
+        ascending. The cross term reuses the ``ell_spmm`` scoring path (Pallas
+        on TPU via ``cross_flat``); the k-selection is a dense ``top_k`` over
+        the K scores, which are already materialised."""
+        from repro.kernels.ref import topk_from_dist
+
+        s = self.cross_flat(rows, centers)
+        return topk_from_dist(self._flat_sqdist(rows, s, centers, valid), k)
 
 
 VectorBackend = Union[DenseBackend, EllSparseBackend]

@@ -691,6 +691,22 @@ def extract_assignment(tree: KTree, n_docs: int) -> Tuple[np.ndarray, int]:
     return out, len(leaves)
 
 
+def chunked_query_rows(n: int, chunk: int):
+    """Yield (rows_np, rows_dev i32) slices covering [0, n) for batched query
+    consumers. Device rows are padded (repeating the last row) to the next
+    power-of-two bucket ≤ ``chunk`` — same bucketing trick as
+    :func:`_levels_bucket`, so jitted callers compile once per bucket instead
+    of once per remainder size, and short query sets don't pay full-chunk
+    scoring work."""
+    for s in range(0, n, chunk):
+        rows_np = np.arange(s, min(s + chunk, n))
+        pad = _levels_bucket(rows_np.size) - rows_np.size
+        rows = jnp.asarray(
+            np.concatenate([rows_np, np.full(pad, rows_np[-1])]).astype(np.int32)
+        )
+        yield rows_np, rows
+
+
 def assign_via_tree(tree: KTree, x, chunk: int = 1024) -> np.ndarray:
     """Cluster new vectors by NN search to the leaf level (sampled K-tree path,
     paper §3: tree built on a sample classifies the full corpus). ``x`` may be
@@ -701,14 +717,8 @@ def assign_via_tree(tree: KTree, x, chunk: int = 1024) -> np.ndarray:
     remap[leaves] = np.arange(leaves.size, dtype=np.int32)
     levels = int(tree.depth) - 1
     max_levels = _levels_bucket(levels)
-    n = be.n_docs
     outs = []
-    for s in range(0, n, chunk):
-        rows_np = np.arange(s, min(s + chunk, n))
-        pad = chunk - rows_np.size
-        rows = jnp.asarray(
-            np.concatenate([rows_np, np.full(pad, rows_np[-1])]).astype(np.int32)
-        )
+    for rows_np, rows in chunked_query_rows(be.n_docs, chunk):
         leaf_ids, _, _ = _route_jit(
             tree, be, rows, jnp.int32(levels), max_levels=max_levels
         )
@@ -718,7 +728,22 @@ def assign_via_tree(tree: KTree, x, chunk: int = 1024) -> np.ndarray:
 
 def nn_search(tree: KTree, q) -> Tuple[np.ndarray, np.ndarray]:
     """Approximate NN doc ids for queries (the search-tree application).
-    ``q`` may be dense vectors, a Csr matrix, or a backend."""
+    ``q`` may be dense vectors, a Csr matrix, or a backend.
+
+    Thin ``beam=1, k=1`` wrapper over the query engine
+    (:func:`repro.core.query.topk_search`) — use that directly for top-k
+    results or wider beams. The pre-engine greedy descent is kept as
+    :func:`nn_search_greedy` (golden baseline for the equivalence tests)."""
+    from repro.core.query import topk_search
+
+    doc, dist = topk_search(tree, q, k=1, beam=1)
+    return doc[:, 0], dist[:, 0]
+
+
+def nn_search_greedy(tree: KTree, q) -> Tuple[np.ndarray, np.ndarray]:
+    """The original greedy single-path descent (1-NN): route to one leaf, then
+    exact NN among that leaf's vectors. ``topk_search(beam=1, k=1)`` must
+    reproduce this exactly; tests pin the equivalence."""
     be = make_backend(q)
     levels = int(tree.depth) - 1
     rows = jnp.arange(be.n_docs, dtype=jnp.int32)
@@ -750,12 +775,15 @@ def level_centers(tree: KTree, level: int) -> np.ndarray:
 
 def check_invariants(tree: KTree, n_docs: Optional[int] = None, rtol: float = 1e-3):
     """Structural invariants (tests + post-build validation):
-    1. every allocated node obeys 1 ≤ n_entries ≤ m (root may have ≥ 2),
+    1. every allocated node obeys 1 ≤ n_entries ≤ m (an internal root ≥ 2),
     2. leaves all sit at height 0 and the tree is height-balanced,
-    3. parent/child pointers are mutually consistent,
+    3. parent/child pointers are mutually consistent (incl. root parent −1,
+       root height == depth−1, is_leaf ⇔ height 0, child ids allocated),
     4. internal entry count == total weight of the child's entries,
     5. dense mode: internal entry centre ≈ weighted mean of child entries,
-    6. every inserted doc appears in exactly one leaf slot.
+    6. every allocated node is reachable from the root and slots past
+       n_entries are cleared (child −1, zero weight),
+    7. every inserted doc appears in exactly one leaf slot, with in-range id.
     Raises AssertionError on violation."""
     n = int(tree.n_nodes)
     ne = np.asarray(tree.n_entries[:n])
@@ -768,6 +796,10 @@ def check_invariants(tree: KTree, n_docs: Optional[int] = None, rtol: float = 1e
     height = np.asarray(tree.height[:n])
     root = int(tree.root)
 
+    assert parent[root] == -1 and parent_slot[root] == -1, "root has a parent"
+    assert height[root] == int(tree.depth) - 1, (
+        f"root height {height[root]} != depth-1 ({int(tree.depth) - 1})"
+    )
     reachable = set()
     stack = [root]
     while stack:
@@ -775,11 +807,22 @@ def check_invariants(tree: KTree, n_docs: Optional[int] = None, rtol: float = 1e
         reachable.add(nd)
         if not is_leaf[nd]:
             stack.extend(int(c) for c in child[nd, : ne[nd]])
+    assert reachable == set(range(n)), (
+        f"allocated nodes unreachable from root: {sorted(set(range(n)) - reachable)}"
+    )
     for nd in sorted(reachable):
         assert 1 <= ne[nd] <= tree.order, f"node {nd}: {ne[nd]} entries (m={tree.order})"
+        assert is_leaf[nd] == (height[nd] == 0), f"is_leaf/height mismatch at {nd}"
+        assert (child[nd, ne[nd]:] == -1).all(), f"stale child ids past n_entries at {nd}"
+        assert (counts[nd, ne[nd]:] == 0).all(), f"stale weights past n_entries at {nd}"
+        if is_leaf[nd]:
+            assert (counts[nd, : ne[nd]] == 1).all(), f"leaf {nd} entry weight != 1"
         if not is_leaf[nd]:
+            if nd == root:
+                assert ne[nd] >= 2, f"internal root has {ne[nd]} < 2 entries"
             for s in range(ne[nd]):
                 c = int(child[nd, s])
+                assert 0 <= c < n, f"child id {c} of {nd} not allocated"
                 assert parent[c] == nd and parent_slot[c] == s, f"bad pointer {nd}->{c}"
                 assert height[c] == height[nd] - 1, "height mismatch"
                 if not tree.medoid:
@@ -798,5 +841,9 @@ def check_invariants(tree: KTree, n_docs: Optional[int] = None, rtol: float = 1e
         seen = np.zeros(n_docs, np.int32)
         for nd in reachable:
             if is_leaf[nd]:
-                np.add.at(seen, child[nd, : ne[nd]], 1)
+                docs = child[nd, : ne[nd]]
+                assert ((docs >= 0) & (docs < n_docs)).all(), (
+                    f"leaf {nd} holds out-of-range doc ids {docs}"
+                )
+                np.add.at(seen, docs, 1)
         assert (seen == 1).all(), f"doc conservation broken: {np.unique(seen)}"

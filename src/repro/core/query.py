@@ -1,0 +1,178 @@
+"""Batched top-k beam-search query engine over a built K-tree (DESIGN.md §7).
+
+The paper uses the K-tree as a nearest-neighbour search tree for retrieval;
+the greedy root→leaf descent (``nn_search``) visits exactly one leaf, so a
+query that routes into the "wrong" subtree near the root can never recover.
+Beam search keeps the best ``beam`` branches per level instead of the argmin:
+
+- **level 0** — the root's entries are one flat centre set, so the top-``beam``
+  entries come from the backend's fused flat path (``topk_flat``: the
+  ``nn_topk`` Pallas kernel for dense queries, the ``ell_spmm`` scoring path +
+  ``top_k`` for sparse queries).
+- **levels 1..depth−2** — each of the ``beam`` frontier nodes contributes its
+  ≤ m+1 entries; all ``beam·(m+1)`` candidates are scored in one
+  ``cross_nodes`` call (per-query gathered centres — MXU einsum for dense
+  rows, nnz-bounded column gather for sparse rows) and the best ``beam``
+  children become the next frontier.
+- **leaf level** — the union of the ``beam`` candidate leaves' documents
+  (their entries *are* the inserted vectors) is scored the same way and
+  reduced to ``(doc_ids, dists)[B, k]``, ascending, exact squared distances.
+
+Everything after backend construction is one jitted call per query chunk;
+descent depth is bucketed to powers of two exactly like ``route``
+(DESIGN.md §6), so a growing tree triggers O(log depth) compiles per
+(beam, k) setting, not one per depth.
+
+``beam=1, k=1`` reproduces the greedy ``nn_search`` bit-for-bit: every level
+scores the same tensors with the same expressions and ``top_k``'s
+tie-breaking (lowest index first) matches ``argmin``'s.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import VectorBackend, make_backend
+from repro.core.ktree import KTree, _levels_bucket, chunked_query_rows
+
+
+def _score_entries(
+    tree: KTree, backend: VectorBackend, rows: jax.Array,
+    frontier: jax.Array, active: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Score every entry of every frontier node against each query.
+
+    Returns (diff_sq f32[B, beam·m1] = ‖c‖² − 2·x·c with invalid slots and
+    inactive beams masked +inf, child i32[B, beam·m1]). The ‖x‖² constant is
+    deliberately dropped — it cannot change any per-query ordering and keeping
+    it out preserves bit-exact agreement with the greedy descent."""
+    b, beam = frontier.shape
+    m1 = tree.slots
+    c = tree.centers[frontier].reshape(b, beam * m1, tree.dim)
+    c_sq = jnp.einsum("bmd,bmd->bm", c, c)
+    diff_sq = c_sq - 2.0 * backend.cross_nodes(rows, c)
+    slot_ok = (
+        jnp.arange(m1)[None, None, :] < tree.n_entries[frontier][:, :, None]
+    )                                                        # [B, beam, m1]
+    ok = jnp.logical_and(slot_ok, active[:, :, None]).reshape(b, beam * m1)
+    diff_sq = jnp.where(ok, diff_sq, jnp.inf)
+    child = tree.child[frontier].reshape(b, beam * m1)
+    return diff_sq, child
+
+
+@functools.partial(jax.jit, static_argnames=("max_levels", "beam", "k"))
+def _beam_search(
+    tree: KTree,
+    backend: VectorBackend,
+    rows: jax.Array,
+    levels: jax.Array,
+    max_levels: int,
+    beam: int,
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """One jitted beam-search descent + leaf scoring for a chunk of queries.
+
+    Levels ≥ ``levels`` are masked no-ops (bucketed compiles, DESIGN.md §6).
+    Returns (doc_ids i32[B, k], sqdist f32[B, k]) ascending; queries reaching
+    fewer than k documents pad with (−1, +inf)."""
+    b = rows.shape[0]
+    frontier = jnp.full((b, beam), 1, jnp.int32) * tree.root
+    active = jnp.broadcast_to(jnp.arange(beam) == 0, (b, beam))
+
+    for l in range(max_levels):
+        if l == 0:
+            # root fast path: one flat centre set → fused top-beam
+            valid = jnp.arange(tree.slots) < tree.n_entries[tree.root]
+            idx, _ = backend.topk_flat(
+                rows, tree.centers[tree.root], valid, beam
+            )                                                # [B, beam]
+            new_active = idx >= 0
+            child_sel = tree.child[tree.root][jnp.maximum(idx, 0)]
+        else:
+            diff_sq, child = _score_entries(tree, backend, rows, frontier, active)
+            negd, pos = jax.lax.top_k(-diff_sq, beam)
+            new_active = jnp.isfinite(negd)
+            child_sel = jnp.take_along_axis(child, pos, axis=1)
+        child_sel = jnp.maximum(child_sel, 0)                # safe gather id
+        act_l = jnp.asarray(l, jnp.int32) < levels
+        frontier = jnp.where(act_l, child_sel, frontier)
+        active = jnp.where(act_l, new_active, active)
+
+    # leaf level: the frontier's entries are the candidate documents
+    diff_sq, child = _score_entries(tree, backend, rows, frontier, active)
+    negd, pos = jax.lax.top_k(-diff_sq, min(k, diff_sq.shape[1]))
+    if k > negd.shape[1]:                                    # k > beam·(m+1)
+        negd = jnp.pad(negd, ((0, 0), (0, k - negd.shape[1])),
+                       constant_values=-jnp.inf)
+        pos = jnp.pad(pos, ((0, 0), (0, k - pos.shape[1])))
+    found = jnp.isfinite(negd)
+    docs = jnp.where(found, jnp.take_along_axis(child, pos, axis=1), -1)
+    # the dropped ‖x‖² goes back in after selection (greedy does the same)
+    dist = jnp.where(
+        found, jnp.maximum(-negd + backend.row_sq(rows)[:, None], 0.0), jnp.inf
+    )
+    return docs.astype(jnp.int32), dist
+
+
+def topk_search(
+    tree: KTree, q, k: int = 10, beam: int = 4, chunk: int = 512
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k ANN document search with beam-width recall control.
+
+    ``q``: dense vectors, a Csr matrix, or a backend. Returns
+    (doc_ids i32[B, k], sqdist f32[B, k]) ascending per query; padded entries
+    are (−1, +inf). ``beam=1`` is the greedy single-path descent; wider beams
+    trade ~beam× more scored candidates for recall (benchmarks/query_recall.py
+    sweeps the trade-off). Queries are processed in chunks of ``chunk`` to
+    bound the [chunk, beam·(m+1), d] gathered-centre buffers."""
+    if k < 1 or beam < 1:
+        raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
+    be = make_backend(q)
+    if be.dim != tree.dim:
+        raise ValueError(
+            f"query dim {be.dim} != tree dim {tree.dim} "
+            "(was the index built over a different corpus?)"
+        )
+    levels = int(tree.depth) - 1
+    max_levels = _levels_bucket(levels)
+    n = be.n_docs
+    docs_out = np.full((n, k), -1, np.int32)
+    dist_out = np.full((n, k), np.inf, np.float32)
+    if n == 0:
+        return docs_out, dist_out
+    for rows_np, rows in chunked_query_rows(n, chunk):
+        docs, dist = _beam_search(
+            tree, be, rows, jnp.int32(levels),
+            max_levels=max_levels, beam=beam, k=k,
+        )
+        docs_out[rows_np] = np.asarray(docs)[: rows_np.size]
+        dist_out[rows_np] = np.asarray(dist)[: rows_np.size]
+    return docs_out, dist_out
+
+
+# ---------------------------------------------------------------------------
+# evaluation helpers (shared by benchmarks/query_recall.py, launch/serve.py
+# and the examples — one definition of ground truth and recall)
+# ---------------------------------------------------------------------------
+
+def brute_force_topk(x_q: np.ndarray, x_all: np.ndarray, k: int) -> np.ndarray:
+    """Exact k-NN doc ids [nq, k] by squared distance (ties: lower id)."""
+    d = (
+        (x_q ** 2).sum(1)[:, None]
+        - 2.0 * x_q @ x_all.T
+        + (x_all ** 2).sum(1)[None, :]
+    )
+    return np.argsort(d, axis=1, kind="stable")[:, :k]
+
+
+def recall_at_k(docs: np.ndarray, true_k: np.ndarray) -> float:
+    """Mean |retrieved ∩ true| / k; −1 padding in ``docs`` never matches."""
+    k = true_k.shape[1]
+    return float(np.mean([
+        len(set(docs[i].tolist()) & set(true_k[i].tolist())) / k
+        for i in range(true_k.shape[0])
+    ]))

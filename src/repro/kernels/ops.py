@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.nn_assign import nn_assign_pallas
+from repro.kernels.nn_topk import nn_topk_pallas
 from repro.kernels.ell_spmm import ell_spmm_pallas
 
 
@@ -43,6 +44,34 @@ def nn_assign(
     # padded centre rows must never win: +inf bias
     bias = jnp.pad(bias, (0, kp - k), constant_values=jnp.inf)
     dist, idx = nn_assign_pallas(xq, cq, bias, bm=bm, bk=bk, interpret=_interpret())
+    return idx[:b], dist[:b]
+
+
+def nn_topk(
+    x: jax.Array,
+    centers: jax.Array,
+    k: int,
+    valid: Optional[jax.Array] = None,
+    bm: int = 128,
+    bk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """(idx i32[B,k], sqdist f32[B,k]) — k nearest centres per query, ascending
+    (ties by lower centre id, matching ``lax.top_k``). Generalises
+    :func:`nn_assign`; padding follows the same scheme, and queries with fewer
+    than k reachable centres pad with (−1, +inf) — ``k`` may exceed K."""
+    b, d = x.shape
+    kc = centers.shape[0]
+    bp, kp, dp = _pad_to(b, bm), _pad_to(kc, bk), _pad_to(d, 128)
+    xq = jnp.pad(x, ((0, bp - b), (0, dp - d)))
+    cq = jnp.pad(centers, ((0, kp - kc), (0, dp - d)))
+    bias = jnp.zeros((kc,), jnp.float32)
+    if valid is not None:
+        bias = jnp.where(valid, 0.0, jnp.inf)
+    # padded centre rows must never win: +inf bias
+    bias = jnp.pad(bias, (0, kp - kc), constant_values=jnp.inf)
+    dist, idx = nn_topk_pallas(
+        xq, cq, bias, kq=k, bm=bm, bk=bk, interpret=_interpret()
+    )
     return idx[:b], dist[:b]
 
 

@@ -8,10 +8,12 @@ import jax
 import jax.numpy as jnp
 
 
-def nn_assign_ref(
+def _full_sqdist(
     x: jax.Array, centers: jax.Array, valid: Optional[jax.Array] = None
-) -> Tuple[jax.Array, jax.Array]:
-    """(argmin idx i32[B], sqdist f32[B]) against every centre row."""
+) -> jax.Array:
+    """Clamped squared distances f32[B, K] (masked centres → +inf) — the shared
+    distance matrix behind ``nn_assign_ref`` and ``nn_topk_ref`` (so their
+    argmin / top-1 agree bit-for-bit)."""
     x32 = x.astype(jnp.float32)
     c32 = centers.astype(jnp.float32)
     d = (
@@ -22,8 +24,37 @@ def nn_assign_ref(
     d = jnp.maximum(d, 0.0)
     if valid is not None:
         d = jnp.where(valid[None, :], d, jnp.inf)
+    return d
+
+
+def nn_assign_ref(
+    x: jax.Array, centers: jax.Array, valid: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """(argmin idx i32[B], sqdist f32[B]) against every centre row."""
+    d = _full_sqdist(x, centers, valid)
     idx = jnp.argmin(d, axis=1).astype(jnp.int32)
     return idx, jnp.take_along_axis(d, idx[:, None], axis=1)[:, 0]
+
+
+def topk_from_dist(dist: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """(idx i32[B,k], dist f32[B,k]) — k smallest per row, ascending, ties by
+    lower column (``lax.top_k`` stability). Rows with fewer than k finite
+    entries pad with (−1, +inf); ``k`` may exceed the column count."""
+    b, n = dist.shape
+    if k > n:
+        dist = jnp.pad(dist, ((0, 0), (0, k - n)), constant_values=jnp.inf)
+    neg, idx = jax.lax.top_k(-dist, k)
+    d = -neg
+    idx = jnp.where(jnp.isfinite(d), idx.astype(jnp.int32), -1)
+    return idx, d
+
+
+def nn_topk_ref(
+    x: jax.Array, centers: jax.Array, k: int, valid: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """(idx i32[B,k], sqdist f32[B,k]) — the k nearest centres per query,
+    ascending; oracle for the ``nn_topk`` Pallas kernel."""
+    return topk_from_dist(_full_sqdist(x, centers, valid), k)
 
 
 def ell_spmm_ref(values: jax.Array, cols: jax.Array, centers: jax.Array) -> jax.Array:

@@ -1,14 +1,20 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Demonstrates the two serving paths end-to-end at reduced scale:
+Demonstrates the serving paths end-to-end at reduced scale:
 - LM: prefill a batch of prompts, then batched greedy decode with the KV cache.
 - recsys retrieval: score a query against candidates brute-force and through
   the K-tree ANN index (the paper's NN-search-tree application) and report
   agreement + speed.
+- paper (``--arch ktree-inex`` / ``ktree-rcv1``): the K-tree itself as the
+  serving system — build **or restore** the index from a checkpoint
+  (``--ckpt``, via ``ckpt.save_ktree``/``restore_ktree``), then answer
+  batched top-k queries with the beam-search engine (DESIGN.md §7) and
+  report QPS + recall@k vs brute force.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -86,6 +92,67 @@ def serve_retrieval(args):
           f"ANN hit in brute top-10: {in_topk}")
 
 
+def serve_paper(args):
+    """K-tree retrieval serving: build-or-restore the index, answer batched
+    top-k beam-search queries, report recall@k vs brute force and QPS."""
+    from repro.core import ktree as kt
+    from repro.core.query import brute_force_topk, recall_at_k, topk_search
+    from repro.ckpt import restore_ktree, save_ktree
+    from repro.data.pipeline import corpus_backend
+    from repro.data.synth_corpus import scaled
+
+    spec = registry.get(args.arch)
+    rep = spec.cfg.get("representation", "dense")
+    corpus_spec = scaled(spec.cfg["corpus"], n_docs=args.n_docs, culled=args.culled)
+    backend, _ = corpus_backend(corpus_spec, representation=rep)
+    medoid = rep == "sparse_medoid"
+
+    ckpt_file = (
+        args.ckpt if not args.ckpt or args.ckpt.endswith(".npz")
+        else args.ckpt + ".npz"
+    )
+    if ckpt_file and os.path.exists(ckpt_file):
+        t0 = time.time()
+        tree = restore_ktree(args.ckpt)
+        # guard against serving an index built over a different corpus: doc
+        # ids in the tree must address rows of *this* corpus
+        max_doc = max(
+            (int(np.asarray(tree.child[leaf, : int(tree.n_entries[leaf])]).max())
+             for leaf in kt.leaf_nodes(tree)), default=-1,
+        )
+        if tree.dim != backend.dim or max_doc >= corpus_spec.n_docs:
+            raise SystemExit(
+                f"checkpoint {ckpt_file} does not match this corpus "
+                f"(tree dim={tree.dim} max doc id={max_doc} vs corpus "
+                f"dim={backend.dim} n_docs={corpus_spec.n_docs}); "
+                "rebuild with a fresh --ckpt path or matching --n-docs/--culled"
+            )
+        print(f"restored K-tree from {ckpt_file} in {time.time()-t0:.2f}s "
+              f"(depth={int(tree.depth)}, nodes={int(tree.n_nodes)})")
+    else:
+        t0 = time.time()
+        tree = kt.build(backend, order=args.order, medoid=medoid, batch_size=256)
+        print(f"built K-tree over {args.n_docs} docs in {time.time()-t0:.2f}s "
+              f"(depth={int(tree.depth)}, nodes={int(tree.n_nodes)})")
+        if args.ckpt:
+            print(f"saved index to {save_ktree(args.ckpt, tree)}")
+
+    # batched queries: corpus documents queried back against the index
+    nq = min(args.queries, corpus_spec.n_docs)
+    rows = jnp.arange(nq, dtype=jnp.int32)
+    x_q = np.asarray(backend.take(rows))
+    topk_search(tree, x_q, k=args.k, beam=args.beam)  # warm the jit cache
+    t0 = time.time()
+    docs, _ = topk_search(tree, x_q, k=args.k, beam=args.beam)
+    qps = nq / max(time.time() - t0, 1e-9)
+
+    # brute-force ground truth on the query slice (exact squared distances)
+    x_all = np.asarray(backend.take(jnp.arange(corpus_spec.n_docs, dtype=jnp.int32)))
+    recall = recall_at_k(docs, brute_force_topk(x_q, x_all, args.k))
+    print(f"{nq} queries: beam={args.beam} k={args.k} "
+          f"recall@{args.k}={recall:.3f} {qps:.0f} QPS ({rep} backend)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -93,14 +160,25 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
+    # --- paper (K-tree) serving mode ---
+    ap.add_argument("--ckpt", default="", help="K-tree index checkpoint path: "
+                    "restore if present, else build and save here")
+    ap.add_argument("--n-docs", type=int, default=2000)
+    ap.add_argument("--culled", type=int, default=800)
+    ap.add_argument("--order", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=256)
     args = ap.parse_args()
     spec = registry.get(args.arch)
     if spec.family == "lm":
         serve_lm(args)
     elif spec.family == "recsys":
         serve_retrieval(args)
+    elif spec.family == "paper":
+        serve_paper(args)
     else:
-        raise SystemExit("serving demo supports lm + recsys archs")
+        raise SystemExit("serving demo supports lm + recsys + paper archs")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,91 @@
+"""Property-based structural-invariant hardening (hypothesis): build +
+incremental insert under random orders / batch sizes / insertion splits, for
+both vector backends. ``check_invariants`` asserts the full battery —
+entry-count bounds, height balance, parent/child/slot agreement, subtree
+weight & mean consistency, allocated-node reachability, cleared stale slots,
+and exactly-once doc conservation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ktree as kt
+from repro.sparse.csr import csr_from_dense, csr_slice_rows
+
+
+def _random_docs(rng, n, d, sparse):
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    if sparse:
+        x = (x * (rng.random((n, d)) < 0.4)).astype(np.float32)
+        # no all-zero rows: keep one term per doc so unit norms are defined
+        x[np.arange(n), rng.integers(0, d, n)] += 1.0
+    return x
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(30, 140),    # corpus size
+    st.integers(3, 12),      # order m
+    st.sampled_from([1, 7, 16, 64]),   # build batch size
+    st.booleans(),           # sparse backend?
+    st.integers(0, 9999),
+)
+def test_property_build_invariants(n, order, batch_size, sparse, seed):
+    rng = np.random.default_rng(seed)
+    x = _random_docs(rng, n, 10, sparse)
+    data = csr_from_dense(x) if sparse else jnp.asarray(x)
+    tree = kt.build(
+        data, order=order, batch_size=batch_size, medoid=sparse,
+        key=jax.random.PRNGKey(seed),
+    )
+    kt.check_invariants(tree, n_docs=n)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(40, 120),    # total corpus
+    st.integers(4, 10),      # order
+    st.integers(1, 3),       # number of incremental insert waves
+    st.booleans(),           # sparse backend?
+    st.integers(0, 9999),
+)
+def test_property_insert_invariants(n, order, waves, sparse, seed):
+    """Random split into build-prefix + insert waves of random sizes: the
+    invariants must hold after every wave, and doc conservation over the
+    union at the end."""
+    rng = np.random.default_rng(seed)
+    x = _random_docs(rng, n, 8, sparse)
+    cuts = np.sort(rng.choice(np.arange(8, n - 1), size=waves, replace=False))
+    bounds = [0, *cuts.tolist(), n]
+    data = csr_from_dense(x) if sparse else jnp.asarray(x)
+
+    def rows(lo, hi):
+        if sparse:
+            return csr_slice_rows(data, lo, hi)
+        return data[lo:hi]
+
+    tree = kt.build(
+        rows(0, bounds[1]), order=order, batch_size=16, medoid=sparse,
+        key=jax.random.PRNGKey(seed),
+        max_nodes=kt.suggested_max_nodes(n, order),
+    )
+    kt.check_invariants(tree, n_docs=bounds[1])
+    for lo, hi in zip(bounds[1:], bounds[2:]):
+        tree = kt.insert(tree, rows(lo, hi), np.arange(lo, hi),
+                         key=jax.random.PRNGKey(seed + hi))
+        kt.check_invariants(tree, n_docs=hi)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(3, 8), st.integers(0, 9999))
+def test_property_insertion_order_independence_of_legality(order, seed):
+    """Any permutation of the same corpus builds a legal tree holding the
+    same document set (the tree itself is order-dependent; legality is not)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (60, 6)).astype(np.float32)
+    perm = rng.permutation(60)
+    tree = kt.build(jnp.asarray(x[perm]), order=order, batch_size=16,
+                    key=jax.random.PRNGKey(seed))
+    kt.check_invariants(tree, n_docs=60)
+    assign, nc = kt.extract_assignment(tree, 60)
+    assert (assign >= 0).all() and nc >= 1

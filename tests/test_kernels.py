@@ -102,6 +102,131 @@ def test_nn_assign_property(b, k, d, seed):
     assert (np.asarray(idx) == np.asarray(ridx)).all()
 
 
+# ---------------------------------------------------------------------------
+# nn_topk — masked top-k accumulator (query engine, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+TOPK_SHAPES = [
+    (1, 1, 1, 1), (7, 5, 3, 3), (128, 128, 128, 8), (130, 257, 64, 10),
+    (33, 129, 200, 17), (64, 300, 96, 32),
+]
+
+
+@pytest.mark.parametrize("b,k,d,kq", TOPK_SHAPES)
+def test_nn_topk_sweep(b, k, d, kq):
+    """Kernel (interpret mode) vs oracle on non-multiple-of-tile shapes:
+    distances must match at every rank, and each returned id must be
+    consistent with its rank's distance (robust to argmin boundary ulps)."""
+    rng = np.random.default_rng(b * 1000 + k + d + kq)
+    x = jnp.asarray(rng.normal(0, 1, (b, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (k, d)).astype(np.float32))
+    idx, dist = ops.nn_topk(x, c, kq)
+    ridx, rdist = ref.nn_topk_ref(x, c, kq)
+    np.testing.assert_allclose(
+        np.asarray(dist), np.asarray(rdist), rtol=3e-5, atol=3e-5
+    )
+    # verify ids against the true distance matrix at the claimed ranks
+    d_true = np.asarray(ref._full_sqdist(x, c))
+    ii = np.asarray(idx)
+    got = np.where(ii >= 0, d_true[np.arange(b)[:, None], np.maximum(ii, 0)], np.inf)
+    np.testing.assert_allclose(
+        got, np.asarray(rdist), rtol=3e-5, atol=3e-5
+    )
+    assert (np.sort(np.asarray(dist), axis=1) == np.asarray(dist)).all()
+
+
+def test_nn_topk_k_exceeds_centres():
+    """k > centre count (k > docs-in-leaf in the query engine): the tail pads
+    with (−1, +inf) in both kernel and oracle."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (9, 16)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (5, 16)).astype(np.float32))
+    idx, dist = ops.nn_topk(x, c, 12)
+    ridx, rdist = ref.nn_topk_ref(x, c, 12)
+    assert (np.asarray(idx)[:, 5:] == -1).all()
+    assert np.isinf(np.asarray(dist)[:, 5:]).all()
+    assert (np.asarray(idx)[:, :5] == np.asarray(ridx)[:, :5]).all()
+    np.testing.assert_allclose(
+        np.asarray(dist)[:, :5], np.asarray(rdist)[:, :5], rtol=3e-5, atol=3e-5
+    )
+
+
+def test_nn_topk_all_masked():
+    """Every centre masked out → all results are (−1, +inf)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (17, 8)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (140, 8)).astype(np.float32))
+    valid = jnp.zeros((140,), bool)
+    idx, dist = ops.nn_topk(x, c, 4, valid=valid)
+    ridx, rdist = ref.nn_topk_ref(x, c, 4, valid=valid)
+    assert (np.asarray(idx) == -1).all() and (np.asarray(ridx) == -1).all()
+    assert np.isinf(np.asarray(dist)).all() and np.isinf(np.asarray(rdist)).all()
+
+
+def test_nn_topk_partial_mask_agrees():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (40, 32)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (260, 32)).astype(np.float32))
+    valid = jnp.asarray(rng.random(260) > 0.5)
+    idx, dist = ops.nn_topk(x, c, 9, valid=valid)
+    ridx, rdist = ref.nn_topk_ref(x, c, 9, valid=valid)
+    assert (np.asarray(idx) == np.asarray(ridx)).all()
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist), rtol=3e-5, atol=3e-5)
+    assert np.asarray(valid)[np.asarray(idx)].all()
+
+
+def test_nn_topk_ties_lowest_index_first():
+    """Exact-arithmetic ties (duplicate centres) resolve to ascending centre
+    id — ``lax.top_k`` stability, which the online merge must reproduce even
+    across tile boundaries."""
+    x = jnp.zeros((3, 8), jnp.float32)
+    c = jnp.zeros((260, 8), jnp.float32)  # 260 > bk: ties span two tiles
+    idx, dist = ops.nn_topk(x, c, 6)
+    ridx, rdist = ref.nn_topk_ref(x, c, 6)
+    expect = np.broadcast_to(np.arange(6, dtype=np.int32), (3, 6))
+    np.testing.assert_array_equal(np.asarray(idx), expect)
+    np.testing.assert_array_equal(np.asarray(ridx), expect)
+    assert (np.asarray(dist) == 0).all()
+    # two-level ties: duplicates at integer distances across tiles
+    base = np.zeros((300, 4), np.float32)
+    base[150:, 0] = 1.0     # second tile rows at distance 1
+    base[:150, 0] = 2.0     # first tile rows at distance 4
+    base[7, 0] = 1.0        # one first-tile row joins the distance-1 group
+    xq = jnp.zeros((2, 4), jnp.float32)
+    cq = jnp.asarray(base)
+    idx, dist = ops.nn_topk(xq, cq, 4)
+    ridx, _ = ref.nn_topk_ref(xq, cq, 4)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    assert np.asarray(idx)[0, 0] == 7  # lowest id of the nearest tie group
+
+
+def test_nn_topk_top1_matches_nn_assign():
+    """The kernel family is internally consistent: top-1 of nn_topk equals
+    nn_assign on the same inputs (both stable-tie argmin semantics)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (70, 48)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (210, 48)).astype(np.float32))
+    i1, d1 = ops.nn_assign(x, c)
+    it, dt = ops.nn_topk(x, c, 3)
+    assert (np.asarray(i1) == np.asarray(it)[:, 0]).all()
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(dt)[:, 0], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 150), st.integers(1, 64),
+       st.integers(1, 20), st.integers(0, 9999))
+def test_nn_topk_property(b, k, d, kq, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (b, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(0, 1, (k, d)).astype(np.float32))
+    idx, dist = ops.nn_topk(x, c, kq)
+    ridx, rdist = ref.nn_topk_ref(x, c, kq)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist),
+                               rtol=3e-5, atol=3e-5)
+    # padding iff rank beyond the centre count
+    assert ((np.asarray(idx) == -1) == ~np.isfinite(np.asarray(dist))).all()
+
+
 def test_kernel_flag_in_kmeans():
     """assign(use_kernel=True) plugs into the clustering stack."""
     from repro.core.kmeans import assign as km_assign
