@@ -6,6 +6,7 @@ One section per paper table/figure + the system benches:
   sparse_dense  — §1 storage/speed observation
   scaling       — complexity claim (build time vs n)
   query_recall  — beam-search recall@k vs brute force + QPS (DESIGN.md §7)
+  query_throughput — serving QPS/latency: chunk × pipeline × shards + cache
   kernel_bench  — kernel micro-benches + oracle agreement
   roofline      — §Roofline terms from the dry-run artifacts (if present)
 
@@ -70,6 +71,17 @@ def main() -> None:
             if args.smoke else {}
         )
         for name, us, extra in query_recall.main(**qr_kwargs):
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "throughput" not in args.skip:
+        print("\n== query_throughput (serving plane, DESIGN.md §8) ==", flush=True)
+        from benchmarks import query_throughput
+        qt_kwargs = (
+            dict(n_docs=600, culled=250, order=10, chunks=(64, 128),
+                 n_queries=512, repeats=3)
+            if args.smoke else {}
+        )
+        for name, us, extra in query_throughput.main(**qt_kwargs):
             print(f"{name},{us:.1f},{extra}", flush=True)
 
     if "kernels" not in args.skip:

@@ -106,6 +106,13 @@ class DenseBackend:
 
         return nn_topk_ref(self.x[rows], centers, k, valid=valid)
 
+    def shard(self, mesh, axes=None) -> "DenseDocShards":
+        """Row-shard this corpus over the mesh's data axes (DESIGN.md §8)."""
+        from repro.core.distributed import shard_rows
+
+        (x,), n_shards, _ = shard_rows(mesh, [self.x], axes)
+        return DenseDocShards(x=x, n_docs=self.n_docs, n_shards=n_shards)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -209,8 +216,105 @@ class EllSparseBackend:
         s = self.cross_flat(rows, centers)
         return topk_from_dist(self._flat_sqdist(rows, s, centers, valid), k)
 
+    def shard(self, mesh, axes=None) -> "EllDocShards":
+        """Row-shard this corpus over the mesh's data axes (DESIGN.md §8).
+
+        Only the ELL arrays + norms travel (the kernel-scoring layout); the CSR
+        side stays host-global — the sharded serving path never densifies."""
+        from repro.core.distributed import shard_rows
+
+        (values, cols, sq), n_shards, _ = shard_rows(
+            mesh, [self.values, self.cols, self.sq], axes
+        )
+        return EllDocShards(
+            values=values, cols=cols, sq=sq,
+            n_cols=self.n_cols, n_docs=self.n_docs, n_shards=n_shards,
+        )
+
 
 VectorBackend = Union[DenseBackend, EllSparseBackend]
+
+
+# ---------------------------------------------------------------------------
+# sharded corpus views — the serving plane's document side (DESIGN.md §8).
+# A `*DocShards` is a backend row-sharded over a mesh's data axes: shard s owns
+# the contiguous global doc ids [s·L, (s+1)·L) where L = n_pad / n_shards
+# (rows zero-padded to the shard multiple). `score_local` and `to_local` are
+# shard_map-body views: inside shard_map the array leaves ARE the local block.
+# ---------------------------------------------------------------------------
+
+
+class _DocShardsBase:
+    n_docs: int
+    n_shards: int
+
+    @staticmethod
+    def to_local(global_ids: jax.Array, lo, docs_per_shard: int):
+        """Global→local doc-id translation: (local row ids clipped safe for
+        gathering, owned mask). ``lo`` = flat_shard_index · docs_per_shard."""
+        local = global_ids - lo
+        owned = jnp.logical_and(local >= 0, local < docs_per_shard)
+        return jnp.clip(local, 0, docs_per_shard - 1), owned
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseDocShards(_DocShardsBase):
+    """Dense corpus rows sharded P(data_axes, None) for shard-parallel query
+    serving."""
+
+    x: jax.Array  # f[n_pad, d] (local block [L, d] inside shard_map)
+    n_docs: int = dataclasses.field(metadata=dict(static=True))
+    n_shards: int = dataclasses.field(metadata=dict(static=True))
+
+    def _rows0(self) -> jax.Array:
+        return self.x
+
+    @property
+    def dim(self) -> int:
+        return self.x.shape[1]
+
+    def score_local(self, xq: jax.Array, ids: jax.Array) -> jax.Array:
+        """‖c‖² − 2·x·c for local doc row ids ``ids`` [B, C] against dense
+        queries ``xq`` [B, d] — shard_map-body view (same expressions as the
+        single-device `_score_entries`, so distances agree)."""
+        xd = self.x[ids].astype(jnp.float32)                   # [B, C, d]
+        c_sq = jnp.einsum("bcd,bcd->bc", xd, xd)
+        return c_sq - 2.0 * jnp.einsum("bd,bcd->bc", xq.astype(jnp.float32), xd)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllDocShards(_DocShardsBase):
+    """ELL-sparse corpus rows sharded P(data_axes, None): the sharded scorer
+    stays sparse-first — per-candidate compute is O(nnz), never a densify."""
+
+    values: jax.Array  # f[n_pad, nnz_max]
+    cols: jax.Array    # i32[n_pad, nnz_max]
+    sq: jax.Array      # f32[n_pad]
+    n_cols: int = dataclasses.field(metadata=dict(static=True))
+    n_docs: int = dataclasses.field(metadata=dict(static=True))
+    n_shards: int = dataclasses.field(metadata=dict(static=True))
+
+    def _rows0(self) -> jax.Array:
+        return self.values
+
+    @property
+    def dim(self) -> int:
+        return self.n_cols
+
+    def score_local(self, xq: jax.Array, ids: jax.Array) -> jax.Array:
+        """‖c‖² − 2·x·c for local doc row ids [B, C] against dense queries
+        [B, d]: nnz-bounded column gather from the query rows (compute is
+        B·C·nnz, not B·C·d) — shard_map-body view."""
+        v = self.values[ids].astype(jnp.float32)               # [B, C, nnz]
+        c = self.cols[ids]                                     # [B, C, nnz]
+        b_idx = jnp.arange(xq.shape[0])[:, None, None]
+        g = xq.astype(jnp.float32)[b_idx, c]                   # [B, C, nnz]
+        return self.sq[ids] - 2.0 * jnp.einsum("bcn,bcn->bc", v, g)
+
+
+DocShards = Union[DenseDocShards, EllDocShards]
 
 
 def sparse_backend_from_csr(m: Csr, nnz_max: int | None = None) -> EllSparseBackend:

@@ -15,6 +15,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:  # jax>=0.6 exposes shard_map at top level
@@ -39,6 +40,46 @@ from repro.core.kmeans import assign as _assign
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Mesh axes that shard documents: ('pod','data') when multi-pod."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_row_shards(mesh: Mesh, axes: Optional[Tuple[str, ...]] = None) -> int:
+    """Number of row shards a corpus splits into over the data axes."""
+    axes = data_axes(mesh) if axes is None else tuple(axes)
+    n = 1
+    for a in axes:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def flat_shard_index(mesh: Mesh, axes: Tuple[str, ...]):
+    """Flattened shard index of the executing device *inside a shard_map body*
+    — row-major over ``axes``, matching how ``P(axes, ...)`` splits rows."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * int(mesh.shape[a]) + jax.lax.axis_index(a)
+    return idx
+
+
+def shard_rows(mesh: Mesh, arrays, axes: Optional[Tuple[str, ...]] = None):
+    """Device-put arrays row-sharded over the mesh's data axes.
+
+    Rows are zero-padded up to the shard multiple so every shard holds the same
+    block length (shard_map needs even splits); callers mask the pad rows via
+    the true row count. Returns (sharded arrays list, n_shards, n_pad)."""
+    axes = data_axes(mesh) if axes is None else tuple(axes)
+    n_shards = n_row_shards(mesh, axes)
+    n = int(arrays[0].shape[0])
+    n_pad = -(-n // n_shards) * n_shards
+    out = []
+    for a in arrays:
+        a_np = np.asarray(a)
+        assert a_np.shape[0] == n, "row-sharded arrays must share the row count"
+        if n_pad > n:
+            pad = np.zeros((n_pad - n, *a_np.shape[1:]), a_np.dtype)
+            a_np = np.concatenate([a_np, pad], axis=0)
+        spec = P(axes, *([None] * (a_np.ndim - 1)))
+        out.append(jax.device_put(a_np, NamedSharding(mesh, spec)))
+    return out, n_shards, n_pad
 
 
 def distributed_lloyd_step(mesh: Mesh, use_kernel: bool = False):

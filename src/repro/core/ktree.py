@@ -98,10 +98,20 @@ def ktree_init(
     )
 
 
+CAPACITY_HEADROOM = 1.8
+"""Node-capacity multiplier over the worst-case leaf count in
+:func:`suggested_max_nodes`. Internal nodes of an order-m tree add at most
+~1/(⌈m/2⌉−1) ≈ 0.5× more nodes on top of the leaves, and the split cascade
+transiently allocates the new sibling before the parent absorbs it — 1.8×
+covers both with margin (pinned by the capacity property test)."""
+
+
 def suggested_max_nodes(n_docs: int, order: int) -> int:
-    """Capacity: worst-case ~2·N/(m/2) leaves plus internals (×1.5) plus slack."""
+    """Preallocation capacity: worst-case ~2·N/(m/2) half-full leaves, times
+    :data:`CAPACITY_HEADROOM` for internal nodes + split headroom, plus
+    constant slack for tiny corpora."""
     leaves = max(2 * n_docs // max(order // 2, 1), 8)
-    return int(leaves * 1.8) + 32
+    return int(leaves * CAPACITY_HEADROOM) + 32
 
 
 def _levels_bucket(levels: int) -> int:

@@ -57,6 +57,25 @@ def nn_topk_ref(
     return topk_from_dist(_full_sqdist(x, centers, valid), k)
 
 
+def topk_merge_ref(
+    ids: jax.Array, dist: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-shard top-k candidate lists into one exact global top-k.
+
+    ``ids`` i32[B, S, k_s], ``dist`` f32[B, S, k_s] — each shard's ascending
+    (id, dist) list over a *disjoint* id subset, padded with (−1, +inf).
+    Returns (ids i32[B, k], dist f32[B, k]) ascending — the top-k of the union,
+    by composing :func:`topk_from_dist` over the flattened S·k_s candidates.
+    Exact ties across shards resolve in shard-major order (the serving merge's
+    documented tie rule)."""
+    b = ids.shape[0]
+    ids_f = ids.reshape(b, -1)
+    dist_f = dist.reshape(b, -1)
+    pos, d = topk_from_dist(dist_f, k)
+    out = jnp.take_along_axis(ids_f, jnp.maximum(pos, 0), axis=1)
+    return jnp.where(pos >= 0, out, -1).astype(jnp.int32), d
+
+
 def ell_spmm_ref(values: jax.Array, cols: jax.Array, centers: jax.Array) -> jax.Array:
     """S[b,k] = Σ_j values[b,j] · centers[k, cols[b,j]] — densify + matmul."""
     b, nz = values.shape

@@ -17,3 +17,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many (CPU) devices the test process has."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_serving_mesh(n_shards: int):
+    """1-D data mesh for shard-parallel query serving (`--mesh N` in
+    launch/serve.py): the corpus rows shard over ``data``, the tree
+    replicates. Needs ≥ n_shards visible devices — on CPU force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax init."""
+    n_dev = len(jax.devices())
+    if n_dev < n_shards:
+        raise SystemExit(
+            f"serving mesh wants {n_shards} shards but only {n_dev} device(s) "
+            "are visible; set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} (CPU) or run on a {n_shards}-chip slice"
+        )
+    return jax.make_mesh((n_shards,), ("data",))

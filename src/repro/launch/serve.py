@@ -94,9 +94,14 @@ def serve_retrieval(args):
 
 def serve_paper(args):
     """K-tree retrieval serving: build-or-restore the index, answer batched
-    top-k beam-search queries, report recall@k vs brute force and QPS."""
+    top-k beam-search queries (single-device, or shard-parallel with
+    ``--mesh N``, optionally through an LRU answer cache with ``--cache C``),
+    report recall@k vs brute force and QPS."""
     from repro.core import ktree as kt
-    from repro.core.query import brute_force_topk, recall_at_k, topk_search
+    from repro.core.query import (
+        AnswerCache, brute_force_topk, recall_at_k, topk_search,
+        topk_search_cached, topk_search_sharded,
+    )
     from repro.ckpt import restore_ktree, save_ktree
     from repro.data.pipeline import corpus_backend
     from repro.data.synth_corpus import scaled
@@ -141,16 +146,50 @@ def serve_paper(args):
     nq = min(args.queries, corpus_spec.n_docs)
     rows = jnp.arange(nq, dtype=jnp.int32)
     x_q = np.asarray(backend.take(rows))
-    topk_search(tree, x_q, k=args.k, beam=args.beam)  # warm the jit cache
-    t0 = time.time()
-    docs, _ = topk_search(tree, x_q, k=args.k, beam=args.beam)
-    qps = nq / max(time.time() - t0, 1e-9)
+
+    if args.mesh > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.mesh)
+        shards = backend.shard(mesh)  # rows placed across shards once
+        mode = f"sharded×{args.mesh}"
+
+        def run(xq):
+            return topk_search_sharded(
+                mesh, tree, xq, corpus=shards, k=args.k, beam=args.beam
+            )
+    else:
+        mode = "single-device"
+
+        def run(xq):
+            return topk_search(tree, xq, k=args.k, beam=args.beam)
+
+    run(x_q)  # warm the jit cache
+    if args.cache:
+        # timed section answers the stream twice: pass 1 cold-fills the LRU,
+        # pass 2 replays it — the hit path the report's hit_rate measures
+        cache = AnswerCache(args.cache)
+        t0 = time.time()
+        docs, _ = topk_search_cached(
+            tree, x_q, cache, k=args.k, beam=args.beam, search_fn=run
+        )
+        docs, _ = topk_search_cached(
+            tree, x_q, cache, k=args.k, beam=args.beam, search_fn=run
+        )
+        qps = 2 * nq / max(time.time() - t0, 1e-9)
+        s = cache.stats
+        print(f"cache: hits={s['hits']} misses={s['misses']} "
+              f"hit_rate={s['hit_rate']:.2f} size={s['size']}/{s['capacity']}")
+    else:
+        t0 = time.time()
+        docs, _ = run(x_q)
+        qps = nq / max(time.time() - t0, 1e-9)
 
     # brute-force ground truth on the query slice (exact squared distances)
     x_all = np.asarray(backend.take(jnp.arange(corpus_spec.n_docs, dtype=jnp.int32)))
     recall = recall_at_k(docs, brute_force_topk(x_q, x_all, args.k))
     print(f"{nq} queries: beam={args.beam} k={args.k} "
-          f"recall@{args.k}={recall:.3f} {qps:.0f} QPS ({rep} backend)")
+          f"recall@{args.k}={recall:.3f} {qps:.0f} QPS ({rep} backend, {mode})")
 
 
 def main():
@@ -169,6 +208,12 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--beam", type=int, default=4)
     ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--mesh", type=int, default=0, help="shard-parallel query "
+                    "serving over N devices (topk_search_sharded); 0/1 = "
+                    "single device")
+    ap.add_argument("--cache", type=int, default=0, help="LRU answer-cache "
+                    "capacity (0 = off); the timed stream runs twice so the "
+                    "report shows the hit path")
     args = ap.parse_args()
     spec = registry.get(args.arch)
     if spec.family == "lm":

@@ -76,6 +76,27 @@ def test_property_insert_invariants(n, order, waves, sparse, seed):
         kt.check_invariants(tree, n_docs=hi)
 
 
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(16, 220),    # corpus size
+    st.integers(3, 12),      # order m
+    st.booleans(),           # sparse backend?
+    st.integers(0, 9999),
+)
+def test_property_suggested_capacity_never_overflows(n, order, sparse, seed):
+    """Building at exactly suggested_max_nodes capacity (CAPACITY_HEADROOM
+    over the worst-case leaf count) never exhausts the node pool — overflow
+    would silently drop scatters and break the invariants."""
+    rng = np.random.default_rng(seed)
+    x = _random_docs(rng, n, 7, sparse)
+    cap = kt.suggested_max_nodes(n, order)
+    data = csr_from_dense(x) if sparse else jnp.asarray(x)
+    tree = kt.build(data, order=order, batch_size=32, medoid=sparse,
+                    max_nodes=cap, key=jax.random.PRNGKey(seed))
+    assert int(tree.n_nodes) <= cap
+    kt.check_invariants(tree, n_docs=n)
+
+
 @settings(max_examples=6, deadline=None)
 @given(st.integers(3, 8), st.integers(0, 9999))
 def test_property_insertion_order_independence_of_legality(order, seed):

@@ -237,3 +237,38 @@ def test_kernel_flag_in_kmeans():
     i2, d2 = km_assign(x, c, use_kernel=True)
     assert (np.asarray(i1) == np.asarray(i2)).all()
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
+
+
+def test_topk_merge_ref_exact_union():
+    """The serving merge oracle: merging per-shard top-k lists over disjoint id
+    subsets equals a global top-k over the union; (−1, +inf) padding is
+    ignored; ties resolve shard-major."""
+    rng = np.random.default_rng(11)
+    b, s, kq, n = 7, 4, 5, 64
+    dist_full = rng.random((b, n)).astype(np.float32)
+    dist_full[0, 3] = dist_full[0, 19]  # cross-shard exact tie
+    ids_full = np.arange(n)
+    # per-shard lists: shard j owns the contiguous id range [j*16, (j+1)*16)
+    shard_ids = np.full((b, s, kq), -1, np.int32)
+    shard_d = np.full((b, s, kq), np.inf, np.float32)
+    for j in range(s):
+        seg = dist_full[:, j * 16:(j + 1) * 16]
+        order = np.argsort(seg, axis=1, kind="stable")[:, :kq]
+        shard_ids[:, j] = order + j * 16
+        shard_d[:, j] = np.take_along_axis(seg, order, 1)
+    got_ids, got_d = ref.topk_merge_ref(
+        jnp.asarray(shard_ids), jnp.asarray(shard_d), kq)
+    want = np.argsort(dist_full, axis=1, kind="stable")[:, :kq]
+    np.testing.assert_array_equal(np.asarray(got_ids), ids_full[want])
+    np.testing.assert_allclose(
+        np.asarray(got_d), np.take_along_axis(dist_full, want, 1), rtol=1e-6)
+
+
+def test_topk_merge_ref_padding_and_k_growth():
+    """Shards with fewer than k finite candidates pad; a merge wider than the
+    finite union pads with (−1, +inf)."""
+    ids = jnp.asarray([[[0, 1, -1], [17, -1, -1]]], jnp.int32)
+    d = jnp.asarray([[[0.5, 2.0, np.inf], [1.0, np.inf, np.inf]]], jnp.float32)
+    got_ids, got_d = ref.topk_merge_ref(ids, d, 5)
+    np.testing.assert_array_equal(np.asarray(got_ids[0]), [0, 17, 1, -1, -1])
+    assert np.isinf(np.asarray(got_d[0][3:])).all()

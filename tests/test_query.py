@@ -158,6 +158,146 @@ def test_invalid_args_raise(dense_setup):
         topk_search(tree, q, beam=0)
 
 
+def test_pipelined_chunks_match_sync_loop(dense_setup):
+    """Dispatch-ahead pipeline (DESIGN.md §8) is a pure scheduling change:
+    depth 1 (the old synchronous loop), 2, and deeper all agree."""
+    tree, _, q = dense_setup
+    ref = topk_search(tree, q, k=5, beam=2, chunk=17, pipeline=1)
+    for depth in (2, 4):
+        got = topk_search(tree, q, k=5, beam=2, chunk=17, pipeline=depth)
+        np.testing.assert_array_equal(ref[0], got[0])
+        np.testing.assert_array_equal(ref[1], got[1])
+
+
+def test_answer_cache_hits_identical_eviction_and_stats(dense_setup):
+    from repro.core.query import AnswerCache, topk_search_cached
+
+    tree, _, q = dense_setup
+    x_q = np.asarray(q)[:8]
+    cache = AnswerCache(capacity=4)
+    d0, s0 = topk_search(tree, x_q, k=5, beam=2)
+    d1, s1 = topk_search_cached(tree, x_q, cache, k=5, beam=2)
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(s0, s1)
+    assert cache.stats["misses"] == 8 and cache.stats["hits"] == 0
+    assert len(cache) == 4  # eviction at capacity: only the last 4 remain
+
+    # rows 4..7 are resident → hits, identical answers; rows 0..3 evicted
+    d2, s2 = topk_search_cached(tree, x_q[4:], cache, k=5, beam=2)
+    np.testing.assert_array_equal(d0[4:], d2)
+    np.testing.assert_array_equal(s0[4:], s2)
+    assert cache.stats["hits"] == 4 and cache.stats["misses"] == 8
+    d3, _ = topk_search_cached(tree, x_q[:4], cache, k=5, beam=2)
+    np.testing.assert_array_equal(d0[:4], d3)
+    assert cache.stats["misses"] == 12
+    assert cache.stats["hit_rate"] == 4 / 16
+    assert cache.stats["size"] == 4 and cache.stats["capacity"] == 4
+
+
+def test_answer_cache_dedups_misses_within_batch(dense_setup):
+    from repro.core.query import AnswerCache, topk_search_cached
+
+    tree, _, q = dense_setup
+    x_q = np.repeat(np.asarray(q)[:1], 5, axis=0)
+    cache = AnswerCache(capacity=8)
+    calls = []
+
+    def spy(xq):
+        calls.append(xq.shape[0])
+        return topk_search(tree, xq, k=3, beam=2)
+
+    docs, dist = topk_search_cached(tree, x_q, cache, k=3, beam=2, search_fn=spy)
+    assert calls == [1]  # five identical rows → one engine row
+    assert (docs == docs[0]).all() and (dist == dist[0]).all()
+
+
+def test_answer_cache_key_separates_k_and_beam(dense_setup):
+    from repro.core.query import AnswerCache
+
+    row = np.asarray(dense_setup[2])[0]
+    k1 = AnswerCache.make_key(row, 5, 2)
+    assert k1 == AnswerCache.make_key(row.copy(), 5, 2)
+    assert k1 != AnswerCache.make_key(row, 6, 2)
+    assert k1 != AnswerCache.make_key(row, 5, 3)
+    assert k1 != AnswerCache.make_key(row + 1e-3, 5, 2)
+
+
+def test_answer_cache_invalidates_on_new_index(dense_setup):
+    """The cache binds to the index object: inserting into the tree yields a
+    new KTree, and cached answers for the old one must not survive."""
+    from repro.core.query import AnswerCache, topk_search_cached
+
+    tree, x, q = dense_setup
+    x_q = np.asarray(q)[:4]
+    cache = AnswerCache(capacity=16)
+    topk_search_cached(tree, x_q, cache, k=3, beam=2)
+    assert len(cache) == 4
+    n = x.shape[0]
+    tree2 = kt.insert(tree, jnp.asarray(x_q), np.arange(n, n + 4))
+    d_fresh, s_fresh = topk_search(tree2, x_q, k=3, beam=2)
+    d_cached, s_cached = topk_search_cached(tree2, x_q, cache, k=3, beam=2)
+    np.testing.assert_array_equal(d_fresh, d_cached)
+    np.testing.assert_array_equal(s_fresh, s_cached)
+    # the inserted queries are now their own nearest documents
+    assert (d_cached[:, 0] == np.arange(n, n + 4)).all()
+
+
+def test_sharded_single_shard_mesh_and_wrong_corpus_guard(dense_setup):
+    """A 1-shard mesh runs the sharded path in-process: answers must equal
+    topk_search, and a corpus too short for the tree's doc ids must raise."""
+    from repro.core.query import topk_search_sharded
+
+    tree, x, q = dense_setup
+    mesh = jax.make_mesh((1,), ("data",))
+    ref = topk_search(tree, q, k=5, beam=2)
+    got = topk_search_sharded(mesh, tree, q, corpus=x, k=5, beam=2)
+    np.testing.assert_array_equal(ref[0], got[0])
+    np.testing.assert_array_equal(ref[1], got[1])
+    with pytest.raises(ValueError, match="different corpus"):
+        topk_search_sharded(mesh, tree, q, corpus=x[:-10], k=5, beam=2)
+
+
+def test_recall_at_k_matches_set_loop():
+    """The broadcast recall reduction pins the old per-query set-loop
+    semantics, −1 padding included."""
+    from repro.core.query import recall_at_k
+
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        nq, k = int(rng.integers(1, 40)), int(rng.integers(1, 8))
+        true_k = np.stack([
+            rng.choice(50, size=k, replace=False) for _ in range(nq)
+        ])
+        docs = rng.integers(0, 50, (nq, k))
+        docs[rng.random((nq, k)) < 0.3] = -1  # padding never matches
+        old = float(np.mean([
+            len(set(docs[i].tolist()) & set(true_k[i].tolist())) / k
+            for i in range(nq)
+        ]))
+        assert recall_at_k(docs, true_k) == old
+
+
+def test_brute_force_topk_blocked_bit_identical():
+    """Tiled brute force (running top-k merge) reproduces the full-matrix
+    stable argsort exactly — including duplicate-distance tie order."""
+    from repro.core.query import brute_force_topk
+
+    rng = np.random.default_rng(4)
+    x_all = rng.normal(0, 1, (157, 12)).astype(np.float32)
+    x_all[40] = x_all[7]      # planted duplicates → exact distance ties
+    x_all[93] = x_all[7]
+    x_q = np.concatenate([x_all[:20], x_all[7:8]])
+    d_full = (
+        (x_q ** 2).sum(1)[:, None] - 2.0 * x_q @ x_all.T
+        + (x_all ** 2).sum(1)[None, :]
+    )
+    ref = np.argsort(d_full, axis=1, kind="stable")[:, :9]
+    got = brute_force_topk(x_q, x_all, 9, doc_block=13, q_block=6)
+    np.testing.assert_array_equal(ref, got)
+    # k beyond the corpus: width clamps to n_docs like the argsort slice did
+    assert brute_force_topk(x_q[:2], x_all[:5], 9).shape == (2, 5)
+
+
 def test_query_identity_after_restore(tmp_path, dense_setup):
     from repro.ckpt import save_ktree, restore_ktree
 
