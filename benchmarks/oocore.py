@@ -1,0 +1,196 @@
+"""Out-of-core corpus store bench (DESIGN.md §9): streaming-build throughput
+and store-backed query QPS across residency budget × block size.
+
+The sweep writes the corpus to an on-disk block store, then for each
+(budget fraction, block_docs) setting:
+
+- **streaming build** (`build_from_store`) — docs/s with only tree pages +
+  one batch + the budgeted block cache resident (the paper's "disk based
+  implementations where space requirements exceed that of main memory");
+- **store-backed queries** (`topk_search(tree, store_slice)`) — QPS with
+  chunk fetches coming off disk through the dispatch-ahead pipeline, against
+  the in-memory baseline on identical queries;
+- an **equivalence assertion**: store-backed answers must be bit-identical
+  to the in-memory path (the §9 contract; the full matrix lives in
+  tests/test_store.py).
+
+Budgets are fractions of the decoded corpus size, so sub-1.0 settings really
+do evict (`cache.evictions` lands in the JSON). Results → ``--json
+BENCH_oocore.json`` (archived by the oocore CI job).
+
+Run:  PYTHONPATH=src python benchmarks/oocore.py [--smoke] \
+          [--json BENCH_oocore.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def main(
+    n_docs: int = 4000,
+    culled: int = 800,
+    order: int = 16,
+    k: int = 10,
+    beam: int = 4,
+    chunk: int = 256,
+    block_sizes=(256, 1024),
+    budget_fractions=(0.1, 0.5, 1.0),
+    n_queries: int = 512,
+    repeats: int = 3,
+    seed: int = 0,
+    store_dir: str | None = None,
+    json_path: str | None = None,
+):
+    from repro.core import ktree as kt
+    from repro.core.query import topk_search
+    from repro.core.store import open_store, save_store
+    from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
+    from repro.sparse.csr import csr_to_dense
+
+    spec = scaled(INEX_LIKE, n_docs=n_docs, culled=culled)
+    m, _ = prepared_corpus(spec, seed=seed)
+    x_all = np.asarray(csr_to_dense(m))
+    nq = min(n_queries, n_docs)
+    base_dir = store_dir or tempfile.mkdtemp(prefix="oocore_")
+
+    rows, blob = [], {
+        "n_docs": n_docs, "dim": x_all.shape[1], "k": k, "beam": beam,
+        "chunk": chunk, "n_queries": nq,
+        "build_docs_per_s": {}, "query_qps": {}, "cache": {},
+    }
+
+    # in-memory baselines: build once per nothing (independent of store shape)
+    key = jax.random.PRNGKey(seed)
+    t0 = time.time()
+    tree_mem = kt.build(jnp.asarray(x_all), order=order, batch_size=256, key=key)
+    mem_build_s = time.time() - t0
+    rows.append(("oocore_build_inmemory", mem_build_s / n_docs * 1e6,
+                 f"docs_per_s={n_docs/max(mem_build_s,1e-9):.0f}"))
+    blob["build_docs_per_s"]["inmemory"] = n_docs / max(mem_build_s, 1e-9)
+
+    x_q = jnp.asarray(x_all[:nq])
+    topk_search(tree_mem, x_q, k=k, beam=beam, chunk=chunk)  # warm
+    lat = []
+    for _ in range(repeats):
+        t0 = time.time()
+        d_mem, s_mem = topk_search(tree_mem, x_q, k=k, beam=beam, chunk=chunk)
+        lat.append(time.time() - t0)
+    mem_qps = nq / max(float(np.median(lat)), 1e-9)
+    rows.append(("oocore_query_inmemory", np.median(lat) / nq * 1e6,
+                 f"qps={mem_qps:.0f}"))
+    blob["query_qps"]["inmemory"] = mem_qps
+
+    for block_docs in block_sizes:
+        path = os.path.join(base_dir, f"blk{block_docs}")
+        t0 = time.time()
+        save_store(path, x_all, block_docs=block_docs)
+        t_write = time.time() - t0
+        rows.append((f"oocore_store_write_blk{block_docs}",
+                     t_write / n_docs * 1e6,
+                     f"docs_per_s={n_docs/max(t_write,1e-9):.0f}"))
+        probe = open_store(path)
+        corpus_bytes = probe.nbytes
+
+        for frac in budget_fractions:
+            budget = max(int(corpus_bytes * frac), 1)
+            tag = f"blk{block_docs}_budget{int(frac*100)}pct"
+
+            # --- streaming build under this residency budget ----------------
+            store = open_store(path, budget_bytes=budget)
+            t0 = time.time()
+            tree_st = kt.build_from_store(store, order=order, batch_size=256,
+                                          key=key)
+            t_build = time.time() - t0
+            bs = store.cache.stats
+            rows.append((
+                f"oocore_build_{tag}", t_build / n_docs * 1e6,
+                f"docs_per_s={n_docs/max(t_build,1e-9):.0f} "
+                f"evictions={bs['evictions']} "
+                f"resident={bs['resident_bytes']/1e6:.1f}MB",
+            ))
+            blob["build_docs_per_s"][tag] = n_docs / max(t_build, 1e-9)
+
+            # --- store-backed queries under the same budget -----------------
+            store = open_store(path, budget_bytes=budget)
+            q_view = store.view(0, nq)
+            topk_search(tree_mem, q_view, k=k, beam=beam, chunk=chunk)  # warm
+            lat = []
+            for _ in range(repeats):
+                t0 = time.time()
+                d_st, s_st = topk_search(tree_mem, q_view, k=k, beam=beam,
+                                         chunk=chunk)
+                lat.append(time.time() - t0)
+            qps = nq / max(float(np.median(lat)), 1e-9)
+            qs = store.cache.stats
+            # §9 contract: disk-backed answers == in-memory answers, bit for bit
+            np.testing.assert_array_equal(d_mem, d_st)
+            np.testing.assert_array_equal(s_mem, s_st)
+            rows.append((
+                f"oocore_query_{tag}", np.median(lat) / nq * 1e6,
+                f"qps={qps:.0f} vs_inmemory={qps/max(mem_qps,1e-9):.2f}x "
+                f"block_hit_rate={qs['hit_rate']:.2f} exact=yes",
+            ))
+            blob["query_qps"][tag] = qps
+            blob["cache"][tag] = {
+                "build": bs, "query": qs,
+                "budget_bytes": budget, "corpus_bytes": corpus_bytes,
+            }
+            # the streaming tree must be the in-memory tree, bit for bit
+            import dataclasses
+
+            for f in dataclasses.fields(tree_mem):
+                if f.metadata.get("static"):
+                    continue
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(tree_mem, f.name)),
+                    np.asarray(getattr(tree_st, f.name)), err_msg=f.name,
+                )
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+        rows.append(("oocore_bench_json", 0.0, f"wrote {json_path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=4000)
+    ap.add_argument("--culled", type=int, default=800)
+    ap.add_argument("--order", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=256)
+    ap.add_argument("--blocks", type=int, nargs="+", default=[256, 1024])
+    ap.add_argument("--budgets", type=float, nargs="+", default=[0.1, 0.5, 1.0])
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--store-dir", default="", help="keep stores here "
+                    "(default: a fresh temp dir)")
+    ap.add_argument("--json", default="", help="write BENCH_oocore.json here")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run: tiny corpus, tight budgets (forces real "
+             "evictions), short sweep",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.docs, args.culled, args.order = 600, 250, 10
+        args.blocks, args.budgets = [64, 256], [0.05, 0.5]
+        args.queries, args.repeats, args.chunk = 256, 2, 128
+    for name, us, extra in main(
+        n_docs=args.docs, culled=args.culled, order=args.order, k=args.k,
+        beam=args.beam, chunk=args.chunk, block_sizes=tuple(args.blocks),
+        budget_fractions=tuple(args.budgets), n_queries=args.queries,
+        repeats=args.repeats, store_dir=args.store_dir or None,
+        json_path=args.json or None,
+    ):
+        print(f"{name},{us:.1f},{extra}")

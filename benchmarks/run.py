@@ -7,6 +7,7 @@ One section per paper table/figure + the system benches:
   scaling       — complexity claim (build time vs n)
   query_recall  — beam-search recall@k vs brute force + QPS (DESIGN.md §7)
   query_throughput — serving QPS/latency: chunk × pipeline × shards + cache
+  oocore        — out-of-core store: build/query under a residency budget
   kernel_bench  — kernel micro-benches + oracle agreement
   roofline      — §Roofline terms from the dry-run artifacts (if present)
 
@@ -82,6 +83,18 @@ def main() -> None:
             if args.smoke else {}
         )
         for name, us, extra in query_throughput.main(**qt_kwargs):
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "oocore" not in args.skip:
+        print("\n== oocore (out-of-core store, DESIGN.md §9) ==", flush=True)
+        from benchmarks import oocore
+        oo_kwargs = (
+            dict(n_docs=600, culled=250, order=10, chunk=128,
+                 block_sizes=(64, 256), budget_fractions=(0.05, 0.5),
+                 n_queries=256, repeats=2)
+            if args.smoke else {}
+        )
+        for name, us, extra in oocore.main(**oo_kwargs):
             print(f"{name},{us:.1f},{extra}", flush=True)
 
     if "kernels" not in args.skip:

@@ -8,7 +8,17 @@
   restoring job provides — the fleet size may change between runs.
 - K-tree persistence: the tree's array pages serialise the same way (the
   paper's disk-based K-tree, §1).
+- Store-backed indexes checkpoint **by manifest reference**
+  (`save_index`/`restore_index`, DESIGN.md §9): the tree snapshot plus the
+  corpus store's path + content hash — the corpus is never rematerialised,
+  and a store rewritten in place is refused at restore.
 """
-from repro.ckpt.checkpoint import save, restore, latest_step, save_ktree, restore_ktree
+from repro.ckpt.checkpoint import (
+    save, restore, latest_step, save_ktree, restore_ktree,
+    save_index, restore_index,
+)
 
-__all__ = ["save", "restore", "latest_step", "save_ktree", "restore_ktree"]
+__all__ = [
+    "save", "restore", "latest_step", "save_ktree", "restore_ktree",
+    "save_index", "restore_index",
+]

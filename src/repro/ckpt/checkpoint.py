@@ -53,6 +53,8 @@ def _gc(ckpt_dir: str, keep: int):
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Highest step number with a completed ``step_xxx`` directory in
+    ``ckpt_dir`` (None when none exist)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(m.group(1)) for n in os.listdir(ckpt_dir) if (m := _STEP_RE.match(n))]
@@ -117,6 +119,9 @@ def save_ktree(path: str, tree) -> str:
 
 
 def restore_ktree(path: str):
+    """Load a :func:`save_ktree` snapshot back into a live ``KTree`` (accepts
+    the path with or without its ``.npz`` suffix; per-field dtypes restored
+    from the meta blob)."""
     from repro.core.ktree import KTree
 
     data = np.load(path if path.endswith(".npz") else path + ".npz")
@@ -128,3 +133,73 @@ def restore_ktree(path: str):
         if k != "_meta"
     }
     return KTree(order=int(meta["order"]), medoid=bool(meta["medoid"]), **kwargs)
+
+
+# --- store-backed index persistence (DESIGN.md §9) ---------------------------
+
+INDEX_META_NAME = "INDEX.json"
+
+
+def save_index(path: str, tree, store) -> str:
+    """Checkpoint a store-backed index **by manifest reference**: the tree's
+    array pages are snapshotted (``tree.npz``, via :func:`save_ktree`) next to
+    a small JSON that records the corpus store's path and
+    ``manifest_hash`` — the corpus itself (the large side of the index) is
+    never copied or materialised.
+
+    ``path`` becomes a directory ``{tree.npz, INDEX.json}``; the write lands
+    in a tmp dir and installs by rename (an existing checkpoint is moved
+    aside and removed only after the replacement is in place, so a crash
+    never destroys the previous restore point). Restore with
+    :func:`restore_index`, which re-opens the store and refuses to pair the
+    tree with a corpus whose manifest content changed (regenerated in place →
+    stale doc ids)."""
+    import json
+
+    from repro.core.store import _install_dir
+
+    tmp = path.rstrip("/") + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    save_ktree(os.path.join(tmp, "tree"), tree)
+    ref = {
+        "store_path": os.path.abspath(store.path),
+        "manifest_hash": store.manifest_hash,
+        "kind": store.kind,
+        "n_docs": store.n_docs,
+    }
+    with open(os.path.join(tmp, INDEX_META_NAME), "w") as f:
+        json.dump(ref, f, indent=1, sort_keys=True)
+    _install_dir(tmp, path)
+    return path
+
+
+def restore_index(path: str, budget_bytes: Optional[int] = None, check: bool = True):
+    """Restore a :func:`save_index` checkpoint → ``(tree, store)``.
+
+    The store is re-opened from the recorded path with ``budget_bytes`` of
+    block-cache residency (default: the store module's default budget).
+    ``check=True`` (default) verifies the store's current ``manifest_hash``
+    against the one recorded at save time and raises ``ValueError`` on
+    mismatch — the corpus was regenerated in place, so the tree's doc ids
+    would silently address different documents."""
+    import json
+
+    from repro.core.store import DEFAULT_BUDGET_BYTES, open_store
+
+    with open(os.path.join(path, INDEX_META_NAME)) as f:
+        ref = json.load(f)
+    tree = restore_ktree(os.path.join(path, "tree"))
+    store = open_store(
+        ref["store_path"],
+        budget_bytes=DEFAULT_BUDGET_BYTES if budget_bytes is None else budget_bytes,
+    )
+    if check and store.manifest_hash != ref["manifest_hash"]:
+        raise ValueError(
+            f"index {path} references corpus store {ref['store_path']} with "
+            f"manifest hash {ref['manifest_hash']}, but the store on disk now "
+            f"hashes to {store.manifest_hash} — the corpus was rewritten in "
+            "place; rebuild the index (or pass check=False to pair anyway)"
+        )
+    return tree, store

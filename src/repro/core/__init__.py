@@ -2,7 +2,7 @@
 the k-means family it builds on, the top-k beam-search query engine,
 clustering metrics, and the distributed (shard_map) layer. See DESIGN.md §1–3
 and §7."""
-from repro.core import kmeans, ktree, metrics, query, sampling
+from repro.core import kmeans, ktree, metrics, query, sampling, store
 from repro.core.kmeans import (
     kmeans as run_kmeans,
     kmeans_fixed_iters,
@@ -15,6 +15,7 @@ from repro.core.ktree import (
     KTree,
     ktree_init,
     build,
+    build_from_store,
     insert,
     extract_assignment,
     assign_via_tree,
@@ -22,16 +23,19 @@ from repro.core.ktree import (
     nn_search_greedy,
     check_invariants,
 )
+from repro.core.store import open_store, save_store
 from repro.core.metrics import micro_purity, micro_entropy, nmi
 from repro.core.query import topk_search
 from repro.core.sampling import sampled_ktree_clustering
 
 __all__ = [
-    "kmeans", "ktree", "metrics", "query", "sampling",
+    "kmeans", "ktree", "metrics", "query", "sampling", "store",
     "run_kmeans", "kmeans_fixed_iters", "bisecting_kmeans", "minibatch_kmeans",
     "assign", "pairwise_sqdist",
-    "KTree", "ktree_init", "build", "insert", "extract_assignment",
+    "KTree", "ktree_init", "build", "build_from_store", "insert",
+    "extract_assignment",
     "assign_via_tree", "nn_search", "nn_search_greedy", "check_invariants",
+    "open_store", "save_store",
     "topk_search",
     "micro_purity", "micro_entropy", "nmi", "sampled_ktree_clustering",
 ]

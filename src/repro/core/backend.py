@@ -35,6 +35,26 @@ from repro.sparse.csr import Csr, csr_from_dense, csr_row_gather_dense
 from repro.sparse.ell import Ell, ell_from_csr
 
 
+def _ell_csr_arrays(vals: np.ndarray, cols: np.ndarray, pad_to: int | None = None):
+    """Rebuild host-side CSR arrays (data, indices, indptr) from padded ELL
+    rows — the one place the load-bearing convention lives: value-0 slots are
+    padding. ``pad_to`` zero-pads data/indices to a static capacity (chunk
+    backends need fixed leaf shapes for compile-cache stability; ``indptr``
+    bounds every read, so the padding is inert)."""
+    mask = vals != 0
+    indptr = np.zeros(vals.shape[0] + 1, dtype=np.int32)
+    np.cumsum(mask.sum(axis=1), out=indptr[1:])
+    data, indices = vals[mask], cols[mask].astype(np.int32)
+    if pad_to is not None:
+        nnz = int(indptr[-1])
+        data_p = np.zeros(pad_to, vals.dtype)
+        data_p[:nnz] = data
+        idx_p = np.zeros(pad_to, np.int32)
+        idx_p[:nnz] = indices
+        data, indices = data_p, idx_p
+    return data, indices, indptr
+
+
 def _use_pallas() -> bool:
     """Kernel dispatch: the Pallas kernels are compiled on TPU; elsewhere the
     pure-jnp oracles in :mod:`repro.kernels.ref` serve as the fallback (the
@@ -50,16 +70,35 @@ class DenseBackend:
 
     x: jax.Array  # f[N, d]
 
+    @classmethod
+    def from_store(cls, source, rows=None) -> "DenseBackend":
+        """Chunk backend over rows of an on-disk dense corpus store
+        (DESIGN.md §9).
+
+        ``source``: a ``repro.core.store.CorpusStore`` (``kind="dense"``) or a
+        ``StoreSlice``; ``rows``: global row ids to materialise (default: all
+        — only sensible for small stores; out-of-core consumers pass
+        chunk-sized row sets). The materialised rows are bit-identical to the
+        corresponding rows of an in-memory backend over the same corpus, so
+        every per-row op (``cross_nodes``/``topk_flat``/``row_sq``) agrees
+        exactly with the monolithic path."""
+        if rows is None:
+            rows = np.arange(source.n_docs)
+        return cls(x=jnp.asarray(source.take_rows(rows)["x"]))
+
     @property
     def n_docs(self) -> int:
+        """Corpus row count N."""
         return self.x.shape[0]
 
     @property
     def dim(self) -> int:
+        """Vector dimensionality d."""
         return self.x.shape[1]
 
     @property
     def dtype(self):
+        """Document element dtype."""
         return self.x.dtype
 
     def take(self, rows: jax.Array) -> jax.Array:
@@ -67,6 +106,7 @@ class DenseBackend:
         return self.x[rows]
 
     def row_sq(self, rows: jax.Array) -> jax.Array:
+        """‖x‖² per row — f32[B] (the constant term of squared distances)."""
         xb = self.x[rows].astype(jnp.float32)
         return jnp.einsum("bd,bd->b", xb, xb)
 
@@ -129,20 +169,59 @@ class EllSparseBackend:
     csr_indptr: jax.Array  # i32[N+1]
     n_cols: int = dataclasses.field(metadata=dict(static=True))
 
+    @classmethod
+    def from_store(cls, source, rows=None) -> "EllSparseBackend":
+        """Chunk backend over rows of an on-disk ELL corpus store
+        (DESIGN.md §9).
+
+        ``source``: a ``repro.core.store.CorpusStore`` (``kind="ell"``) or a
+        ``StoreSlice``; ``rows``: global row ids (default: all). The CSR side
+        is rebuilt host-side from the fetched ELL rows (value-0 slots are
+        padding, same convention as ``make_backend(Ell)``), and ``sq`` is
+        computed from the ELL values exactly like
+        :func:`sparse_backend_from_csr` — so chunk backends score, densify,
+        and norm bit-identically to an in-memory backend over the same
+        corpus.
+
+        The CSR arrays are zero-padded to the static ``B·nnz_max`` capacity:
+        a chunk's true nnz varies chunk-to-chunk, and a varying leaf shape
+        would retrace the jitted consumers (``_beam_search``/``_insert_wave``)
+        on *every* chunk — padded, all chunks of one bucket size share one
+        compile, like the in-memory path. ``indptr`` bounds every CSR read,
+        so the padding is never addressed."""
+        if rows is None:
+            rows = np.arange(source.n_docs)
+        got = source.take_rows(rows)
+        vals, cols = got["values"], got["cols"]
+        data, indices, indptr = _ell_csr_arrays(vals, cols, pad_to=vals.size)
+        return cls(
+            values=jnp.asarray(vals),
+            cols=jnp.asarray(cols),
+            sq=jnp.sum(jnp.asarray(vals).astype(jnp.float32) ** 2, axis=1),
+            csr_data=jnp.asarray(data),
+            csr_indices=jnp.asarray(indices),
+            csr_indptr=jnp.asarray(indptr),
+            n_cols=source.dim,
+        )
+
     @property
     def n_docs(self) -> int:
+        """Corpus row count N."""
         return self.values.shape[0]
 
     @property
     def dim(self) -> int:
+        """Logical vector dimensionality (the culled vocabulary size)."""
         return self.n_cols
 
     @property
     def nnz_max(self) -> int:
+        """ELL padding width — max stored nonzeros per row."""
         return self.values.shape[1]
 
     @property
     def dtype(self):
+        """Document element dtype."""
         return self.values.dtype
 
     def _csr(self) -> Csr:
@@ -155,6 +234,7 @@ class EllSparseBackend:
         return csr_row_gather_dense(self._csr(), rows, self.nnz_max)
 
     def row_sq(self, rows: jax.Array) -> jax.Array:
+        """‖x‖² per row — f32[B], from the precomputed ELL norms."""
         return self.sq[rows]
 
     def cross_nodes(self, rows: jax.Array, centers: jax.Array) -> jax.Array:
@@ -272,6 +352,7 @@ class DenseDocShards(_DocShardsBase):
 
     @property
     def dim(self) -> int:
+        """Vector dimensionality d."""
         return self.x.shape[1]
 
     def score_local(self, xq: jax.Array, ids: jax.Array) -> jax.Array:
@@ -301,6 +382,7 @@ class EllDocShards(_DocShardsBase):
 
     @property
     def dim(self) -> int:
+        """Logical vector dimensionality (the culled vocabulary size)."""
         return self.n_cols
 
     def score_local(self, xq: jax.Array, ids: jax.Array) -> jax.Array:
@@ -335,15 +417,46 @@ def sparse_backend_from_csr(m: Csr, nnz_max: int | None = None) -> EllSparseBack
     )
 
 
+def backend_from_store(source, rows=None) -> VectorBackend:
+    """Materialise store rows as the matching in-memory backend
+    (DESIGN.md §9).
+
+    ``source``: a ``repro.core.store.CorpusStore`` or ``StoreSlice`` —
+    ``kind="dense"`` → :class:`DenseBackend`, ``kind="ell"`` →
+    :class:`EllSparseBackend`. ``rows`` (global ids, default all) is the
+    residency knob: out-of-core consumers (store-backed ``topk_search``,
+    ``build_from_store``) pass one chunk's rows at a time, so only
+    chunk-sized backends ever exist on device."""
+    if source.kind == "dense":
+        return DenseBackend.from_store(source, rows)
+    return EllSparseBackend.from_store(source, rows)
+
+
+def is_store(x) -> bool:
+    """True when ``x`` is an out-of-core corpus handle (a ``CorpusStore`` or
+    ``StoreSlice``) rather than an in-memory corpus/backend."""
+    from repro.core.store import CorpusStore, StoreSlice
+
+    return isinstance(x, (CorpusStore, StoreSlice))
+
+
 def make_backend(x, backend: str = "auto") -> VectorBackend:
     """Normalise (corpus, backend-name) into a backend instance.
 
-    ``x``: dense array, :class:`Csr`, :class:`Ell`-producing Csr, or an
-    existing backend. ``backend``: "auto" (follow the input layout), "dense",
-    or "sparse".
+    ``x``: dense array, :class:`Csr`, :class:`Ell`-producing Csr, an
+    existing backend, or an out-of-core store handle (``CorpusStore`` /
+    ``StoreSlice`` — materialised **whole**; out-of-core paths check
+    :func:`is_store` before calling this). ``backend``: "auto" (follow the
+    input layout), "dense", or "sparse".
     """
     if backend not in ("auto", "dense", "sparse"):
         raise ValueError(f"unknown backend {backend!r}; use auto|dense|sparse")
+    if is_store(x):
+        x = backend_from_store(x)
+        if backend == "dense" and isinstance(x, EllSparseBackend):
+            x = DenseBackend(x.take(jnp.arange(x.n_docs)))
+        elif backend == "sparse" and isinstance(x, DenseBackend):
+            x = sparse_backend_from_csr(csr_from_dense(np.asarray(x.x)))
     if isinstance(x, (DenseBackend, EllSparseBackend)):
         return x
     if isinstance(x, Csr):
@@ -358,15 +471,13 @@ def make_backend(x, backend: str = "auto") -> VectorBackend:
 
             return DenseBackend(ell_to_dense(x))
         # rebuild CSR host-side straight from the padded layout (O(nnz);
-        # never materialises the dense corpus): value-0 slots are padding
-        vals = np.asarray(x.values)
-        cols = np.asarray(x.cols)
-        mask = vals != 0
-        indptr = np.zeros(vals.shape[0] + 1, dtype=np.int32)
-        np.cumsum(mask.sum(axis=1), out=indptr[1:])
+        # never materialises the dense corpus) via the shared ELL→CSR helper
+        data, indices, indptr = _ell_csr_arrays(
+            np.asarray(x.values), np.asarray(x.cols)
+        )
         m = Csr(
-            data=jnp.asarray(vals[mask]),
-            indices=jnp.asarray(cols[mask].astype(np.int32)),
+            data=jnp.asarray(data),
+            indices=jnp.asarray(indices),
             indptr=jnp.asarray(indptr),
             n_cols=x.n_cols,
         )

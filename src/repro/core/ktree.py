@@ -652,6 +652,60 @@ def build(
     return tree
 
 
+def build_from_store(
+    store,
+    order: int,
+    key: Optional[jax.Array] = None,
+    batch_size: int = 256,
+    medoid: bool = False,
+    max_nodes: Optional[int] = None,
+) -> KTree:
+    """Streaming out-of-core build: insert an on-disk corpus batch-by-batch
+    (paper §1: "this tree structure allows for efficient disk based
+    implementations where space requirements exceed that of main memory";
+    DESIGN.md §9).
+
+    ``store``: a ``repro.core.store.CorpusStore`` (dense or ELL blocks) or a
+    ``StoreSlice``. Each batch's rows are fetched from disk through the
+    store's LRU block cache and materialised as a *batch-sized* backend — at
+    any moment the resident state is the tree arrays (centroids + structure),
+    one batch of document vectors, and the store's bounded block cache. The
+    K-tree's incremental insert is what makes this possible: leaves absorb
+    each batch and the split cascade runs on resident tree pages only.
+
+    Runs the exact wave/split schedule of :func:`build` (same batching, same
+    PRNG consumption), so the resulting tree is **bit-identical** to an
+    in-memory ``build(corpus, ...)`` over the same corpus and arguments —
+    tests pin this for both block layouts."""
+    from repro.core.backend import backend_from_store
+
+    n = store.n_docs
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if max_nodes is None:
+        max_nodes = suggested_max_nodes(n, order)
+    tree = ktree_init(max_nodes, order, store.dim, medoid=medoid, dtype=jnp.float32)
+
+    for start in range(0, n, batch_size):
+        idx = np.arange(start, min(start + batch_size, n))
+        pad = batch_size - idx.size
+        ids_np = np.concatenate([idx, np.full(pad, -1)]).astype(np.int32)
+        # padding rows fetch corpus row 0, exactly like build's safe gather
+        be = backend_from_store(store, np.where(ids_np >= 0, ids_np, 0))
+        rows = jnp.arange(batch_size, dtype=jnp.int32)
+        doc_ids = jnp.asarray(ids_np)
+        valid_np = ids_np >= 0
+        while valid_np.any():
+            levels = int(tree.depth) - 1
+            tree, accepted = _insert_wave(
+                tree, be, rows, doc_ids, jnp.asarray(valid_np),
+                jnp.int32(levels), max_levels=_levels_bucket(levels),
+            )
+            valid_np &= ~np.asarray(accepted)
+            tree, key = _split_all_overflowing(tree, key)
+    return tree
+
+
 def insert(
     tree: KTree, x, doc_ids, key: Optional[jax.Array] = None
 ) -> KTree:
@@ -701,20 +755,27 @@ def extract_assignment(tree: KTree, n_docs: int) -> Tuple[np.ndarray, int]:
     return out, len(leaves)
 
 
-def chunked_query_rows(n: int, chunk: int):
-    """Yield (rows_np, rows_dev i32) slices covering [0, n) for batched query
-    consumers. Device rows are padded (repeating the last row) to the next
-    power-of-two bucket ≤ ``chunk`` — same bucketing trick as
-    :func:`_levels_bucket`, so jitted callers compile once per bucket instead
-    of once per remainder size, and short query sets don't pay full-chunk
-    scoring work."""
+def padded_chunk_rows(n: int, chunk: int):
+    """Yield (rows_np, padded host row ids) slices covering [0, n): each
+    chunk's ids padded (repeating the last row) to the next power-of-two
+    bucket ≤ ``chunk`` — same bucketing trick as :func:`_levels_bucket`, so
+    jitted consumers compile once per bucket instead of once per remainder
+    size. Single source of truth for chunk slicing: the in-memory query path
+    (:func:`chunked_query_rows`) and the store-backed path (DESIGN.md §9)
+    both derive from it, which is what keeps their chunk shapes — and hence
+    answers — bit-identical."""
     for s in range(0, n, chunk):
         rows_np = np.arange(s, min(s + chunk, n))
         pad = _levels_bucket(rows_np.size) - rows_np.size
-        rows = jnp.asarray(
-            np.concatenate([rows_np, np.full(pad, rows_np[-1])]).astype(np.int32)
-        )
-        yield rows_np, rows
+        yield rows_np, np.concatenate([rows_np, np.full(pad, rows_np[-1])])
+
+
+def chunked_query_rows(n: int, chunk: int):
+    """Yield (rows_np, rows_dev i32) slices covering [0, n) for batched query
+    consumers — :func:`padded_chunk_rows` with the padded ids placed on
+    device."""
+    for rows_np, padded in padded_chunk_rows(n, chunk):
+        yield rows_np, jnp.asarray(padded.astype(np.int32))
 
 
 def assign_via_tree(tree: KTree, x, chunk: int = 1024) -> np.ndarray:

@@ -32,6 +32,13 @@ dispatch-ahead pipeline (device compute overlaps D2H copy-out),
 ``topk_search_sharded`` runs the leaf scoring shard-parallel over a
 row-sharded corpus with an exact O(B·k·n_shards) top-k merge, and
 ``AnswerCache``/``topk_search_cached`` put an LRU over repeated queries.
+
+Out-of-core (DESIGN.md §9): ``topk_search`` also accepts a disk-backed
+``CorpusStore``/``StoreSlice`` as the query source — each chunk's rows are
+fetched from the store's block cache and materialised as a chunk-sized
+backend, and the same dispatch-ahead pipeline overlaps the next chunk's disk
+read with the previous chunk's device compute. Answers are bit-identical to
+the in-memory path.
 """
 from __future__ import annotations
 
@@ -50,9 +57,13 @@ from repro.core.backend import (
     DocShards,
     EllDocShards,
     VectorBackend,
+    backend_from_store,
+    is_store,
     make_backend,
 )
-from repro.core.ktree import KTree, _levels_bucket, chunked_query_rows, leaf_nodes
+from repro.core.ktree import (
+    KTree, _levels_bucket, chunked_query_rows, leaf_nodes, padded_chunk_rows,
+)
 from repro.kernels.ref import topk_from_dist, topk_merge_ref
 
 
@@ -151,12 +162,18 @@ def _beam_search(
     return docs.astype(jnp.int32), dist
 
 
-def _pipeline_chunks(n: int, chunk: int, pipeline: int, dispatch, docs_out, dist_out):
+def _pipeline_chunks(chunks, pipeline: int, dispatch, docs_out, dist_out):
     """Dispatch-ahead chunk loop (DESIGN.md §8): keep up to ``pipeline`` chunks
     in flight, copying out the oldest only once newer chunks are already
     dispatched — device compute overlaps the host-blocking D2H fetch instead of
     serialising behind it. ``pipeline=1`` reproduces the old synchronous loop
-    (fetch immediately after each dispatch)."""
+    (fetch immediately after each dispatch).
+
+    ``chunks`` yields ``(rows_np, payload)`` pairs and ``dispatch(payload)``
+    returns the chunk's in-flight device result. For store-backed queries the
+    payload carries the chunk's global row ids and ``dispatch`` starts with a
+    disk read — the same schedule then overlaps chunk i+1's block fetch with
+    chunk i's device compute (DESIGN.md §9)."""
     depth = max(int(pipeline), 1)
     pending = collections.deque()
 
@@ -166,8 +183,8 @@ def _pipeline_chunks(n: int, chunk: int, pipeline: int, dispatch, docs_out, dist
         docs_out[rows_np] = docs[: rows_np.size]
         dist_out[rows_np] = dist[: rows_np.size]
 
-    for rows_np, rows in chunked_query_rows(n, chunk):
-        pending.append((rows_np, dispatch(rows)))
+    for rows_np, payload in chunks:
+        pending.append((rows_np, dispatch(payload)))
         while len(pending) >= depth:
             drain_one()
     while pending:
@@ -180,7 +197,10 @@ def topk_search(
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k ANN document search with beam-width recall control.
 
-    ``q``: dense vectors, a Csr matrix, or a backend. Returns
+    ``q``: dense vectors, a Csr matrix, a backend, or a disk-backed
+    ``CorpusStore``/``StoreSlice`` (DESIGN.md §9 — rows are fetched
+    block-by-block from disk, chunk backends replace the monolithic array,
+    and answers stay bit-identical to the in-memory path). Returns
     (doc_ids i32[B, k], sqdist f32[B, k]) ascending per query; padded entries
     are (−1, +inf). ``beam=1`` is the greedy single-path descent; wider beams
     trade ~beam× more scored candidates for recall (benchmarks/query_recall.py
@@ -190,27 +210,45 @@ def topk_search(
     old synchronous loop — benchmarks/query_throughput.py measures the gap)."""
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
-    be = make_backend(q)
-    if be.dim != tree.dim:
+    store = q if is_store(q) else None
+    be = None if store is not None else make_backend(q)
+    src = store if store is not None else be
+    if src.dim != tree.dim:
         raise ValueError(
-            f"query dim {be.dim} != tree dim {tree.dim} "
+            f"query dim {src.dim} != tree dim {tree.dim} "
             "(was the index built over a different corpus?)"
         )
     levels = int(tree.depth) - 1
     max_levels = _levels_bucket(levels)
-    n = be.n_docs
+    n = src.n_docs
     docs_out = np.full((n, k), -1, np.int32)
     dist_out = np.full((n, k), np.inf, np.float32)
     if n == 0:
         return docs_out, dist_out
 
-    def dispatch(rows):
-        return _beam_search(
-            tree, be, rows, jnp.int32(levels),
-            max_levels=max_levels, beam=beam, k=k,
-        )
+    if store is not None:
+        # out-of-core: the chunk's rows are read from the store's block cache
+        # (a host disk fetch) and dispatched as a chunk-sized backend; with
+        # pipeline ≥ 2 the next chunk's read overlaps this chunk's compute
+        def dispatch(padded_np):
+            be_c = backend_from_store(store, padded_np)
+            rows = jnp.arange(padded_np.size, dtype=jnp.int32)
+            return _beam_search(
+                tree, be_c, rows, jnp.int32(levels),
+                max_levels=max_levels, beam=beam, k=k,
+            )
 
-    _pipeline_chunks(n, chunk, pipeline, dispatch, docs_out, dist_out)
+        chunks = padded_chunk_rows(n, chunk)
+    else:
+        def dispatch(rows):
+            return _beam_search(
+                tree, be, rows, jnp.int32(levels),
+                max_levels=max_levels, beam=beam, k=k,
+            )
+
+        chunks = chunked_query_rows(n, chunk)
+
+    _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out)
     return docs_out, dist_out
 
 
@@ -394,7 +432,8 @@ def topk_search_sharded(
     def dispatch(rows):
         return fn(tree, qbe, rows, jnp.int32(levels), shards)
 
-    _pipeline_chunks(n, chunk, pipeline, dispatch, docs_out, dist_out)
+    _pipeline_chunks(chunked_query_rows(n, chunk), pipeline, dispatch,
+                     docs_out, dist_out)
     return docs_out, dist_out
 
 
@@ -416,7 +455,15 @@ class AnswerCache:
     the cache whenever a different index object shows up — KTree is an
     immutable pytree (``insert`` returns a *new* tree), so object identity is
     a sound invalidation token; :func:`topk_search_cached` binds on every
-    call, making post-insert and cross-tree staleness impossible."""
+    call, making post-insert and cross-tree staleness impossible.
+
+    Store-backed corpora add a second identity axis: the tree object can stay
+    the same while the on-disk corpus it addresses is regenerated in place
+    (same path, new blocks) — object identity alone would then serve answers
+    whose doc ids point at different documents. ``bind(index, corpus_token)``
+    closes that hole: pass the store's ``manifest_hash`` (a content hash over
+    the per-block digests, DESIGN.md §9) and any token change flushes the
+    cache."""
 
     def __init__(self, capacity: int):
         if capacity < 1:
@@ -426,19 +473,26 @@ class AnswerCache:
             collections.OrderedDict()
         )
         self._index = None
+        self._corpus_token = None
         self.hits = 0
         self.misses = 0
 
-    def bind(self, index) -> None:
-        """Tie cached answers to one index object; a different one (a new tree
-        after insert, another tree entirely) flushes all entries. The bound
-        index is held strongly, so its id can never be recycled while bound."""
-        if index is not self._index:
+    def bind(self, index, corpus_token: Optional[str] = None) -> None:
+        """Tie cached answers to one (index object, corpus content) pair.
+
+        A different index object (a new tree after insert, another tree
+        entirely) or a changed ``corpus_token`` (a store regenerated in place
+        — pass the store's ``manifest_hash``) flushes all entries. The bound
+        index is held strongly, so its id can never be recycled while
+        bound."""
+        if index is not self._index or corpus_token != self._corpus_token:
             self._entries.clear()
             self._index = index
+            self._corpus_token = corpus_token
 
     @staticmethod
     def make_key(row: np.ndarray, k: int, beam: int) -> bytes:
+        """Content key: blake2b-128 over (raw row bytes, dtype, k, beam)."""
         h = hashlib.blake2b(digest_size=16)
         row = np.ascontiguousarray(row)
         h.update(row.tobytes())
@@ -456,6 +510,8 @@ class AnswerCache:
         return val
 
     def put(self, key: bytes, value: Tuple[np.ndarray, np.ndarray]) -> None:
+        """Insert (docs, dists) at ``key``, evicting LRU entries over
+        capacity."""
         self._entries[key] = value
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
@@ -466,6 +522,7 @@ class AnswerCache:
 
     @property
     def stats(self) -> dict:
+        """hits/misses/hit_rate/size/capacity for the serving report."""
         total = self.hits + self.misses
         return dict(
             hits=self.hits, misses=self.misses,
@@ -478,14 +535,18 @@ def topk_search_cached(
     tree: KTree, q, cache: AnswerCache, k: int = 10, beam: int = 4,
     chunk: int = 512,
     search_fn: Optional[Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]]] = None,
+    corpus_token: Optional[str] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """:func:`topk_search` through an :class:`AnswerCache`: hit rows are served
     from the cache, miss rows (deduplicated within the batch) go through one
     engine call, and every computed answer is inserted. ``q`` must be dense
     rows (content hashing addresses raw bytes). ``search_fn`` overrides the
     engine for the miss batch — e.g. a :func:`topk_search_sharded` closure
-    (it must answer over the *same* ``tree``: the cache binds to it)."""
-    cache.bind(tree)
+    (it must answer over the *same* ``tree``: the cache binds to it).
+    ``corpus_token``: pass the corpus store's ``manifest_hash`` when the
+    served corpus lives on disk — answers then invalidate if the store is
+    regenerated in place under an unchanged tree object (DESIGN.md §9)."""
+    cache.bind(tree, corpus_token)
     x_q = np.asarray(q)
     n = x_q.shape[0]
     docs = np.full((n, k), -1, np.int32)
@@ -545,14 +606,47 @@ def brute_force_topk(
             de = min(ds + doc_block, n)
             xb = x_all[ds:de]
             d = q_sq[qs:qe, None] - 2.0 * qb @ xb.T + (xb ** 2).sum(1)[None, :]
-            sel = np.argsort(d, axis=1, kind="stable")[:, :k]
-            run_ids = np.concatenate([run_ids, sel + ds], axis=1)
-            run_d = np.concatenate([run_d, np.take_along_axis(d, sel, 1)], axis=1)
-            keep = np.argsort(run_d, axis=1, kind="stable")[:, :k]
-            run_ids = np.take_along_axis(run_ids, keep, 1)
-            run_d = np.take_along_axis(run_d, keep, 1)
+            run_ids, run_d = _merge_topk(run_ids, run_d, d, ds, k)
         out[qs:qe] = run_ids
     return out
+
+
+def _merge_topk(run_ids, run_d, d, offset, k):
+    """One running stable top-k merge step: fold a tile's distance matrix
+    ``d`` [nq, C] (candidate ids ``offset + column``) into the running
+    (ids, dists) [nq, ≤k]. Stable tie order is preserved — running entries
+    precede the tile's, and per-tile stable argsorts keep equal-distance
+    candidates in ascending id order. Shared by :func:`brute_force_topk` and
+    :func:`brute_force_topk_stream` so the two ground truths cannot
+    diverge."""
+    sel = np.argsort(d, axis=1, kind="stable")[:, :k]
+    run_ids = np.concatenate([run_ids, sel + offset], axis=1)
+    run_d = np.concatenate([run_d, np.take_along_axis(d, sel, 1)], axis=1)
+    keep = np.argsort(run_d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(run_ids, keep, 1),
+            np.take_along_axis(run_d, keep, 1))
+
+
+def brute_force_topk_stream(x_q: np.ndarray, blocks, k: int) -> np.ndarray:
+    """Exact k-NN doc ids [nq, ≤k] against a corpus streamed as
+    ``(row_offset, dense block rows)`` pairs — the out-of-core ground truth
+    (DESIGN.md §9): only one block is resident at a time.
+
+    Same distances, ties, and running merge as :func:`brute_force_topk`
+    (shared :func:`_merge_topk` step); block boundaries are invisible to the
+    result. ``launch/serve.py --store`` feeds it store blocks (ELL blocks
+    densified host-side)."""
+    x_q = np.asarray(x_q)
+    nq = x_q.shape[0]
+    q_sq = (x_q ** 2).sum(1)
+    run_ids = np.empty((nq, 0), dtype=np.intp)
+    run_d = np.empty((nq, 0), dtype=np.float32)
+    for lo, xb in blocks:
+        xb = np.asarray(xb)
+        d = (q_sq[:, None] - 2.0 * x_q @ xb.T + (xb ** 2).sum(1)[None, :]
+             ).astype(np.float32)
+        run_ids, run_d = _merge_topk(run_ids, run_d, d, lo, k)
+    return run_ids
 
 
 def recall_at_k(docs: np.ndarray, true_k: np.ndarray) -> float:

@@ -1,0 +1,469 @@
+"""Out-of-core corpus store — the paper's "efficient disk based
+implementations where space requirements exceed that of main memory"
+(DESIGN.md §9).
+
+The corpus lives on disk as **fixed-size, chunk-aligned blocks** plus a small
+JSON manifest; only a bounded set of blocks is ever resident. Two block
+layouts mirror the two vector backends (DESIGN.md §5):
+
+- ``kind="dense"`` — each block is one ``.npy`` file holding
+  ``f[block_docs, d]`` rows;
+- ``kind="ell"``   — each block is a pair of ``.npy`` files,
+  ``values f[block_docs, nnz_max]`` + ``cols i32[block_docs, nnz_max]``
+  (the ELL layout the ``ell_spmm`` kernel scores; padding slots are
+  value 0 / col 0).
+
+The last block is zero-padded to ``block_docs`` so every file has the same
+shape (mmap-friendly); the manifest records the true ``n_docs`` and readers
+never address the padding.
+
+Residency is governed by :class:`BlockCache` — an LRU over decoded blocks
+with a byte budget. Sequential consumers (streaming build, store-backed
+queries) touch blocks in row order, so a budget of even one block streams the
+whole corpus through bounded memory; random access degrades gracefully to
+re-reads. Each block file's blake2b digest is recorded in the manifest at
+write time, and :func:`CorpusStore.manifest_hash` hashes the canonical
+manifest — a content token that changes whenever the corpus is regenerated in
+place (the answer-cache staleness guard keys on it, DESIGN.md §8/§9).
+
+This module is deliberately numpy/host-only (no jax imports): stores cross no
+jit boundary. The device-side seam is ``repro.core.backend.from_store`` —
+chunk-sized in-memory backends materialised from store rows on demand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_TAG = "ktree-store-v1"
+DEFAULT_BLOCK_DOCS = 4096
+DEFAULT_BUDGET_BYTES = 256 * 1024 * 1024
+
+
+class BlockCache:
+    """LRU cache of decoded corpus blocks under a byte budget.
+
+    ``loader(block_id) -> dict[str, np.ndarray]`` decodes one block from disk;
+    the cache accounts ``nbytes`` of every array it holds and evicts
+    least-recently-used blocks once the budget is exceeded. A single block
+    larger than the whole budget is still admitted (the floor of residency is
+    one block — nothing works below that), evicting everything else.
+
+    ``hits``/``misses``/``evictions`` feed the out-of-core bench and the
+    serving report (benchmarks/oocore.py, ``launch/serve.py --store``).
+    """
+
+    def __init__(self, budget_bytes: int, loader):
+        if budget_bytes < 1:
+            raise ValueError(f"budget_bytes must be ≥ 1, got {budget_bytes}")
+        self.budget_bytes = int(budget_bytes)
+        self._loader = loader
+        self._blocks: "Dict[int, Dict[str, np.ndarray]]" = {}
+        self._lru: List[int] = []  # least-recent first
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def _block_bytes(arrays: Dict[str, np.ndarray]) -> int:
+        """Total decoded size of one block's arrays."""
+        return sum(int(a.nbytes) for a in arrays.values())
+
+    def get(self, block_id: int) -> Dict[str, np.ndarray]:
+        """The decoded arrays of ``block_id``, loading + evicting as needed."""
+        if block_id in self._blocks:
+            self.hits += 1
+            self._lru.remove(block_id)
+            self._lru.append(block_id)
+            return self._blocks[block_id]
+        self.misses += 1
+        arrays = self._loader(block_id)
+        self._bytes += self._block_bytes(arrays)
+        self._blocks[block_id] = arrays
+        self._lru.append(block_id)
+        while self._bytes > self.budget_bytes and len(self._lru) > 1:
+            old = self._lru.pop(0)
+            self._bytes -= self._block_bytes(self._blocks.pop(old))
+            self.evictions += 1
+        return arrays
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes currently held across all resident blocks."""
+        return self._bytes
+
+    @property
+    def stats(self) -> dict:
+        """hit/miss/eviction counters + residency for reports."""
+        total = self.hits + self.misses
+        return dict(
+            hits=self.hits, misses=self.misses, evictions=self.evictions,
+            hit_rate=self.hits / total if total else 0.0,
+            resident_bytes=self._bytes, resident_blocks=len(self._lru),
+            budget_bytes=self.budget_bytes,
+        )
+
+
+def _digest(path: str) -> str:
+    """blake2b-128 hex digest of one block file's raw bytes."""
+    h = hashlib.blake2b(digest_size=16)
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _save_block(dir_path: str, name: str, arr: np.ndarray) -> Tuple[str, str]:
+    """Write one block array; returns (file name, content digest)."""
+    fname = name + ".npy"
+    np.save(os.path.join(dir_path, fname), arr)
+    return fname, _digest(os.path.join(dir_path, fname))
+
+
+def _install_dir(tmp: str, path: str) -> None:
+    """Install a fully-written ``tmp`` directory at ``path`` without ever
+    destroying existing data before its replacement is in place: the old
+    directory is moved aside, the new one renamed in, and only then is the
+    old one removed. A crash mid-replace leaves the previous data at
+    ``path + ".old"`` instead of gone."""
+    old = path.rstrip("/") + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    had_old = os.path.exists(path)
+    if had_old:
+        os.rename(path, old)
+    os.rename(tmp, path)
+    if had_old:
+        shutil.rmtree(old)
+
+
+def _pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:
+    """Zero-pad ``arr`` along axis 0 up to ``rows`` (fixed-size blocks)."""
+    if arr.shape[0] == rows:
+        return np.ascontiguousarray(arr)
+    pad = np.zeros((rows - arr.shape[0],) + arr.shape[1:], arr.dtype)
+    return np.concatenate([np.ascontiguousarray(arr), pad], axis=0)
+
+
+def save_store(path: str, corpus, block_docs: int = DEFAULT_BLOCK_DOCS) -> str:
+    """Write a corpus to an on-disk block store; returns ``path``.
+
+    ``corpus``: a dense ``f[N, d]`` array (→ ``kind="dense"``), a
+    :class:`repro.sparse.Csr`, or an existing
+    :class:`repro.core.backend.EllSparseBackend` / ``DenseBackend``
+    (→ layout follows the backend). ``block_docs`` is the fixed rows-per-block
+    granularity (the unit of disk I/O and cache residency).
+
+    The write lands in ``path.tmp`` and is installed by rename, so a crash
+    mid-write never leaves a half-readable store at ``path``. Replacing an
+    existing store moves the old directory aside (``path.old``) before the
+    rename and removes it only after the new store is in place — a crash in
+    the replace window leaves the previous corpus intact at ``path.old``
+    (plus possibly the finished rewrite at ``path.tmp``), never destroyed.
+    Readers opened before the rewrite keep their (now stale) manifest, which
+    is exactly what :func:`CorpusStore.manifest_hash` exists to detect.
+    """
+    from repro.core.backend import DenseBackend, EllSparseBackend, make_backend
+    from repro.sparse.csr import Csr
+
+    if block_docs < 1:
+        raise ValueError(f"block_docs must be ≥ 1, got {block_docs}")
+    if isinstance(corpus, Csr):
+        corpus = make_backend(corpus, "sparse")
+    if isinstance(corpus, (DenseBackend, EllSparseBackend)) is False:
+        corpus = make_backend(np.asarray(corpus), "dense")
+
+    tmp = path.rstrip("/") + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    n_docs = corpus.n_docs
+    n_blocks = max(-(-n_docs // block_docs), 1)
+    blocks = []
+    if isinstance(corpus, DenseBackend):
+        x = np.asarray(corpus.x)
+        kind, dim, nnz_max = "dense", int(x.shape[1]), None
+        dtype = str(x.dtype)
+        for i in range(n_blocks):
+            blk = _pad_rows(x[i * block_docs:(i + 1) * block_docs], block_docs)
+            fname, dig = _save_block(tmp, f"dense_{i:05d}", blk)
+            blocks.append({"i": i, "files": {"x": fname}, "digest": dig})
+    else:
+        values = np.asarray(corpus.values)
+        cols = np.asarray(corpus.cols, dtype=np.int32)
+        kind, dim, nnz_max = "ell", int(corpus.n_cols), int(values.shape[1])
+        dtype = str(values.dtype)
+        for i in range(n_blocks):
+            sl = slice(i * block_docs, (i + 1) * block_docs)
+            fv, dv = _save_block(tmp, f"ell_values_{i:05d}",
+                                 _pad_rows(values[sl], block_docs))
+            fc, dc = _save_block(tmp, f"ell_cols_{i:05d}",
+                                 _pad_rows(cols[sl], block_docs))
+            # digest concatenation follows sorted field-name order ("cols"
+            # then "values") — the same order open_store's verify recomputes
+            blocks.append({"i": i, "files": {"values": fv, "cols": fc},
+                           "digest": dc + dv})
+
+    manifest = {
+        "format": FORMAT_TAG, "kind": kind, "n_docs": int(n_docs),
+        "dim": dim, "dtype": dtype, "block_docs": int(block_docs),
+        "n_blocks": int(n_blocks), "nnz_max": nnz_max, "blocks": blocks,
+    }
+    with open(os.path.join(tmp, MANIFEST_NAME), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    _install_dir(tmp, path)
+    return path
+
+
+@dataclasses.dataclass
+class CorpusStore:
+    """A memory-mapped, block-cached view of an on-disk corpus.
+
+    Open with :func:`open_store`. Exposes the corpus *shape* (``n_docs``,
+    ``dim``, ``kind``, ``nnz_max``) and row access (:meth:`take_rows`) through
+    the :class:`BlockCache`; device-side consumers go through
+    ``repro.core.backend.from_store`` (chunk backends) or
+    ``repro.core.ktree.build_from_store`` (streaming build). A store is a
+    host-side handle — it is **not** a pytree and never crosses jit.
+    """
+
+    path: str
+    manifest: dict
+    cache: BlockCache
+
+    # -- shape / identity ---------------------------------------------------
+    @property
+    def kind(self) -> str:
+        """Block layout: ``"dense"`` or ``"ell"``."""
+        return self.manifest["kind"]
+
+    @property
+    def n_docs(self) -> int:
+        """True corpus row count (excludes last-block padding)."""
+        return self.manifest["n_docs"]
+
+    @property
+    def dim(self) -> int:
+        """Vector dimensionality (``n_cols`` for ELL stores)."""
+        return self.manifest["dim"]
+
+    @property
+    def block_docs(self) -> int:
+        """Rows per fixed-size block (the I/O + residency granule)."""
+        return self.manifest["block_docs"]
+
+    @property
+    def n_blocks(self) -> int:
+        """Number of block files."""
+        return self.manifest["n_blocks"]
+
+    @property
+    def nnz_max(self) -> Optional[int]:
+        """ELL padding width (None for dense stores)."""
+        return self.manifest["nnz_max"]
+
+    @property
+    def nbytes(self) -> int:
+        """Total decoded corpus bytes across all blocks (dense rows or
+        ELL values+cols) — what "corpus exceeds the residency budget" is
+        measured against."""
+        itemsize = np.dtype(self.manifest["dtype"]).itemsize
+        rows = self.n_blocks * self.block_docs
+        if self.kind == "dense":
+            return rows * self.dim * itemsize
+        return rows * self.nnz_max * (itemsize + 4)
+
+    @property
+    def manifest_hash(self) -> str:
+        """Content token: blake2b-128 of the canonical manifest JSON.
+
+        The manifest embeds every block file's digest, so regenerating the
+        corpus in place (same path, different data) yields a different hash —
+        the staleness key for answer caches and manifest-reference
+        checkpoints. Memoised per handle (the manifest is immutable once
+        opened; serving passes this token on every batch)."""
+        h = self.__dict__.get("_manifest_hash")
+        if h is None:
+            blob = json.dumps(self.manifest, sort_keys=True).encode()
+            h = hashlib.blake2b(blob, digest_size=16).hexdigest()
+            self.__dict__["_manifest_hash"] = h
+        return h
+
+    # -- block access -------------------------------------------------------
+    def _load_block(self, i: int) -> Dict[str, np.ndarray]:
+        """Decode block ``i`` from disk (mmap → private in-memory copy, so the
+        cache's byte accounting matches actual residency)."""
+        entry = self.manifest["blocks"][i]
+        out = {}
+        for name, fname in entry["files"].items():
+            arr = np.load(os.path.join(self.path, fname), mmap_mode="r")
+            out[name] = np.array(arr)  # materialise: residency is the point
+        return out
+
+    def read_block(self, i: int) -> Dict[str, np.ndarray]:
+        """Block ``i``'s arrays through the LRU cache (padded to
+        ``block_docs`` rows — use :meth:`block_rows` for the valid range)."""
+        if not 0 <= i < self.n_blocks:
+            raise IndexError(f"block {i} out of range [0, {self.n_blocks})")
+        return self.cache.get(i)
+
+    def block_rows(self, i: int) -> Tuple[int, int]:
+        """Global row range ``[lo, hi)`` of valid docs in block ``i``."""
+        lo = i * self.block_docs
+        return lo, min(lo + self.block_docs, self.n_docs)
+
+    def iter_blocks(self) -> Iterator[Tuple[int, int, Dict[str, np.ndarray]]]:
+        """Yield ``(lo, hi, arrays)`` per block in row order — the streaming
+        scan pattern (arrays still padded; slice ``[:hi-lo]``)."""
+        for i in range(self.n_blocks):
+            lo, hi = self.block_rows(i)
+            yield lo, hi, self.read_block(i)
+
+    def take_rows(self, rows: np.ndarray) -> Dict[str, np.ndarray]:
+        """Gather arbitrary global rows as host arrays.
+
+        Returns ``{"x": f[B, d]}`` (dense) or
+        ``{"values": f[B, nnz_max], "cols": i32[B, nnz_max]}`` (ELL). Rows are
+        fetched block-by-block through the cache, so a contiguous chunk costs
+        one or two block reads; out-of-range ids raise."""
+        rows = np.asarray(rows)
+        if rows.size and (rows.min() < 0 or rows.max() >= self.n_docs):
+            raise IndexError(
+                f"row ids outside [0, {self.n_docs}): "
+                f"[{rows.min()}, {rows.max()}]"
+            )
+        names = ("x",) if self.kind == "dense" else ("values", "cols")
+        out = {
+            name: np.empty(
+                (rows.size,) + self._field_shape(name),
+                self._field_dtype(name),
+            )
+            for name in names
+        }
+        blk = rows // self.block_docs
+        for b in np.unique(blk):
+            arrays = self.read_block(int(b))
+            sel = np.nonzero(blk == b)[0]
+            local = rows[sel] - int(b) * self.block_docs
+            for name in names:
+                out[name][sel] = arrays[name][local]
+        return out
+
+    def _field_shape(self, name: str) -> Tuple[int, ...]:
+        """Per-row trailing shape of a stored field."""
+        return (self.dim,) if name == "x" else (self.nnz_max,)
+
+    def _field_dtype(self, name: str):
+        """Dtype of a stored field."""
+        return np.int32 if name == "cols" else np.dtype(self.manifest["dtype"])
+
+    def view(self, lo: int = 0, hi: Optional[int] = None) -> "StoreSlice":
+        """A row-range view ``[lo, hi)`` of this store — same cache, same
+        disk; lets callers query a subset (e.g. the first ``nq`` docs) without
+        materialising it."""
+        return StoreSlice(self, lo, self.n_docs if hi is None else hi)
+
+
+@dataclasses.dataclass
+class StoreSlice:
+    """A contiguous row-range view over a :class:`CorpusStore`.
+
+    Duck-types the store's read surface (``kind``/``dim``/``nnz_max``/
+    ``take_rows``) with local row ids ``[0, n_docs)`` mapped onto the parent's
+    ``[lo, hi)`` — accepted anywhere a store is (store-backed
+    ``topk_search``, ``from_store`` chunk backends)."""
+
+    store: CorpusStore
+    lo: int
+    hi: int
+
+    def __post_init__(self):
+        if not 0 <= self.lo <= self.hi <= self.store.n_docs:
+            raise ValueError(
+                f"slice [{self.lo}, {self.hi}) outside "
+                f"[0, {self.store.n_docs}]"
+            )
+
+    @property
+    def kind(self) -> str:
+        """Parent store's block layout."""
+        return self.store.kind
+
+    @property
+    def n_docs(self) -> int:
+        """Rows in this view."""
+        return self.hi - self.lo
+
+    @property
+    def dim(self) -> int:
+        """Parent store's vector dimensionality."""
+        return self.store.dim
+
+    @property
+    def nnz_max(self) -> Optional[int]:
+        """Parent store's ELL padding width (None for dense)."""
+        return self.store.nnz_max
+
+    @property
+    def manifest_hash(self) -> str:
+        """Parent store's content token (slices share corpus identity)."""
+        return self.store.manifest_hash
+
+    def take_rows(self, rows: np.ndarray) -> Dict[str, np.ndarray]:
+        """Gather view-local rows (offset into the parent's range);
+        ids outside ``[0, n_docs)`` of the *view* raise — offsetting must not
+        silently reinterpret them as other parent rows."""
+        rows = np.asarray(rows)
+        if rows.size and (rows.min() < 0 or rows.max() >= self.n_docs):
+            raise IndexError(
+                f"row ids outside the view's [0, {self.n_docs}): "
+                f"[{rows.min()}, {rows.max()}]"
+            )
+        return self.store.take_rows(rows + self.lo)
+
+
+def open_store(
+    path: str, budget_bytes: int = DEFAULT_BUDGET_BYTES, verify: bool = False
+) -> CorpusStore:
+    """Open an on-disk corpus store with an LRU residency budget.
+
+    ``budget_bytes`` bounds decoded-block residency (the out-of-core dial —
+    benchmarks/oocore.py sweeps it). ``verify=True`` re-hashes every block
+    file against the manifest digests before returning (slow; integrity
+    check after a copy)."""
+    mpath = os.path.join(path, MANIFEST_NAME)
+    if not os.path.exists(mpath):
+        raise FileNotFoundError(f"no corpus store at {path} (missing {MANIFEST_NAME})")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != FORMAT_TAG:
+        raise ValueError(
+            f"{path}: unknown store format {manifest.get('format')!r} "
+            f"(expected {FORMAT_TAG!r})"
+        )
+    if verify:
+        for entry in manifest["blocks"]:
+            # field-name-sorted order, matching save_store's concatenation
+            # (manifest JSON round-trips with sort_keys, so .values() order
+            # is already sorted — sorting explicitly keeps it load-order-proof)
+            dig = "".join(
+                _digest(os.path.join(path, entry["files"][name]))
+                for name in sorted(entry["files"])
+            )
+            if dig != entry["digest"]:
+                raise ValueError(
+                    f"{path}: block {entry['i']} content does not match its "
+                    "manifest digest (corrupt or partially rewritten store)"
+                )
+    store = CorpusStore(path=path, manifest=manifest, cache=None)  # type: ignore[arg-type]
+    store.cache = BlockCache(budget_bytes, store._load_block)
+    return store

@@ -82,3 +82,51 @@ def corpus_backend(spec, representation: str = "sparse_medoid", seed: int = 0):
     culled, labels = prepared_corpus(spec, seed=seed)
     kind = "dense" if representation == "dense" else "sparse"
     return make_backend(culled, kind), labels
+
+
+def corpus_store(
+    spec, path: str, representation: str = "sparse_medoid", seed: int = 0,
+    block_docs: int = 4096, reuse: bool = True,
+):
+    """Prepared corpus → on-disk block store (DESIGN.md §9), returns ``path``.
+
+    Runs :func:`corpus_backend` (term counts → TF-IDF → cull → unit rows →
+    backend layout) and writes the result with
+    ``repro.core.store.save_store`` — dense representation lands as dense
+    blocks, ``sparse_medoid`` as ELL blocks. A sidecar ``PIPELINE.json``
+    records the full generation request (every spec field, representation,
+    seed, block_docs). With ``reuse=True`` (default) an existing store at
+    ``path`` is kept as-is *only if* that sidecar matches the current
+    request exactly; any difference — a different spec (even one with the
+    same shape), seed, representation, or blocking — raises rather than
+    silently serving a stale corpus. The preparation pipeline is
+    deterministic in (spec, seed), so a reused matching store is
+    byte-identical to a rewrite."""
+    import dataclasses
+    import json
+    import os
+
+    from repro.core.store import MANIFEST_NAME, save_store
+
+    request = {
+        "spec": dataclasses.asdict(spec), "representation": representation,
+        "seed": seed, "block_docs": block_docs,
+    }
+    sidecar = os.path.join(path, "PIPELINE.json")
+    if reuse and os.path.exists(os.path.join(path, MANIFEST_NAME)):
+        recorded = None
+        if os.path.exists(sidecar):
+            with open(sidecar) as f:
+                recorded = json.load(f)
+        if recorded != request:
+            raise ValueError(
+                f"existing store at {path} was generated from a different "
+                f"request: recorded {recorded}, current {request} — point "
+                "--store at a fresh directory or delete the old one"
+            )
+        return path
+    backend, _ = corpus_backend(spec, representation=representation, seed=seed)
+    save_store(path, backend, block_docs=block_docs)
+    with open(sidecar, "w") as f:
+        json.dump(request, f, indent=1, sort_keys=True)
+    return path

@@ -92,11 +92,136 @@ def serve_retrieval(args):
           f"ANN hit in brute top-10: {in_topk}")
 
 
+def serve_paper_store(args):
+    """Out-of-core K-tree serving (DESIGN.md §9): corpus in an on-disk block
+    store (``--store DIR``) with ``--budget-mb`` of block-cache residency;
+    the index streams in block-by-block (``build_from_store``) or restores by
+    manifest reference (``--ckpt`` → ``save_index``/``restore_index``), and
+    queries are answered straight from the store — the full corpus is never
+    resident."""
+    from repro.core import ktree as kt
+    from repro.core.query import (
+        AnswerCache, brute_force_topk_stream, recall_at_k, topk_search,
+        topk_search_cached,
+    )
+    from repro.ckpt import restore_index, save_index
+    from repro.core.store import open_store
+    from repro.data.pipeline import corpus_store
+    from repro.data.synth_corpus import scaled
+
+    if args.mesh > 1:
+        raise SystemExit(
+            "--store does not compose with --mesh yet: store-backed sharded "
+            "serving is an open ROADMAP item (topk_search_sharded would "
+            "materialise the corpus, defeating the residency budget); drop "
+            "--mesh or drop --store"
+        )
+    spec = registry.get(args.arch)
+    rep = spec.cfg.get("representation", "dense")
+    corpus_spec = scaled(spec.cfg["corpus"], n_docs=args.n_docs, culled=args.culled)
+    budget = max(int(args.budget_mb * 1024 * 1024), 1)
+
+    if args.ckpt and os.path.isdir(args.ckpt):
+        # restore by manifest reference: the checkpoint names the store it
+        # was built over (and its content hash) — serve that one, don't
+        # touch/describe the --store path it may or may not equal
+        t0 = time.time()
+        tree, store = restore_index(args.ckpt, budget_bytes=budget)
+        print(f"restored store-backed index from {args.ckpt} in "
+              f"{time.time()-t0:.2f}s (depth={int(tree.depth)}, "
+              f"nodes={int(tree.n_nodes)}, store {store.path}: "
+              f"{store.n_docs} docs, {store.n_blocks} blocks × "
+              f"{store.block_docs}, budget {budget/1e6:.1f}MB)")
+    else:
+        t0 = time.time()
+        corpus_store(corpus_spec, args.store, representation=rep,
+                     block_docs=args.block_docs)
+        store = open_store(args.store, budget_bytes=budget)
+        print(f"store {args.store}: {store.n_docs} docs, {store.n_blocks} "
+              f"blocks × {store.block_docs} docs ({store.nbytes/1e6:.1f}MB "
+              f"on disk, budget {budget/1e6:.1f}MB) in {time.time()-t0:.2f}s")
+        t0 = time.time()
+        tree = kt.build_from_store(
+            store, order=args.order, medoid=rep == "sparse_medoid",
+            batch_size=256,
+        )
+        print(f"streaming-built K-tree over {store.n_docs} docs in "
+              f"{time.time()-t0:.2f}s (depth={int(tree.depth)}, "
+              f"nodes={int(tree.n_nodes)}, "
+              f"cache: {store.cache.stats['evictions']} evictions, "
+              f"resident {store.cache.resident_bytes/1e6:.1f}MB)")
+        if args.ckpt:
+            print(f"saved index by manifest reference to "
+                  f"{save_index(args.ckpt, tree, store)}")
+
+    nq = min(args.queries, store.n_docs)
+    q_view = store.view(0, nq)
+    x_q = make_dense_rows(store, nq)  # cache keys + ground truth share these
+    run = lambda src: topk_search(tree, src, k=args.k, beam=args.beam)
+    run(q_view)  # warm the jit cache
+    if args.cache:
+        # miss batches are dense rows (content hashing addresses raw bytes),
+        # so the miss engine is the dense-row engine — warm it *outside* the
+        # timed loop, or its first-compile cost lands in the QPS report
+        run(x_q)
+        cache = AnswerCache(args.cache)
+        t0 = time.time()
+        for _ in range(2):  # pass 1 cold-fills, pass 2 replays (hit path)
+            docs, _ = topk_search_cached(
+                tree, x_q, cache, k=args.k, beam=args.beam,
+                search_fn=run, corpus_token=store.manifest_hash,
+            )
+        qps = 2 * nq / max(time.time() - t0, 1e-9)
+        s = cache.stats
+        print(f"cache: hits={s['hits']} misses={s['misses']} "
+              f"hit_rate={s['hit_rate']:.2f} size={s['size']}/{s['capacity']}")
+    else:
+        t0 = time.time()
+        docs, _ = run(q_view)
+        qps = nq / max(time.time() - t0, 1e-9)
+
+    cs = store.cache.stats
+    print(f"store cache: hit_rate={cs['hit_rate']:.2f} "
+          f"evictions={cs['evictions']} resident={cs['resident_bytes']/1e6:.1f}"
+          f"/{cs['budget_bytes']/1e6:.1f}MB")
+    # ground truth streams block-by-block off the store (never fully resident)
+    true = brute_force_topk_stream(x_q, _dense_store_blocks(store), args.k)
+    recall = recall_at_k(docs, true)
+    print(f"{nq} queries: beam={args.beam} k={args.k} "
+          f"recall@{args.k}={recall:.3f} {qps:.0f} QPS "
+          f"({store.kind} store, out-of-core)")
+
+
+def make_dense_rows(store, nq: int) -> np.ndarray:
+    """Densify the first ``nq`` store rows host-side (cache keys hash dense
+    row bytes; ground truth needs dense queries)."""
+    from repro.core.backend import backend_from_store
+
+    be = backend_from_store(store, np.arange(nq))
+    return np.asarray(be.take(jnp.arange(nq, dtype=jnp.int32)))
+
+
+def _dense_store_blocks(store):
+    """Yield ``(row_offset, dense rows)`` per store block for
+    ``brute_force_topk_stream`` — dense blocks as-is, ELL blocks densified by
+    a host-side numpy scatter-add (padding slots are value 0, so they add
+    nothing). One block resident at a time."""
+    for lo, hi, arrays in store.iter_blocks():
+        if store.kind == "dense":
+            yield lo, arrays["x"][: hi - lo].astype(np.float32)
+        else:
+            v, c = arrays["values"][: hi - lo], arrays["cols"][: hi - lo]
+            xb = np.zeros((hi - lo, store.dim), np.float32)
+            np.add.at(xb, (np.arange(hi - lo)[:, None], c), v)
+            yield lo, xb
+
+
 def serve_paper(args):
     """K-tree retrieval serving: build-or-restore the index, answer batched
     top-k beam-search queries (single-device, or shard-parallel with
     ``--mesh N``, optionally through an LRU answer cache with ``--cache C``),
-    report recall@k vs brute force and QPS."""
+    report recall@k vs brute force and QPS. ``--store DIR`` switches to the
+    out-of-core path (:func:`serve_paper_store`)."""
     from repro.core import ktree as kt
     from repro.core.query import (
         AnswerCache, brute_force_topk, recall_at_k, topk_search,
@@ -105,6 +230,9 @@ def serve_paper(args):
     from repro.ckpt import restore_ktree, save_ktree
     from repro.data.pipeline import corpus_backend
     from repro.data.synth_corpus import scaled
+
+    if args.store:
+        return serve_paper_store(args)
 
     spec = registry.get(args.arch)
     rep = spec.cfg.get("representation", "dense")
@@ -214,6 +342,15 @@ def main():
     ap.add_argument("--cache", type=int, default=0, help="LRU answer-cache "
                     "capacity (0 = off); the timed stream runs twice so the "
                     "report shows the hit path")
+    ap.add_argument("--store", default="", help="out-of-core mode: corpus "
+                    "block-store directory (written on first run, reused "
+                    "after); builds stream from disk and queries fetch "
+                    "blocks on demand (DESIGN.md §9). With --ckpt the index "
+                    "checkpoints by manifest reference (save_index)")
+    ap.add_argument("--budget-mb", type=float, default=64.0,
+                    help="block-cache residency budget for --store, in MB")
+    ap.add_argument("--block-docs", type=int, default=1024,
+                    help="rows per store block (the disk I/O granule)")
     args = ap.parse_args()
     spec = registry.get(args.arch)
     if spec.family == "lm":

@@ -1,0 +1,33 @@
+"""Doc-consistency gate (the docs CI job runs the same checks via
+tools/check_docs.py): the covered public API stays fully docstringed and the
+top-level markdown docs stay link-clean."""
+import os
+import sys
+
+_TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools")
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)
+
+import check_docs  # noqa: E402
+
+
+def test_public_api_fully_docstringed():
+    gaps = check_docs.docstring_gaps()
+    assert gaps == [], (
+        "public names missing docstrings (add args/returns/shape docs): "
+        f"{gaps}"
+    )
+
+
+def test_markdown_docs_have_no_dead_links():
+    bad = check_docs.broken_links()
+    assert bad == [], f"dead relative links in docs: {bad}"
+
+
+def test_readme_exists_and_covers_the_map():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    with open(os.path.join(root, "README.md")) as f:
+        text = f.read()
+    for anchor in ("DESIGN.md", "ROADMAP.md", "BENCH_query.json",
+                   "BENCH_oocore.json", "pytest"):
+        assert anchor in text, f"README.md lost its pointer to {anchor}"

@@ -98,6 +98,50 @@ def test_property_suggested_capacity_never_overflows(n, order, sparse, seed):
 
 
 @settings(max_examples=6, deadline=None)
+@given(
+    st.integers(30, 120),    # corpus size
+    st.integers(3, 10),      # order m
+    st.sampled_from([16, 33, 64]),  # store block_docs (incl. non-pow2)
+    st.booleans(),           # sparse backend?
+    st.integers(0, 9999),
+)
+def test_property_streaming_build_invariants(n, order, block_docs, sparse,
+                                             seed):
+    """Out-of-core streaming build (DESIGN.md §9) under random corpus sizes,
+    orders, and block granularities: the full invariant battery must hold, and
+    the tree must be bit-identical to the in-memory build with the same key
+    (the §9 equivalence contract)."""
+    import os
+    import tempfile
+
+    from repro.core.store import open_store, save_store
+
+    rng = np.random.default_rng(seed)
+    x = _random_docs(rng, n, 9, sparse)
+    data = csr_from_dense(x) if sparse else jnp.asarray(x)
+    path = os.path.join(tempfile.mkdtemp(prefix="ktree-store-prop"), "corpus")
+    save_store(path, data, block_docs=block_docs)
+    # a one-block budget forces eviction traffic on every multi-block corpus
+    store = open_store(path, budget_bytes=1)
+    tree = kt.build_from_store(
+        store, order=order, batch_size=32, medoid=sparse,
+        key=jax.random.PRNGKey(seed),
+    )
+    kt.check_invariants(tree, n_docs=n)
+    ref = kt.build(data, order=order, batch_size=32, medoid=sparse,
+                   key=jax.random.PRNGKey(seed))
+    import dataclasses
+
+    for f in dataclasses.fields(ref):
+        if f.metadata.get("static"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f.name)),
+            np.asarray(getattr(tree, f.name)), err_msg=f.name,
+        )
+
+
+@settings(max_examples=6, deadline=None)
 @given(st.integers(3, 8), st.integers(0, 9999))
 def test_property_insertion_order_independence_of_legality(order, seed):
     """Any permutation of the same corpus builds a legal tree holding the

@@ -1,0 +1,369 @@
+"""Out-of-core corpus store (DESIGN.md §9): block round-trips, LRU residency
+budget, store-backed vs in-memory bit-identical build + top-k for both
+backends (uneven last block, k > docs-per-block), manifest-reference
+checkpoints, and the regenerated-in-place staleness guards (restore_index +
+answer-cache corpus token)."""
+import dataclasses
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import restore_index, save_index
+from repro.core import ktree as kt
+from repro.core.backend import backend_from_store, make_backend
+from repro.core.query import AnswerCache, topk_search, topk_search_cached
+from repro.core.store import (
+    BlockCache, StoreSlice, open_store, save_store,
+)
+from repro.sparse.csr import csr_from_dense
+
+
+def planted(rng, n=210, d=12, sparse=False):
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    if sparse:
+        x = (x * (rng.random((n, d)) < 0.4)).astype(np.float32)
+        x[np.arange(n), rng.integers(0, d, n)] += 1.0
+    return x
+
+
+def assert_trees_equal(a, b):
+    assert a.order == b.order and a.medoid == b.medoid
+    for f in dataclasses.fields(a):
+        if f.metadata.get("static"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name)),
+            err_msg=f.name,
+        )
+
+
+@pytest.fixture(scope="module")
+def dense_case(tmp_path_factory):
+    rng = np.random.default_rng(0)
+    x = planted(rng)  # 210 docs, block 64 → uneven last block (18 rows)
+    path = str(tmp_path_factory.mktemp("dense") / "store")
+    save_store(path, x, block_docs=64)
+    tree = kt.build(jnp.asarray(x), order=6, batch_size=32,
+                    key=jax.random.PRNGKey(1))
+    return x, path, tree
+
+
+@pytest.fixture(scope="module")
+def ell_case(tmp_path_factory):
+    rng = np.random.default_rng(2)
+    x = planted(rng, n=170, d=20, sparse=True)
+    m = csr_from_dense(x)
+    path = str(tmp_path_factory.mktemp("ell") / "store")
+    save_store(path, m, block_docs=64)
+    tree = kt.build(m, order=6, medoid=True, batch_size=32,
+                    key=jax.random.PRNGKey(3))
+    return m, path, tree
+
+
+# --- round trips ------------------------------------------------------------
+
+def test_dense_roundtrip_uneven_last_block(dense_case):
+    x, path, _ = dense_case
+    store = open_store(path)
+    assert store.kind == "dense" and store.n_docs == 210
+    assert store.n_blocks == 4 and store.block_docs == 64
+    np.testing.assert_array_equal(store.take_rows(np.arange(210))["x"], x)
+    # scrambled + repeated rows across block boundaries
+    rows = np.array([209, 0, 63, 64, 127, 128, 0, 209])
+    np.testing.assert_array_equal(store.take_rows(rows)["x"], x[rows])
+    # last block is padded on disk but padding rows are unaddressable
+    with pytest.raises(IndexError):
+        store.take_rows(np.array([210]))
+    with pytest.raises(IndexError):
+        store.read_block(4)
+
+
+def test_ell_roundtrip_matches_inmemory_backend(ell_case):
+    m, path, _ = ell_case
+    be_mem = make_backend(m)
+    be_st = backend_from_store(open_store(path))
+    for field in ("values", "cols", "sq", "csr_indptr"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(be_mem, field)),
+            np.asarray(getattr(be_st, field)), err_msg=field,
+        )
+    # chunk backends pad the CSR arrays to the static B·nnz_max capacity
+    # (compile-cache stability); the valid prefix must match the in-memory
+    # CSR and the padding must be inert zeros past indptr[-1]
+    nnz = int(np.asarray(be_mem.csr_indptr)[-1])
+    for field in ("csr_data", "csr_indices"):
+        got = np.asarray(getattr(be_st, field))
+        np.testing.assert_array_equal(
+            np.asarray(getattr(be_mem, field)), got[:nnz], err_msg=field)
+        assert (got[nnz:] == 0).all(), f"{field} padding not zero"
+    assert be_mem.n_cols == be_st.n_cols
+    # and the densify path (the only CSR consumer) agrees exactly
+    rows = jnp.arange(be_mem.n_docs, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(be_mem.take(rows)), np.asarray(be_st.take(rows)))
+
+
+def test_ell_store_verify_passes_and_catches_corruption(ell_case, tmp_path):
+    """verify=True must accept an intact ELL store (digest concatenation
+    order has to survive the manifest's sorted-JSON round trip) and reject a
+    tampered block."""
+    import shutil
+
+    _, path, _ = ell_case
+    open_store(path, verify=True)
+    bad = str(tmp_path / "bad-ell")
+    shutil.copytree(path, bad)
+    victim = os.path.join(bad, sorted(
+        f for f in os.listdir(bad) if f.startswith("ell_values"))[0])
+    blk = np.load(victim).copy()
+    blk.flat[0] += 1.0
+    np.save(victim, blk)
+    with pytest.raises(ValueError, match="digest"):
+        open_store(bad, verify=True)
+
+
+def test_open_store_verify_and_format_guard(dense_case, tmp_path):
+    _, path, _ = dense_case
+    open_store(path, verify=True)  # digests match what was written
+    # corrupt one block file → verify must refuse
+    import shutil
+
+    bad = str(tmp_path / "bad")
+    shutil.copytree(path, bad)
+    victim = os.path.join(bad, sorted(
+        f for f in os.listdir(bad) if f.endswith(".npy"))[0])
+    blk = np.load(victim)
+    blk = blk.copy()
+    blk.flat[0] += 1.0
+    np.save(victim, blk)
+    open_store(bad)  # lazy open still fine
+    with pytest.raises(ValueError, match="digest"):
+        open_store(bad, verify=True)
+    with pytest.raises(FileNotFoundError):
+        open_store(str(tmp_path / "nowhere"))
+    # unknown format tag refuses outright
+    import json
+
+    from repro.core.store import MANIFEST_NAME
+
+    mpath = os.path.join(bad, MANIFEST_NAME)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["format"] = "not-a-ktree-store"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="format"):
+        open_store(bad)
+
+
+# --- residency budget -------------------------------------------------------
+
+def test_block_cache_budget_and_eviction():
+    loads = []
+
+    def loader(i):
+        loads.append(i)
+        return {"x": np.zeros((4, 2), np.float32)}  # 32 bytes/block
+
+    cache = BlockCache(budget_bytes=64, loader=loader)  # 2 blocks fit
+    cache.get(0); cache.get(1); cache.get(0)
+    assert cache.stats["hits"] == 1 and loads == [0, 1]
+    cache.get(2)  # evicts 1 (LRU; 0 was refreshed)
+    assert cache.stats["evictions"] == 1
+    cache.get(0)
+    assert loads == [0, 1, 2]  # 0 stayed resident
+    cache.get(1)
+    assert loads == [0, 1, 2, 1]  # 1 was the eviction victim
+    assert cache.resident_bytes <= 64
+
+    # a single block above budget is still admitted (one-block floor)
+    cache = BlockCache(budget_bytes=1, loader=loader)
+    cache.get(0); cache.get(1)
+    assert cache.stats["resident_blocks"] == 1
+    with pytest.raises(ValueError):
+        BlockCache(budget_bytes=0, loader=loader)
+
+
+def test_store_under_budget_evicts_and_still_exact(dense_case):
+    x, path, tree = dense_case
+    store = open_store(path, budget_bytes=1)  # one-block floor
+    d_mem, s_mem = topk_search(tree, jnp.asarray(x), k=5, beam=3, chunk=64)
+    d_st, s_st = topk_search(tree, store, k=5, beam=3, chunk=64)
+    np.testing.assert_array_equal(d_mem, d_st)
+    np.testing.assert_array_equal(s_mem, s_st)
+    stats = store.cache.stats
+    assert stats["evictions"] > 0 and stats["resident_blocks"] == 1
+
+
+# --- store-backed vs in-memory equivalence ----------------------------------
+
+@pytest.mark.parametrize("chunk", [32, 50, 512])
+def test_dense_store_query_bit_identical(dense_case, chunk):
+    """Chunk 50 exercises non-pow2 bucketing mid-stream; 512 > n runs one
+    chunk; k=7 > last block's 18 valid docs is irrelevant to correctness but
+    k spans blocks regardless."""
+    x, path, tree = dense_case
+    store = open_store(path)
+    d_mem, s_mem = topk_search(tree, jnp.asarray(x), k=7, beam=3, chunk=chunk)
+    d_st, s_st = topk_search(tree, store, k=7, beam=3, chunk=chunk)
+    np.testing.assert_array_equal(d_mem, d_st)
+    np.testing.assert_array_equal(s_mem, s_st)
+
+
+def test_dense_store_k_exceeds_block_docs(tmp_path):
+    """k larger than docs-per-block: answers must still merge across blocks
+    bit-identically (block granularity is invisible to the engine)."""
+    rng = np.random.default_rng(7)
+    x = planted(rng, n=90, d=8)
+    path = str(tmp_path / "tiny-blocks")
+    save_store(path, x, block_docs=8)  # k=20 > 8 docs per block
+    store = open_store(path, budget_bytes=1)
+    tree = kt.build(jnp.asarray(x), order=5, batch_size=16,
+                    key=jax.random.PRNGKey(8))
+    d_mem, s_mem = topk_search(tree, jnp.asarray(x), k=20, beam=4)
+    d_st, s_st = topk_search(tree, store, k=20, beam=4)
+    np.testing.assert_array_equal(d_mem, d_st)
+    np.testing.assert_array_equal(s_mem, s_st)
+
+
+def test_ell_store_query_bit_identical(ell_case):
+    m, path, tree = ell_case
+    store = open_store(path, budget_bytes=1)
+    d_mem, s_mem = topk_search(tree, m, k=6, beam=3, chunk=48)
+    d_st, s_st = topk_search(tree, store, k=6, beam=3, chunk=48)
+    np.testing.assert_array_equal(d_mem, d_st)
+    np.testing.assert_array_equal(s_mem, s_st)
+
+
+def test_ell_chunk_backends_share_one_compile(ell_case):
+    """ELL chunk backends must not retrace per chunk: a chunk's true nnz
+    varies, so the CSR side is padded to the static B·nnz_max capacity —
+    without it every chunk misses the jit cache (regression for the
+    per-chunk recompile bug)."""
+    from repro.core import query as q_mod
+
+    m, path, tree = ell_case
+    store = open_store(path)
+    topk_search(tree, store, k=3, beam=2, chunk=32)  # warm all buckets
+    before = q_mod._beam_search._cache_size()
+    topk_search(tree, store, k=3, beam=2, chunk=32)  # 6 chunks over 170 docs
+    assert q_mod._beam_search._cache_size() == before
+
+
+def test_store_slice_matches_row_range(dense_case):
+    x, path, tree = dense_case
+    store = open_store(path)
+    full, fulld = topk_search(tree, jnp.asarray(x), k=4, beam=2, chunk=40)
+    sl = store.view(30, 110)
+    assert isinstance(sl, StoreSlice) and sl.n_docs == 80
+    part, partd = topk_search(tree, sl, k=4, beam=2, chunk=40)
+    np.testing.assert_array_equal(full[30:110], part)
+    np.testing.assert_array_equal(fulld[30:110], partd)
+    with pytest.raises(ValueError):
+        store.view(5, 1000)
+    # slice-local bounds: ids past the view (or negative) must raise, not
+    # silently resolve to other parent rows after the +lo offset
+    with pytest.raises(IndexError):
+        sl.take_rows(np.array([80]))
+    with pytest.raises(IndexError):
+        sl.take_rows(np.array([-1]))
+
+
+def test_streaming_build_bit_identical_both_backends(dense_case, ell_case):
+    x, dpath, dtree = dense_case
+    m, epath, etree = ell_case
+    st_d = open_store(dpath, budget_bytes=1)
+    assert_trees_equal(
+        dtree, kt.build_from_store(st_d, order=6, batch_size=32,
+                                   key=jax.random.PRNGKey(1)))
+    st_e = open_store(epath, budget_bytes=1)
+    grown = kt.build_from_store(st_e, order=6, medoid=True, batch_size=32,
+                                key=jax.random.PRNGKey(3))
+    assert_trees_equal(etree, grown)
+    kt.check_invariants(grown, n_docs=170)
+
+
+def test_dim_mismatch_guard(dense_case, tmp_path):
+    _, _, tree = dense_case
+    path = str(tmp_path / "wrong-dim")
+    save_store(path, planted(np.random.default_rng(9), n=40, d=5),
+               block_docs=16)
+    with pytest.raises(ValueError, match="query dim"):
+        topk_search(tree, open_store(path), k=3)
+
+
+# --- manifest-reference checkpoints -----------------------------------------
+
+def test_save_restore_index_by_manifest_reference(dense_case, tmp_path):
+    x, path, tree = dense_case
+    store = open_store(path)
+    idx = str(tmp_path / "idx")
+    out = save_index(idx, tree, store)
+    assert out == idx
+    # the checkpoint holds the tree + a reference, never the corpus blocks
+    assert sorted(os.listdir(idx)) == ["INDEX.json", "tree.npz"]
+    tree2, store2 = restore_index(idx, budget_bytes=1)
+    assert_trees_equal(tree, tree2)
+    assert store2.manifest_hash == store.manifest_hash
+    d1, _ = topk_search(tree, jnp.asarray(x), k=4, beam=2)
+    d2, _ = topk_search(tree2, store2, k=4, beam=2)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_restore_index_refuses_regenerated_store(tmp_path):
+    rng = np.random.default_rng(11)
+    x = planted(rng, n=80, d=6)
+    spath = str(tmp_path / "store")
+    save_store(spath, x, block_docs=32)
+    store = open_store(spath)
+    tree = kt.build(jnp.asarray(x), order=5, batch_size=16,
+                    key=jax.random.PRNGKey(12))
+    idx = str(tmp_path / "idx")
+    save_index(idx, tree, store)
+    # regenerate the corpus in place: same path, different content
+    save_store(spath, planted(rng, n=80, d=6), block_docs=32)
+    with pytest.raises(ValueError, match="rewritten in place"):
+        restore_index(idx)
+    tree3, store3 = restore_index(idx, check=False)  # explicit override
+    assert_trees_equal(tree, tree3)
+
+
+# --- answer-cache staleness regression (the PR's bugfix) --------------------
+
+def test_cache_corpus_token_invalidates_on_store_regeneration(tmp_path):
+    """A store regenerated in place under an unchanged tree object must not
+    serve stale cached answers: keying on the manifest content hash flushes
+    the cache when the corpus identity changes."""
+    rng = np.random.default_rng(13)
+    x = planted(rng, n=100, d=8)
+    spath = str(tmp_path / "store")
+    save_store(spath, x, block_docs=32)
+    store = open_store(spath)
+    tree = kt.build(jnp.asarray(x), order=5, batch_size=16,
+                    key=jax.random.PRNGKey(14))
+    cache = AnswerCache(64)
+    q = x[:10]
+    topk_search_cached(tree, q, cache, k=3, beam=2,
+                       corpus_token=store.manifest_hash)
+    assert cache.misses == 10 and len(cache) == 10
+    topk_search_cached(tree, q, cache, k=3, beam=2,
+                       corpus_token=store.manifest_hash)
+    assert cache.hits == 10  # same corpus → replay from cache
+
+    # regenerate in place: same path + same tree object, different content
+    save_store(spath, planted(rng, n=100, d=8), block_docs=32)
+    new_store = open_store(spath)
+    assert new_store.manifest_hash != store.manifest_hash
+    topk_search_cached(tree, q, cache, k=3, beam=2,
+                       corpus_token=new_store.manifest_hash)
+    # without the token fix these 10 would all be (stale) hits
+    assert cache.hits == 10 and cache.misses == 20
+
+    # the pre-fix behaviour (no token) is the hole: same tree object hits
+    legacy = AnswerCache(64)
+    topk_search_cached(tree, q, legacy, k=3, beam=2)
+    topk_search_cached(tree, q, legacy, k=3, beam=2)
+    assert legacy.hits == 10
