@@ -1,5 +1,6 @@
 """Out-of-core corpus store bench (DESIGN.md §9): streaming-build throughput
-and store-backed query QPS across residency budget × block size.
+and store-backed query QPS across residency budget × block size, plus the
+async-prefetch and sharded-serving columns.
 
 The sweep writes the corpus to an on-disk block store, then for each
 (budget fraction, block_docs) setting:
@@ -10,20 +11,27 @@ The sweep writes the corpus to an on-disk block store, then for each
 - **store-backed queries** (`topk_search(tree, store_slice)`) — QPS with
   chunk fetches coming off disk through the dispatch-ahead pipeline, against
   the in-memory baseline on identical queries;
-- an **equivalence assertion**: store-backed answers must be bit-identical
-  to the in-memory path (the §9 contract; the full matrix lives in
-  tests/test_store.py).
+- **prefetch column** — the same queries with `prefetch` 1 and 2 (a
+  `store.Prefetcher` reader thread moves the disk read off the dispatch
+  path), plus one prefetched streaming build per block size;
+- **sharded column** (`--mesh N`, needs N visible devices) — store-backed
+  `topk_search_sharded` with per-shard block caches
+  (`backend.shard_from_store`), reporting QPS and peak store residency;
+- an **equivalence assertion** on every variant: answers must stay
+  bit-identical to the in-memory path (the §9 contract; the full matrix
+  lives in tests/test_store.py + tests/test_query_sharded.py).
 
 Budgets are fractions of the decoded corpus size, so sub-1.0 settings really
 do evict (`cache.evictions` lands in the JSON). Results → ``--json
-BENCH_oocore.json`` (archived by the oocore CI job).
+BENCH_oocore.json`` (archived by the oocore + oocore-sharded CI jobs).
 
-Run:  PYTHONPATH=src python benchmarks/oocore.py [--smoke] \
+Run:  PYTHONPATH=src python benchmarks/oocore.py [--smoke] [--mesh N] \
           [--json BENCH_oocore.json]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import tempfile
@@ -48,9 +56,11 @@ def main(
     seed: int = 0,
     store_dir: str | None = None,
     json_path: str | None = None,
+    prefetch_depths=(1, 2),
+    mesh_shards: int = 0,
 ):
     from repro.core import ktree as kt
-    from repro.core.query import topk_search
+    from repro.core.query import topk_search, topk_search_sharded
     from repro.core.store import open_store, save_store
     from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
     from repro.sparse.csr import csr_to_dense
@@ -65,6 +75,8 @@ def main(
         "n_docs": n_docs, "dim": x_all.shape[1], "k": k, "beam": beam,
         "chunk": chunk, "n_queries": nq,
         "build_docs_per_s": {}, "query_qps": {}, "cache": {},
+        "prefetch_query_qps": {}, "prefetch_build_docs_per_s": {},
+        "sharded": {},
     }
 
     # in-memory baselines: build once per nothing (independent of store shape)
@@ -154,6 +166,96 @@ def main(
                     np.asarray(getattr(tree_st, f.name)), err_msg=f.name,
                 )
 
+            # --- prefetch column: async reader thread ahead of the reads ----
+            for depth in prefetch_depths:
+                store = open_store(path, budget_bytes=budget)
+                q_view = store.view(0, nq)
+                lat = []
+                for _ in range(repeats):
+                    t0 = time.time()
+                    d_pf, s_pf = topk_search(tree_mem, q_view, k=k, beam=beam,
+                                             chunk=chunk, prefetch=depth)
+                    lat.append(time.time() - t0)
+                pf_qps = nq / max(float(np.median(lat)), 1e-9)
+                np.testing.assert_array_equal(d_mem, d_pf)
+                np.testing.assert_array_equal(s_mem, s_pf)
+                rows.append((
+                    f"oocore_query_{tag}_pf{depth}",
+                    np.median(lat) / nq * 1e6,
+                    f"qps={pf_qps:.0f} vs_sync={pf_qps/max(qps,1e-9):.2f}x "
+                    f"exact=yes",
+                ))
+                blob["prefetch_query_qps"][f"{tag}_pf{depth}"] = pf_qps
+
+        # --- prefetched streaming build (one per block size) ----------------
+        store = open_store(path, budget_bytes=budget)
+        t0 = time.time()
+        tree_pf = kt.build_from_store(store, order=order, batch_size=256,
+                                      key=key, prefetch=2)
+        t_build = time.time() - t0
+        for f in dataclasses.fields(tree_mem):
+            if f.metadata.get("static"):
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(getattr(tree_mem, f.name)),
+                np.asarray(getattr(tree_pf, f.name)), err_msg=f.name,
+            )
+        rows.append((f"oocore_build_blk{block_docs}_pf2",
+                     t_build / n_docs * 1e6,
+                     f"docs_per_s={n_docs/max(t_build,1e-9):.0f} exact=yes"))
+        blob["prefetch_build_docs_per_s"][f"blk{block_docs}_pf2"] = (
+            n_docs / max(t_build, 1e-9))
+
+        # --- sharded column: store-backed shard-parallel serving ------------
+        if mesh_shards > 1:
+            import jax as _jax
+
+            from repro.core.backend import shard_from_store
+
+            if len(_jax.devices()) < mesh_shards:
+                rows.append((f"oocore_sharded_blk{block_docs}", 0.0,
+                             f"skipped: {len(_jax.devices())} devices "
+                             f"< {mesh_shards}"))
+            else:
+                mesh = _jax.make_mesh((mesh_shards,), ("data",))
+                x_qd = np.asarray(x_q)
+                d_shm, s_shm = topk_search_sharded(
+                    mesh, tree_mem, x_qd, corpus=x_all, k=k, beam=beam,
+                    chunk=chunk,
+                )
+                store = open_store(path, budget_bytes=budget)
+                per_shard = max(budget // mesh_shards, 1)
+                sshards = shard_from_store(mesh, store,
+                                           budget_bytes=per_shard)
+                topk_search_sharded(mesh, tree_mem, x_qd, corpus=sshards,
+                                    k=k, beam=beam, chunk=chunk)  # warm
+                lat = []
+                for _ in range(repeats):
+                    t0 = time.time()
+                    d_sh, s_sh = topk_search_sharded(
+                        mesh, tree_mem, x_qd, corpus=sshards, k=k, beam=beam,
+                        chunk=chunk,
+                    )
+                    lat.append(time.time() - t0)
+                sh_qps = nq / max(float(np.median(lat)), 1e-9)
+                # §9 sharded contract: disk-backed == in-memory sharded, bit
+                # for bit, with residency bounded by the per-shard budgets
+                np.testing.assert_array_equal(d_shm, d_sh)
+                np.testing.assert_array_equal(s_shm, s_sh)
+                peak = sshards.peak_resident_bytes
+                rows.append((
+                    f"oocore_sharded_blk{block_docs}",
+                    np.median(lat) / nq * 1e6,
+                    f"qps={sh_qps:.0f} shards={mesh_shards} "
+                    f"peak_resident={peak/1e6:.2f}MB exact=yes",
+                ))
+                blob["sharded"][f"blk{block_docs}"] = {
+                    "qps": sh_qps, "n_shards": mesh_shards,
+                    "per_shard_budget_bytes": per_shard,
+                    "peak_resident_bytes": peak,
+                    "per_shard_cache": sshards.cache_stats,
+                }
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(blob, f, indent=2, sort_keys=True)
@@ -176,6 +278,10 @@ if __name__ == "__main__":
     ap.add_argument("--store-dir", default="", help="keep stores here "
                     "(default: a fresh temp dir)")
     ap.add_argument("--json", default="", help="write BENCH_oocore.json here")
+    ap.add_argument("--mesh", type=int, default=0, help="add the sharded "
+                    "column: store-backed topk_search_sharded over N shards "
+                    "(needs N visible devices, e.g. "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument(
         "--smoke", action="store_true",
         help="CI-sized run: tiny corpus, tight budgets (forces real "
@@ -191,6 +297,6 @@ if __name__ == "__main__":
         beam=args.beam, chunk=args.chunk, block_sizes=tuple(args.blocks),
         budget_fractions=tuple(args.budgets), n_queries=args.queries,
         repeats=args.repeats, store_dir=args.store_dir or None,
-        json_path=args.json or None,
+        json_path=args.json or None, mesh_shards=args.mesh,
     ):
         print(f"{name},{us:.1f},{extra}")

@@ -153,7 +153,10 @@ def save_index(path: str, tree, store) -> str:
     never destroys the previous restore point). Restore with
     :func:`restore_index`, which re-opens the store and refuses to pair the
     tree with a corpus whose manifest content changed (regenerated in place →
-    stale doc ids)."""
+    stale doc ids). A store grown by ``ktree.insert_into_store`` rotates its
+    ``manifest_hash`` the same way: re-checkpoint the grown (tree, store)
+    pair afterwards — the pre-insert checkpoint correctly refuses to restore
+    against the extended corpus."""
     import json
 
     from repro.core.store import _install_dir
@@ -182,8 +185,10 @@ def restore_index(path: str, budget_bytes: Optional[int] = None, check: bool = T
     block-cache residency (default: the store module's default budget).
     ``check=True`` (default) verifies the store's current ``manifest_hash``
     against the one recorded at save time and raises ``ValueError`` on
-    mismatch — the corpus was regenerated in place, so the tree's doc ids
-    would silently address different documents."""
+    mismatch — the corpus was regenerated in place (or grown by
+    ``insert_into_store`` after the save), so the tree's doc ids would
+    silently address different (or fewer) documents than the tree that was
+    checkpointed alongside them."""
     import json
 
     from repro.core.store import DEFAULT_BUDGET_BYTES, open_store

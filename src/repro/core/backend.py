@@ -84,7 +84,15 @@ class DenseBackend:
         exactly with the monolithic path."""
         if rows is None:
             rows = np.arange(source.n_docs)
-        return cls(x=jnp.asarray(source.take_rows(rows)["x"]))
+        return cls.from_rows(source.take_rows(rows))
+
+    @classmethod
+    def from_rows(cls, got) -> "DenseBackend":
+        """Chunk backend over already-fetched dense store rows
+        (``{"x": f[B, d]}`` — the :meth:`from_store` construction with the
+        disk read factored out, so a ``store.Prefetcher`` can run it on a
+        reader thread and hand the arrays over bit-identically)."""
+        return cls(x=jnp.asarray(got["x"]))
 
     @property
     def n_docs(self) -> int:
@@ -191,7 +199,14 @@ class EllSparseBackend:
         so the padding is never addressed."""
         if rows is None:
             rows = np.arange(source.n_docs)
-        got = source.take_rows(rows)
+        return cls.from_rows(source.take_rows(rows), source.dim)
+
+    @classmethod
+    def from_rows(cls, got, n_cols: int) -> "EllSparseBackend":
+        """Chunk backend over already-fetched ELL store rows
+        (``{"values", "cols"}`` — the :meth:`from_store` construction with
+        the disk read factored out for ``store.Prefetcher`` consumers; same
+        CSR rebuild, same static padding, bit-identical scoring)."""
         vals, cols = got["values"], got["cols"]
         data, indices, indptr = _ell_csr_arrays(vals, cols, pad_to=vals.size)
         return cls(
@@ -201,7 +216,7 @@ class EllSparseBackend:
             csr_data=jnp.asarray(data),
             csr_indices=jnp.asarray(indices),
             csr_indptr=jnp.asarray(indptr),
-            n_cols=source.dim,
+            n_cols=n_cols,
         )
 
     @property
@@ -399,13 +414,139 @@ class EllDocShards(_DocShardsBase):
 DocShards = Union[DenseDocShards, EllDocShards]
 
 
-def sparse_backend_from_csr(m: Csr, nnz_max: int | None = None) -> EllSparseBackend:
+class StoreDocShards:
+    """Row-sharded view of an **on-disk** corpus for shard-parallel serving
+    (DESIGN.md §8/§9) — the out-of-core sibling of ``*DocShards``.
+
+    Shard ``s`` owns the same contiguous global rows the in-memory layout
+    gives it (``distributed.shard_row_extent``), but instead of holding its
+    corpus block on device it holds a ``CorpusStore.partition`` slice — its
+    own ``BlockCache`` under a per-shard residency budget. Per query chunk,
+    :meth:`chunk_pools` fetches only the beam candidates each shard owns
+    (deduplicated, via that shard's cache) into a padded per-shard *pool*;
+    the sharded engine scores pools with the exact ``score_local``
+    expressions, so answers stay bit-identical to the in-memory sharded path
+    while peak store residency stays ≤ n_shards × per-shard budget (plus the
+    per-cache one-block floor). A host-side handle — never crosses jit.
+    """
+
+    def __init__(self, mesh, store, budget_bytes=None, axes=None):
+        from repro.core.distributed import data_axes, n_row_shards, shard_row_extent
+
+        self.mesh = mesh
+        self.axes = data_axes(mesh) if axes is None else tuple(axes)
+        self.n_shards = n_row_shards(mesh, self.axes)
+        self.kind = store.kind
+        self.dim = store.dim
+        self.nnz_max = store.nnz_max
+        self.n_docs = store.n_docs
+        self.manifest_hash = store.manifest_hash
+        self.docs_per_shard = shard_row_extent(store.n_docs, self.n_shards)
+        self._dtype = np.dtype(store.dtype)
+        self.parts = store.partition(self.n_shards, budget_bytes=budget_bytes)
+        self.peak_resident_bytes = 0
+
+    def _pool_fields(self):
+        """(name, per-row trailing shape, dtype) of the pool arrays."""
+        if self.kind == "dense":
+            return (("x", (self.dim,), self._dtype),)
+        return (("values", (self.nnz_max,), self._dtype),
+                ("cols", (self.nnz_max,), np.int32))
+
+    def chunk_pools(self, cand: np.ndarray, valid: np.ndarray):
+        """Fetch one chunk's owned candidate rows into per-shard pools.
+
+        ``cand`` i32[B, C] global candidate doc ids, ``valid`` bool[B, C].
+        Returns ``(pools, pool_idx, owned)``: ``pools`` is a tuple of stacked
+        arrays ``[S, U, …]`` (each shard's deduplicated owned candidate rows,
+        zero-padded to a shared power-of-two ``U``), ``pool_idx`` i32[S, B, C]
+        maps each candidate slot to its pool row (0 where unowned — masked),
+        and ``owned`` bool[S, B, C] marks the slots shard ``s`` must score —
+        the same ownership predicate the in-memory ``to_local`` computes.
+        Updates :attr:`peak_resident_bytes` from the partition caches."""
+        s_count, (b, c) = self.n_shards, cand.shape
+        per_shard = []
+        u_max = 1
+        for s, part in enumerate(self.parts):
+            lo = s * self.docs_per_shard
+            own = np.logical_and(
+                valid, np.logical_and(cand >= lo, cand < lo + part.n_docs)
+            )
+            ids = np.unique(cand[own])
+            per_shard.append((lo, own, ids))
+            u_max = max(u_max, ids.size)
+        u = 1
+        while u < u_max:
+            u *= 2
+        pools = tuple(
+            np.zeros((s_count, u) + shape, dtype)
+            for _, shape, dtype in self._pool_fields()
+        )
+        pool_idx = np.zeros((s_count, b, c), np.int32)
+        owned = np.zeros((s_count, b, c), bool)
+        for s, (lo, own, ids) in enumerate(per_shard):
+            owned[s] = own
+            if ids.size:
+                got = self.parts[s].take_rows(ids - lo)
+                for pool, (name, _, _) in zip(pools, self._pool_fields()):
+                    pool[s, : ids.size] = got[name]
+                pool_idx[s][own] = np.searchsorted(ids, cand[own]).astype(np.int32)
+        self.peak_resident_bytes = max(
+            self.peak_resident_bytes,
+            sum(p.store.cache.resident_bytes for p in self.parts),
+        )
+        return pools, pool_idx, owned
+
+    @property
+    def cache_stats(self) -> list:
+        """Per-shard block-cache stats dicts (serve report + tests)."""
+        return [p.store.cache.stats for p in self.parts]
+
+
+def shard_from_store(mesh, store, budget_bytes=None, axes=None) -> StoreDocShards:
+    """Row-shard an on-disk corpus over ``mesh``'s data axes **without
+    materialising it** (DESIGN.md §8/§9).
+
+    ``store``: an open ``CorpusStore`` (not a slice — shard ownership is
+    defined over the full global row range the tree addresses);
+    ``budget_bytes``: per-shard block-cache budget (default: the store
+    handle's own budget), so total residency is bounded by
+    n_shards × budget. The result plugs into
+    ``query.topk_search_sharded(..., corpus=...)`` — pass it when serving
+    many batches so the partitions (and their caches) are created once. A
+    full-range ``StoreSlice`` is unwrapped to its parent; a partial slice is
+    rejected (the tree addresses global doc ids, so a sharded corpus must
+    cover the whole store)."""
+    from repro.core.store import CorpusStore, StoreSlice
+
+    if isinstance(store, StoreSlice):
+        if store.lo == 0 and store.hi == store.store.n_docs:
+            store = store.store
+        else:
+            raise ValueError(
+                f"sharded corpus slice [{store.lo}, {store.hi}) must cover "
+                f"the full store row range [0, {store.store.n_docs}) — the "
+                "tree addresses global doc ids"
+            )
+    if not isinstance(store, CorpusStore):
+        raise TypeError(
+            f"shard_from_store wants an open CorpusStore, got {type(store).__name__}"
+        )
+    return StoreDocShards(mesh, store, budget_bytes=budget_bytes, axes=axes)
+
+
+def sparse_backend_from_csr(
+    m: Csr, nnz_max: int | None = None, pad_to: int = 8
+) -> EllSparseBackend:
     """Build the ELL+CSR backend from a CSR corpus (host-side layout pass).
 
     ``sq`` is computed from the ELL values so that when an explicit ``nnz_max``
     truncates long rows, norms stay consistent with what ``cross_*``/``take``
-    actually see (``take`` also clips at ``nnz_max``)."""
-    e = ell_from_csr(m, nnz_max=nnz_max)
+    actually see (``take`` also clips at ``nnz_max``). ``pad_to`` is
+    ``ell_from_csr``'s lane rounding — pass 1 to honour an explicit
+    ``nnz_max`` exactly (the store-append path must match a store's recorded
+    width, DESIGN.md §9)."""
+    e = ell_from_csr(m, nnz_max=nnz_max, pad_to=pad_to)
     return EllSparseBackend(
         values=e.values,
         cols=e.cols,
@@ -430,6 +571,77 @@ def backend_from_store(source, rows=None) -> VectorBackend:
     if source.kind == "dense":
         return DenseBackend.from_store(source, rows)
     return EllSparseBackend.from_store(source, rows)
+
+
+def backend_from_rows(source, got) -> VectorBackend:
+    """Materialise **already-fetched** store rows as the matching backend.
+
+    ``got`` is a ``take_rows`` result (``{"x"}`` dense / ``{"values",
+    "cols"}`` ELL) for ``source``'s layout — the seam that lets a
+    ``store.Prefetcher`` move the disk read onto a reader thread
+    (DESIGN.md §9) while the backend construction (and hence every answer)
+    stays bit-identical to :func:`backend_from_store`."""
+    if source.kind == "dense":
+        return DenseBackend.from_rows(got)
+    return EllSparseBackend.from_rows(got, source.dim)
+
+
+def backend_for_store_layout(source, corpus) -> VectorBackend:
+    """Normalise new corpus rows into ``source``'s exact block layout.
+
+    ``source``: a ``CorpusStore``/``StoreSlice``; ``corpus``: a dense array,
+    Csr, or backend. Returns a backend whose rows can be appended to the
+    store verbatim (``CorpusStore.append``) *and* inserted into the tree
+    (``ktree.insert_into_store``) — one normalisation, so the vectors the
+    tree holds and the vectors the store serves are bit-identical. Dense
+    stores: densify + cast to the store dtype. ELL stores: re-lay the rows at
+    the store's recorded ``nnz_max`` width (longer rows truncate exactly like
+    an explicit-``nnz_max`` backend). Dimension mismatches raise.
+
+    Idempotent: a backend already in the store's exact layout (same kind,
+    dim, dtype — and ``nnz_max`` width for ELL) passes through untouched, so
+    ``insert_into_store`` normalising once and ``append`` normalising its
+    argument again costs one layout pass, not two."""
+    if is_store(corpus):
+        raise TypeError("append source must be in-memory rows, not a store")
+    dtype = np.dtype(source.dtype)
+    if source.kind == "dense":
+        be = make_backend(corpus, "dense")
+        if be.dim != source.dim:
+            raise ValueError(
+                f"appended rows have dim {be.dim} != store dim {source.dim}"
+            )
+        x = be.x if be.dtype == dtype else be.x.astype(dtype)
+        return DenseBackend(x=x)
+    if (
+        isinstance(corpus, EllSparseBackend)
+        and corpus.dim == source.dim
+        and corpus.nnz_max == source.nnz_max
+        and np.dtype(corpus.dtype) == dtype
+    ):
+        return corpus
+    if isinstance(corpus, Csr):
+        m = corpus
+    elif isinstance(corpus, EllSparseBackend):
+        m = corpus._csr()
+    elif isinstance(corpus, DenseBackend):
+        m = csr_from_dense(np.asarray(corpus.x))
+    elif isinstance(corpus, Ell):
+        data, indices, indptr = _ell_csr_arrays(
+            np.asarray(corpus.values), np.asarray(corpus.cols)
+        )
+        m = Csr(data=jnp.asarray(data), indices=jnp.asarray(indices),
+                indptr=jnp.asarray(indptr), n_cols=corpus.n_cols)
+    else:
+        m = csr_from_dense(np.asarray(corpus))
+    if m.n_cols != source.dim:
+        raise ValueError(
+            f"appended rows have dim {m.n_cols} != store dim {source.dim}"
+        )
+    if np.asarray(m.data).dtype != dtype:
+        m = Csr(data=jnp.asarray(np.asarray(m.data).astype(dtype)),
+                indices=m.indices, indptr=m.indptr, n_cols=m.n_cols)
+    return sparse_backend_from_csr(m, nnz_max=source.nnz_max, pad_to=1)
 
 
 def is_store(x) -> bool:

@@ -60,6 +60,16 @@ def flat_shard_index(mesh: Mesh, axes: Tuple[str, ...]):
     return idx
 
 
+def shard_row_extent(n: int, n_shards: int) -> int:
+    """Rows per shard after zero-padding ``n`` rows to the shard multiple —
+    shard ``s`` owns the contiguous global row range ``[s·L, (s+1)·L)``.
+    Single source of truth for row ownership: :func:`shard_rows` (in-memory
+    ``*DocShards``) and ``store.CorpusStore.partition`` (out-of-core, §9)
+    both derive from it, which is what keeps disk-backed shard ownership
+    aligned with the device layout."""
+    return -(-n // n_shards)
+
+
 def shard_rows(mesh: Mesh, arrays, axes: Optional[Tuple[str, ...]] = None):
     """Device-put arrays row-sharded over the mesh's data axes.
 
@@ -69,7 +79,7 @@ def shard_rows(mesh: Mesh, arrays, axes: Optional[Tuple[str, ...]] = None):
     axes = data_axes(mesh) if axes is None else tuple(axes)
     n_shards = n_row_shards(mesh, axes)
     n = int(arrays[0].shape[0])
-    n_pad = -(-n // n_shards) * n_shards
+    n_pad = shard_row_extent(n, n_shards) * n_shards
     out = []
     for a in arrays:
         a_np = np.asarray(a)

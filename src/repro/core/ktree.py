@@ -659,6 +659,7 @@ def build_from_store(
     batch_size: int = 256,
     medoid: bool = False,
     max_nodes: Optional[int] = None,
+    prefetch: int = 0,
 ) -> KTree:
     """Streaming out-of-core build: insert an on-disk corpus batch-by-batch
     (paper §1: "this tree structure allows for efficient disk based
@@ -676,8 +677,13 @@ def build_from_store(
     Runs the exact wave/split schedule of :func:`build` (same batching, same
     PRNG consumption), so the resulting tree is **bit-identical** to an
     in-memory ``build(corpus, ...)`` over the same corpus and arguments —
-    tests pin this for both block layouts."""
-    from repro.core.backend import backend_from_store
+    tests pin this for both block layouts.
+
+    ``prefetch ≥ 1`` moves each batch's disk read onto an async
+    ``store.Prefetcher`` reader thread of that depth, so the next batch's
+    block fetch overlaps the current batch's insert waves; the fetched rows
+    (and hence the tree) are identical to the synchronous path."""
+    from repro.core.backend import backend_from_rows
 
     n = store.n_docs
     if key is None:
@@ -686,23 +692,42 @@ def build_from_store(
         max_nodes = suggested_max_nodes(n, order)
     tree = ktree_init(max_nodes, order, store.dim, medoid=medoid, dtype=jnp.float32)
 
+    batches = []
     for start in range(0, n, batch_size):
         idx = np.arange(start, min(start + batch_size, n))
         pad = batch_size - idx.size
-        ids_np = np.concatenate([idx, np.full(pad, -1)]).astype(np.int32)
+        batches.append(np.concatenate([idx, np.full(pad, -1)]).astype(np.int32))
+
+    def fetch(ids_np):
         # padding rows fetch corpus row 0, exactly like build's safe gather
-        be = backend_from_store(store, np.where(ids_np >= 0, ids_np, 0))
-        rows = jnp.arange(batch_size, dtype=jnp.int32)
-        doc_ids = jnp.asarray(ids_np)
-        valid_np = ids_np >= 0
-        while valid_np.any():
-            levels = int(tree.depth) - 1
-            tree, accepted = _insert_wave(
-                tree, be, rows, doc_ids, jnp.asarray(valid_np),
-                jnp.int32(levels), max_levels=_levels_bucket(levels),
+        return store.take_rows(np.where(ids_np >= 0, ids_np, 0))
+
+    import contextlib
+
+    with contextlib.ExitStack() as stack:
+        if prefetch:
+            from repro.core.store import Prefetcher
+
+            # registered on the stack so a failing insert wave (or an
+            # interrupt) stops the reader thread instead of leaking it
+            fetched = stack.enter_context(
+                Prefetcher(batches, fetch, depth=prefetch)
             )
-            valid_np &= ~np.asarray(accepted)
-            tree, key = _split_all_overflowing(tree, key)
+        else:
+            fetched = ((ids_np, fetch(ids_np)) for ids_np in batches)
+        for ids_np, got in fetched:
+            be = backend_from_rows(store, got)
+            rows = jnp.arange(batch_size, dtype=jnp.int32)
+            doc_ids = jnp.asarray(ids_np)
+            valid_np = ids_np >= 0
+            while valid_np.any():
+                levels = int(tree.depth) - 1
+                tree, accepted = _insert_wave(
+                    tree, be, rows, doc_ids, jnp.asarray(valid_np),
+                    jnp.int32(levels), max_levels=_levels_bucket(levels),
+                )
+                valid_np &= ~np.asarray(accepted)
+                tree, key = _split_all_overflowing(tree, key)
     return tree
 
 
@@ -728,6 +753,38 @@ def insert(
         )
         valid_np &= ~np.asarray(accepted)
         tree, key = _split_all_overflowing(tree, key)
+    return tree
+
+
+def insert_into_store(
+    tree: KTree, store, x, key: Optional[jax.Array] = None
+) -> KTree:
+    """Incremental insertion into a **store-backed** index (DESIGN.md §9):
+    route the new documents into the tree *and* spill their vectors to the
+    on-disk corpus, closing the out-of-core loop for ever-growing corpora
+    (paper §5's incremental updates, without the corpus ever being resident).
+
+    ``x`` (dense array / Csr / backend) is normalised once into the store's
+    exact block layout (``backend.backend_for_store_layout`` — ELL rows re-laid
+    at the store's ``nnz_max`` width), so the vectors the tree inserts and the
+    vectors the store serves afterwards are bit-identical; the new documents
+    take global ids ``[store.n_docs, store.n_docs + B)``. The tree insert runs
+    first (a failure leaves the store untouched), then ``store.append`` fills
+    the last block's padding tail, appends new block files, and atomically
+    replaces the manifest — rotating ``manifest_hash``, so answer caches and
+    ``save_index`` checkpoints keyed on the old token correctly invalidate.
+
+    Returns the new tree; ``store`` (an open ``CorpusStore``) is mutated in
+    place and immediately serves the grown corpus. Equivalence contract: the
+    returned tree bit-matches ``insert`` of the same normalised rows into an
+    in-memory shadow tree (property-tested for both layouts)."""
+    from repro.core.backend import backend_for_store_layout
+
+    be = backend_for_store_layout(store, x)
+    n0 = store.n_docs
+    doc_ids = np.arange(n0, n0 + be.n_docs, dtype=np.int32)
+    tree = insert(tree, be, doc_ids, key=key)
+    store.append(be)
     return tree
 
 

@@ -37,8 +37,13 @@ Out-of-core (DESIGN.md §9): ``topk_search`` also accepts a disk-backed
 ``CorpusStore``/``StoreSlice`` as the query source — each chunk's rows are
 fetched from the store's block cache and materialised as a chunk-sized
 backend, and the same dispatch-ahead pipeline overlaps the next chunk's disk
-read with the previous chunk's device compute. Answers are bit-identical to
-the in-memory path.
+read with the previous chunk's device compute (``prefetch ≥ 1`` further moves
+the read onto a ``store.Prefetcher`` reader thread, overlapping it with the
+current chunk's D2H as well). ``topk_search_sharded`` accepts a store (or a
+``backend.shard_from_store`` handle) as the *corpus*: the corpus stays on
+disk behind per-shard block caches and each shard fetches only the beam
+candidates it owns per chunk. Answers are bit-identical to the in-memory
+paths throughout.
 """
 from __future__ import annotations
 
@@ -56,10 +61,13 @@ from repro.core.backend import (
     DenseDocShards,
     DocShards,
     EllDocShards,
+    StoreDocShards,
     VectorBackend,
+    backend_from_rows,
     backend_from_store,
     is_store,
     make_backend,
+    shard_from_store,
 )
 from repro.core.ktree import (
     KTree, _levels_bucket, chunked_query_rows, leaf_nodes, padded_chunk_rows,
@@ -191,9 +199,31 @@ def _pipeline_chunks(chunks, pipeline: int, dispatch, docs_out, dist_out):
         drain_one()
 
 
+def _store_chunk_iter(store, n: int, chunk: int, prefetch: int):
+    """Yield ``(rows_np, fetched row arrays)`` per padded query chunk of a
+    store source. ``prefetch=0``: the disk read happens inline, right before
+    the chunk is dispatched (the §8 dispatch-ahead pipeline then overlaps it
+    with the *previous* chunk's compute). ``prefetch ≥ 1``: the reads move to
+    a ``store.Prefetcher`` reader thread of that depth, which additionally
+    overlaps them with the current chunk's D2H copy-out — the yielded arrays
+    (and hence the answers) are identical either way."""
+    if prefetch:
+        from repro.core.store import Prefetcher
+
+        with Prefetcher(
+            padded_chunk_rows(n, chunk),
+            lambda req: store.take_rows(req[1]), depth=prefetch,
+        ) as pf:
+            for (rows_np, _), got in pf:
+                yield rows_np, got
+        return
+    for rows_np, padded in padded_chunk_rows(n, chunk):
+        yield rows_np, store.take_rows(padded)
+
+
 def topk_search(
     tree: KTree, q, k: int = 10, beam: int = 4, chunk: int = 512,
-    pipeline: int = 2,
+    pipeline: int = 2, prefetch: int = 0,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k ANN document search with beam-width recall control.
 
@@ -207,7 +237,10 @@ def topk_search(
     sweeps the trade-off). Queries are processed in chunks of ``chunk`` to
     bound the [chunk, beam·(m+1), d] gathered-centre buffers; ``pipeline``
     chunks stay in flight at once (2 = double-buffered dispatch-ahead, 1 = the
-    old synchronous loop — benchmarks/query_throughput.py measures the gap)."""
+    old synchronous loop — benchmarks/query_throughput.py measures the gap).
+    ``prefetch ≥ 1`` (store sources only) moves the disk reads onto an async
+    ``store.Prefetcher`` reader thread of that depth, overlapping the next
+    chunk's read with compute *and* the current D2H — answers unchanged."""
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
     store = q if is_store(q) else None
@@ -228,17 +261,18 @@ def topk_search(
 
     if store is not None:
         # out-of-core: the chunk's rows are read from the store's block cache
-        # (a host disk fetch) and dispatched as a chunk-sized backend; with
-        # pipeline ≥ 2 the next chunk's read overlaps this chunk's compute
-        def dispatch(padded_np):
-            be_c = backend_from_store(store, padded_np)
-            rows = jnp.arange(padded_np.size, dtype=jnp.int32)
+        # (a host disk fetch — inline, or on a Prefetcher reader thread) and
+        # dispatched as a chunk-sized backend; with pipeline ≥ 2 the next
+        # chunk's read overlaps this chunk's compute
+        def dispatch(got):
+            be_c = backend_from_rows(store, got)
+            rows = jnp.arange(be_c.n_docs, dtype=jnp.int32)
             return _beam_search(
                 tree, be_c, rows, jnp.int32(levels),
                 max_levels=max_levels, beam=beam, k=k,
             )
 
-        chunks = padded_chunk_rows(n, chunk)
+        chunks = _store_chunk_iter(store, n, chunk, prefetch)
     else:
         def dispatch(rows):
             return _beam_search(
@@ -338,16 +372,9 @@ def _get_sharded_chunk_fn(mesh, shards_treedef, shards_specs, max_levels, beam, 
     )
 
     def chunk_fn(tree, qbe, rows, levels, shards):
-        frontier, active = _beam_frontier(tree, qbe, rows, levels, max_levels, beam)
-        b = rows.shape[0]
-        m1 = tree.slots
-        cand = tree.child[frontier].reshape(b, beam * m1)
-        slot_ok = (
-            jnp.arange(m1)[None, None, :] < tree.n_entries[frontier][:, :, None]
+        cand, valid, xq, q_sq = _chunk_candidates(
+            tree, qbe, rows, levels, max_levels, beam
         )
-        valid = jnp.logical_and(slot_ok, active[:, :, None]).reshape(b, beam * m1)
-        xq = qbe.take(rows).astype(jnp.float32)              # chunk-sized densify
-        q_sq = qbe.row_sq(rows)
         ids, part_d = smap(shards, xq, q_sq, cand, valid)
         found = ids >= 0
         # the dropped ‖x‖² goes back in after the merge, exactly like _beam_search
@@ -359,6 +386,152 @@ def _get_sharded_chunk_fn(mesh, shards_treedef, shards_specs, max_levels, beam, 
     fn = jax.jit(chunk_fn)
     _SHARDED_FN_CACHE[key] = fn
     return fn
+
+
+def _chunk_candidates(
+    tree: KTree, qbe: VectorBackend, rows: jax.Array, levels: jax.Array,
+    max_levels: int, beam: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Descend one query chunk and expose its leaf-level candidate set:
+    (cand i32[B, beam·m1] global doc ids, valid bool[B, beam·m1],
+    xq f32[B, d] densified queries, q_sq f32[B]). Shared by the in-memory
+    sharded chunk fn and the store-backed sharded path, so both score the
+    exact same candidates for the exact same queries."""
+    frontier, active = _beam_frontier(tree, qbe, rows, levels, max_levels, beam)
+    b = rows.shape[0]
+    m1 = tree.slots
+    cand = tree.child[frontier].reshape(b, beam * m1)
+    slot_ok = (
+        jnp.arange(m1)[None, None, :] < tree.n_entries[frontier][:, :, None]
+    )
+    valid = jnp.logical_and(slot_ok, active[:, :, None]).reshape(b, beam * m1)
+    xq = qbe.take(rows).astype(jnp.float32)                  # chunk-sized densify
+    q_sq = qbe.row_sq(rows)
+    return cand, valid, xq, q_sq
+
+
+@functools.partial(jax.jit, static_argnames=("max_levels", "beam"))
+def _chunk_candidates_jit(tree, qbe, rows, levels, max_levels, beam):
+    """Jitted :func:`_chunk_candidates` — the device half of the store-backed
+    sharded path (the host half fetches the owned candidates from disk)."""
+    return _chunk_candidates(tree, qbe, rows, levels, max_levels, beam)
+
+
+_STORE_MERGE_FN_CACHE: dict = {}
+
+
+def _get_store_merge_fn(mesh, kind: str, k: int):
+    """Build (and cache) the jitted shard-map pool-scoring merge for one
+    (mesh, store layout, k) setting — the out-of-core counterpart of
+    :func:`_get_sharded_chunk_fn`'s leaf merge (DESIGN.md §9).
+
+    Each shard scores its fetched candidate *pool* with the exact
+    ``DenseDocShards``/``EllDocShards.score_local`` expressions (pool rows
+    are bit-identical to the corpus rows they were read from, so per-shard
+    distances — and the all-gathered ``topk_merge_ref`` result — match the
+    in-memory sharded path bit for bit); the collective stays
+    O(B·k·n_shards)."""
+    from repro.core.distributed import data_axes, shard_map
+
+    key = (mesh, kind, k)
+    fn = _STORE_MERGE_FN_CACHE.get(key)
+    if fn is not None:
+        return fn
+    axes = data_axes(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    n_pools = 1 if kind == "dense" else 2
+    pool_spec = tuple(P(axes, None, None) for _ in range(n_pools))
+
+    def merge(pools, pool_idx, owned, xq, q_sq, cand, valid):
+        # per shard: leading stacked axis is this shard's slot — squeeze it
+        pool_idx, owned = pool_idx[0], owned[0]
+        if kind == "dense":
+            xd = pools[0][0][pool_idx].astype(jnp.float32)    # [B, C, d]
+            c_sq = jnp.einsum("bcd,bcd->bc", xd, xd)
+            part = c_sq - 2.0 * jnp.einsum(
+                "bd,bcd->bc", xq.astype(jnp.float32), xd
+            )
+        else:
+            pv, pc = pools[0][0], pools[1][0]                 # [U, nnz] each
+            sq = jnp.sum(pv.astype(jnp.float32) ** 2, axis=1)
+            v = pv[pool_idx].astype(jnp.float32)              # [B, C, nnz]
+            c = pc[pool_idx]
+            b_idx = jnp.arange(xq.shape[0])[:, None, None]
+            g = xq.astype(jnp.float32)[b_idx, c]
+            part = sq[pool_idx] - 2.0 * jnp.einsum("bcn,bcn->bc", v, g)
+        part = jnp.where(jnp.logical_and(valid, owned), part, jnp.inf)
+        pos, d_loc = topk_from_dist(part, k)
+        ids_loc = jnp.where(
+            pos >= 0,
+            jnp.take_along_axis(cand, jnp.clip(pos, 0, cand.shape[1] - 1), axis=1),
+            -1,
+        )
+        g_d, g_i = d_loc, ids_loc
+        for a in reversed(axes):
+            g_d = jax.lax.all_gather(g_d, a)
+            g_i = jax.lax.all_gather(g_i, a)
+        b = xq.shape[0]
+        g_d = g_d.reshape(n_shards, b, k).transpose(1, 0, 2)  # [B, S, k]
+        g_i = g_i.reshape(n_shards, b, k).transpose(1, 0, 2)
+        ids, part_d = topk_merge_ref(g_i, g_d, k)
+        # the dropped ‖x‖² goes back in after the merge, like _beam_search
+        dist = jnp.where(
+            ids >= 0, jnp.maximum(part_d + q_sq[:, None], 0.0), jnp.inf
+        )
+        return ids, dist
+
+    smap = shard_map(
+        merge,
+        mesh=mesh,
+        in_specs=(pool_spec, P(axes, None, None), P(axes, None, None),
+                  P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    fn = jax.jit(smap)
+    _STORE_MERGE_FN_CACHE[key] = fn
+    return fn
+
+
+def _topk_search_sharded_store(
+    mesh, tree: KTree, q, sshards: StoreDocShards, k: int, beam: int,
+    chunk: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Shard-parallel top-k over a disk-backed corpus (DESIGN.md §9): per
+    chunk, the jitted descent yields the beam candidate set, each shard's
+    partition fetches only the candidates it owns through its own block
+    cache (:meth:`StoreDocShards.chunk_pools`), and the shard-map pool merge
+    returns the exact global top-k. The full corpus is never resident — peak
+    store bytes stay within n_shards × per-shard budget."""
+    store_q = q if is_store(q) else None
+    qbe = None if store_q is not None else make_backend(q)
+    n = (store_q if store_q is not None else qbe).n_docs
+    levels = int(tree.depth) - 1
+    max_levels = _levels_bucket(levels)
+    merge_fn = _get_store_merge_fn(mesh, sshards.kind, k)
+    docs_out = np.full((n, k), -1, np.int32)
+    dist_out = np.full((n, k), np.inf, np.float32)
+    if n == 0:
+        return docs_out, dist_out
+    for rows_np, padded in padded_chunk_rows(n, chunk):
+        if store_q is not None:
+            qbe_c = backend_from_store(store_q, padded)
+            rows = jnp.arange(padded.size, dtype=jnp.int32)
+        else:
+            qbe_c = qbe
+            rows = jnp.asarray(padded.astype(np.int32))
+        cand, valid, xq, q_sq = _chunk_candidates_jit(
+            tree, qbe_c, rows, jnp.int32(levels),
+            max_levels=max_levels, beam=beam,
+        )
+        # host sync: the candidate ids drive this chunk's disk fetches
+        pools, pool_idx, owned = sshards.chunk_pools(
+            np.asarray(cand), np.asarray(valid)
+        )
+        ids, dist = merge_fn(pools, pool_idx, owned, xq, q_sq, cand, valid)
+        docs_out[rows_np] = np.asarray(ids)[: rows_np.size]
+        dist_out[rows_np] = np.asarray(dist)[: rows_np.size]
+    return docs_out, dist_out
 
 
 def shard_corpus(mesh, corpus, axes=None) -> DocShards:
@@ -389,14 +562,38 @@ def topk_search_sharded(
     vectors recovered from the tree's own leaves. Exact distance ties across
     shards resolve in shard-major (= doc-id-range) order, which can differ
     from the single-device candidate order; real-valued corpora are unaffected.
+
+    Out-of-core (DESIGN.md §9): a ``CorpusStore`` corpus (or a pre-built
+    ``backend.shard_from_store`` handle — pass that when serving many batches
+    so the per-shard block caches persist) keeps the corpus on disk: each
+    shard fetches only the beam candidates it owns through its own block
+    cache, and answers stay bit-identical to the in-memory sharded path.
+    ``q`` may itself be a store/slice (chunk rows fetched on demand), with
+    either corpus kind. The store-corpus path runs one chunk at a time
+    (``pipeline`` does not apply): the descent's candidate ids must return to
+    the host to drive that chunk's disk fetches.
     """
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
-    qbe = make_backend(q)
-    if qbe.dim != tree.dim:
+    store_q = q if is_store(q) else None
+    qbe = None if store_q is not None else make_backend(q)
+    q_src = store_q if store_q is not None else qbe
+    if q_src.dim != tree.dim:
         raise ValueError(
-            f"query dim {qbe.dim} != tree dim {tree.dim} "
+            f"query dim {q_src.dim} != tree dim {tree.dim} "
             "(was the index built over a different corpus?)"
+        )
+    if isinstance(corpus, StoreDocShards) or is_store(corpus):
+        sshards = (
+            corpus if isinstance(corpus, StoreDocShards)
+            else shard_from_store(mesh, corpus)
+        )
+        if sshards.dim != tree.dim:
+            raise ValueError(
+                f"corpus dim {sshards.dim} != tree dim {tree.dim}"
+            )
+        return _topk_search_sharded_store(
+            mesh, tree, q, sshards, k=k, beam=beam, chunk=chunk
         )
     fresh = not isinstance(corpus, (DenseDocShards, EllDocShards))
     shards = shard_corpus(mesh, corpus_from_tree(tree) if corpus is None else corpus)
@@ -423,17 +620,28 @@ def topk_search_sharded(
     fn = _get_sharded_chunk_fn(
         mesh, treedef, specs, _levels_bucket(levels), beam, k
     )
-    n = qbe.n_docs
+    n = q_src.n_docs
     docs_out = np.full((n, k), -1, np.int32)
     dist_out = np.full((n, k), np.inf, np.float32)
     if n == 0:
         return docs_out, dist_out
 
-    def dispatch(rows):
-        return fn(tree, qbe, rows, jnp.int32(levels), shards)
+    if store_q is not None:
+        # store-sourced queries: fetch each chunk's rows from the block cache
+        # and descend a chunk-sized backend, exactly like topk_search's §9 path
+        def dispatch(padded_np):
+            qbe_c = backend_from_store(store_q, padded_np)
+            rows = jnp.arange(padded_np.size, dtype=jnp.int32)
+            return fn(tree, qbe_c, rows, jnp.int32(levels), shards)
 
-    _pipeline_chunks(chunked_query_rows(n, chunk), pipeline, dispatch,
-                     docs_out, dist_out)
+        chunks = padded_chunk_rows(n, chunk)
+    else:
+        def dispatch(rows):
+            return fn(tree, qbe, rows, jnp.int32(levels), shards)
+
+        chunks = chunked_query_rows(n, chunk)
+
+    _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out)
     return docs_out, dist_out
 
 

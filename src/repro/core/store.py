@@ -24,7 +24,18 @@ whole corpus through bounded memory; random access degrades gracefully to
 re-reads. Each block file's blake2b digest is recorded in the manifest at
 write time, and :func:`CorpusStore.manifest_hash` hashes the canonical
 manifest — a content token that changes whenever the corpus is regenerated in
-place (the answer-cache staleness guard keys on it, DESIGN.md §8/§9).
+place **or grown by** :meth:`CorpusStore.append` (the answer-cache and
+checkpoint staleness guards key on it, DESIGN.md §8/§9).
+
+Serving-plane seams (DESIGN.md §8/§9): :class:`Prefetcher` is the async
+reader thread that moves disk decodes off the dispatch path (build, query,
+and streamed ground truth share it; answers are bit-identical to the
+synchronous scans), and :meth:`CorpusStore.partition` splits the corpus into
+per-shard row ranges with independent block caches — the disk side of
+store-backed ``topk_search_sharded``. :meth:`CorpusStore.append` closes the
+loop for growing corpora: ``ktree.insert_into_store`` spills newly inserted
+leaf vectors into the padding tail of the last block plus freshly appended
+block files, atomically extending the manifest.
 
 This module is deliberately numpy/host-only (no jax imports): stores cross no
 jit boundary. The device-side seam is ``repro.core.backend.from_store`` —
@@ -36,8 +47,10 @@ import dataclasses
 import hashlib
 import json
 import os
+import queue
 import shutil
-from typing import Dict, Iterator, List, Optional, Tuple
+import threading
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -58,6 +71,13 @@ class BlockCache:
 
     ``hits``/``misses``/``evictions`` feed the out-of-core bench and the
     serving report (benchmarks/oocore.py, ``launch/serve.py --store``).
+
+    Thread safety: a :class:`Prefetcher` reader thread may race the consumer
+    loop on the same cache, so ``get`` runs under a lock — every call
+    increments exactly one of hits/misses and the byte accounting (incl. the
+    one-block residency floor) stays exact under concurrency. Disk decode
+    happens inside the lock: concurrent readers of one store serialise on I/O
+    rather than double-loading a block and double-counting its bytes.
     """
 
     def __init__(self, budget_bytes: int, loader):
@@ -68,6 +88,7 @@ class BlockCache:
         self._blocks: "Dict[int, Dict[str, np.ndarray]]" = {}
         self._lru: List[int] = []  # least-recent first
         self._bytes = 0
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -79,21 +100,31 @@ class BlockCache:
 
     def get(self, block_id: int) -> Dict[str, np.ndarray]:
         """The decoded arrays of ``block_id``, loading + evicting as needed."""
-        if block_id in self._blocks:
-            self.hits += 1
-            self._lru.remove(block_id)
+        with self._lock:
+            if block_id in self._blocks:
+                self.hits += 1
+                self._lru.remove(block_id)
+                self._lru.append(block_id)
+                return self._blocks[block_id]
+            self.misses += 1
+            arrays = self._loader(block_id)
+            self._bytes += self._block_bytes(arrays)
+            self._blocks[block_id] = arrays
             self._lru.append(block_id)
-            return self._blocks[block_id]
-        self.misses += 1
-        arrays = self._loader(block_id)
-        self._bytes += self._block_bytes(arrays)
-        self._blocks[block_id] = arrays
-        self._lru.append(block_id)
-        while self._bytes > self.budget_bytes and len(self._lru) > 1:
-            old = self._lru.pop(0)
-            self._bytes -= self._block_bytes(self._blocks.pop(old))
-            self.evictions += 1
-        return arrays
+            while self._bytes > self.budget_bytes and len(self._lru) > 1:
+                old = self._lru.pop(0)
+                self._bytes -= self._block_bytes(self._blocks.pop(old))
+                self.evictions += 1
+            return arrays
+
+    def drop(self, block_id: int) -> None:
+        """Forget a resident block without counting an eviction — staleness
+        invalidation (a block file rewritten by :meth:`CorpusStore.append`),
+        not budget pressure."""
+        with self._lock:
+            if block_id in self._blocks:
+                self._bytes -= self._block_bytes(self._blocks.pop(block_id))
+                self._lru.remove(block_id)
 
     @property
     def resident_bytes(self) -> int:
@@ -112,6 +143,94 @@ class BlockCache:
         )
 
 
+class Prefetcher:
+    """Bounded async reader: applies ``fetch`` to each request from
+    ``requests`` on a daemon worker thread, keeping up to ``depth`` finished
+    results buffered ahead of the consumer (the worker may additionally have
+    one fetch in flight while the buffer is full).
+
+    Iterating yields ``(request, result)`` pairs in request order — results
+    are the same objects a synchronous ``fetch`` loop would produce, so
+    consumers are bit-identical to the unprefetched path; only the disk read
+    moves off the dispatch path (DESIGN.md §9: the next block's read overlaps
+    device compute *and* the current chunk's D2H copy-out, where the
+    ``pipeline`` dispatch-ahead alone still serialised read → dispatch).
+    A ``fetch`` exception is re-raised at the consumer's next step. Use as a
+    context manager (or call :meth:`close`) to stop the worker early;
+    exhausting the iterator joins it automatically.
+    """
+
+    _DONE = object()
+    _ERR = object()
+
+    def __init__(self, requests: Iterable, fetch: Callable, depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be ≥ 1, got {depth}")
+        self.depth = int(depth)
+        self._results: "queue.Queue" = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._requests = iter(requests)
+        self._fetch = fetch
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        """Worker loop: fetch ahead until the requests run dry or close()."""
+        try:
+            for req in self._requests:
+                if self._stop.is_set():
+                    return
+                item = (req, self._fetch(req))
+                while not self._stop.is_set():
+                    try:
+                        self._results.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+            self._put_final((Prefetcher._DONE, None))
+        except BaseException as e:  # surfaced at the consumer's next step
+            self._put_final((Prefetcher._ERR, e))
+
+    def _put_final(self, item):
+        """Enqueue the terminal marker without deadlocking against close()."""
+        while not self._stop.is_set():
+            try:
+                self._results.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[Tuple[object, object]]:
+        while not self._stop.is_set():
+            try:
+                tag, payload = self._results.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if tag is Prefetcher._DONE:
+                self._thread.join()
+                return
+            if tag is Prefetcher._ERR:
+                self._thread.join()
+                raise payload
+            yield tag, payload
+
+    def close(self) -> None:
+        """Stop the worker and discard buffered results (idempotent)."""
+        self._stop.set()
+        while True:
+            try:
+                self._results.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 def _digest(path: str) -> str:
     """blake2b-128 hex digest of one block file's raw bytes."""
     h = hashlib.blake2b(digest_size=16)
@@ -126,6 +245,18 @@ def _save_block(dir_path: str, name: str, arr: np.ndarray) -> Tuple[str, str]:
     fname = name + ".npy"
     np.save(os.path.join(dir_path, fname), arr)
     return fname, _digest(os.path.join(dir_path, fname))
+
+
+def _replace_block(dir_path: str, fname: str, arr: np.ndarray) -> str:
+    """Atomically (re)write one block file in a *live* store directory (tmp +
+    ``os.replace``, so readers never observe a half-written block); returns
+    the new content digest. The append path's per-file counterpart of
+    :func:`_save_block` (which writes into a not-yet-installed tmp dir)."""
+    tmp = os.path.join(dir_path, fname + ".tmp")
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+    os.replace(tmp, os.path.join(dir_path, fname))
+    return _digest(os.path.join(dir_path, fname))
 
 
 def _install_dir(tmp: str, path: str) -> None:
@@ -272,6 +403,11 @@ class CorpusStore:
         return self.manifest["nnz_max"]
 
     @property
+    def dtype(self) -> np.dtype:
+        """Element dtype of the stored vectors (``cols`` is always i32)."""
+        return np.dtype(self.manifest["dtype"])
+
+    @property
     def nbytes(self) -> int:
         """Total decoded corpus bytes across all blocks (dense rows or
         ELL values+cols) — what "corpus exceeds the residency budget" is
@@ -321,9 +457,23 @@ class CorpusStore:
         lo = i * self.block_docs
         return lo, min(lo + self.block_docs, self.n_docs)
 
-    def iter_blocks(self) -> Iterator[Tuple[int, int, Dict[str, np.ndarray]]]:
+    def iter_blocks(
+        self, prefetch: int = 0
+    ) -> Iterator[Tuple[int, int, Dict[str, np.ndarray]]]:
         """Yield ``(lo, hi, arrays)`` per block in row order — the streaming
-        scan pattern (arrays still padded; slice ``[:hi-lo]``)."""
+        scan pattern (arrays still padded; slice ``[:hi-lo]``).
+
+        ``prefetch ≥ 1`` moves the block reads onto a :class:`Prefetcher`
+        reader thread of that depth, so the next block's disk decode overlaps
+        the consumer's work on the current one; the yielded arrays are the
+        same cache entries the synchronous scan returns."""
+        if prefetch:
+            with Prefetcher(range(self.n_blocks), self.read_block,
+                            depth=prefetch) as pf:
+                for i, arrays in pf:
+                    lo, hi = self.block_rows(i)
+                    yield lo, hi, arrays
+            return
         for i in range(self.n_blocks):
             lo, hi = self.block_rows(i)
             yield lo, hi, self.read_block(i)
@@ -372,6 +522,139 @@ class CorpusStore:
         materialising it."""
         return StoreSlice(self, lo, self.n_docs if hi is None else hi)
 
+    def partition(
+        self, n_shards: int, budget_bytes: Optional[int] = None
+    ) -> List["StoreSlice"]:
+        """Split the corpus into ``n_shards`` contiguous row ranges, each a
+        :class:`StoreSlice` over its **own** fresh :class:`BlockCache` — the
+        disk side of shard-parallel serving (DESIGN.md §8/§9).
+
+        Shard ``s`` owns global rows ``[s·L, (s+1)·L) ∩ [0, n_docs)`` with
+        ``L = ⌈n_docs / n_shards⌉`` — the same extent
+        ``distributed.shard_rows`` gives a row-sharded in-memory corpus, so
+        per-shard ownership agrees with ``*DocShards`` exactly. Each
+        partition's cache holds ``budget_bytes`` (default: this handle's
+        budget), so total store residency is bounded by
+        ``n_shards × budget_bytes`` (plus the per-cache one-block floor);
+        partitions share the disk files but no cache state with this handle
+        or each other. A boundary block straddling two shards may be resident
+        in both caches — that double-count is included in the bound."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be ≥ 1, got {n_shards}")
+        budget = self.cache.budget_bytes if budget_bytes is None else int(budget_bytes)
+        ext = -(-self.n_docs // n_shards)
+        parts = []
+        for s in range(n_shards):
+            h = CorpusStore(path=self.path, manifest=self.manifest, cache=None)  # type: ignore[arg-type]
+            h.cache = BlockCache(budget, h._load_block)
+            parts.append(h.view(min(s * ext, self.n_docs),
+                                min((s + 1) * ext, self.n_docs)))
+        return parts
+
+    # -- growth (insert-into-store, DESIGN.md §9) ---------------------------
+    def append(self, corpus) -> str:
+        """Append rows to the on-disk corpus; returns the **rotated**
+        ``manifest_hash``.
+
+        ``corpus`` (dense array / Csr / backend) is normalised to this
+        store's exact block layout first
+        (``backend.backend_for_store_layout`` — same ``dim``/``dtype``, and
+        for ELL stores the same ``nnz_max`` width, truncating longer rows
+        exactly like an explicit-``nnz_max`` backend). New rows take global
+        ids ``[n_docs, n_docs + B)``: the last block's zero-padding tail is
+        filled first (the merged block lands in a **fresh generation-named
+        file** — the old tail file is left untouched), then whole new block
+        files are appended, and finally the manifest is atomically replaced
+        with the extended block list, new digests, and the new ``n_docs`` —
+        a crash at any point leaves the *previous* manifest fully consistent
+        *and verifiable* (``open_store(verify=True)`` still passes: every
+        file the old manifest references is unmodified; files written by the
+        interrupted append are unreferenced orphans, reclaimed when a later
+        append reuses their names or the store is rewritten).
+
+        This handle's manifest and content token move to the appended state
+        (the memoised hash is recomputed — ``AnswerCache``/``restore_index``
+        consumers holding the old token correctly treat the grown corpus as
+        new content); the rewritten block is dropped from its cache. Handles
+        and partitions opened *before* the append keep their old manifest —
+        their ``[0, old n_docs)`` reads stay correct, they just don't see the
+        new rows until reopened."""
+        from repro.core.backend import backend_for_store_layout
+
+        be = backend_for_store_layout(self, corpus)
+        if self.kind == "dense":
+            new_fields = {"x": np.asarray(be.x)}
+        else:
+            new_fields = {"values": np.asarray(be.values),
+                          "cols": np.asarray(be.cols, np.int32)}
+        b_new = next(iter(new_fields.values())).shape[0]
+        if b_new == 0:
+            return self.manifest_hash
+        n0, bd = self.n_docs, self.block_docs
+        last = self.n_blocks - 1
+        valid_in_last = n0 - last * bd
+        blocks = [dict(e) for e in self.manifest["blocks"]]
+
+        def _write(i: int, rows: Dict[str, np.ndarray], gen: str = "") -> dict:
+            # per-field digest layout must match save_store exactly; ``gen``
+            # suffixes the rewritten tail block's file names so the file the
+            # OLD manifest references is never touched (n_docs strictly
+            # grows, so generation names are unique per append)
+            if self.kind == "dense":
+                fx = f"dense_{i:05d}{gen}.npy"
+                return {"i": i, "files": {"x": fx},
+                        "digest": _replace_block(self.path, fx,
+                                                 _pad_rows(rows["x"], bd))}
+            fv = f"ell_values_{i:05d}{gen}.npy"
+            fc = f"ell_cols_{i:05d}{gen}.npy"
+            dv = _replace_block(self.path, fv, _pad_rows(rows["values"], bd))
+            dc = _replace_block(self.path, fc, _pad_rows(rows["cols"], bd))
+            return {"i": i, "files": {"values": fv, "cols": fc},
+                    "digest": dc + dv}
+
+        def _slice(lo: int, hi: int) -> Dict[str, np.ndarray]:
+            return {k: v[lo:hi] for k, v in new_fields.items()}
+
+        # every file is written before the manifest replace, and none of them
+        # is referenced by the old manifest (the merged tail block gets a
+        # fresh generation name), so a crash anywhere leaves the old manifest
+        # consistent and verifiable; the superseded tail file becomes an
+        # unreferenced orphan once the new manifest lands
+        consumed = min(bd - valid_in_last, b_new) if valid_in_last < bd else 0
+        new_entries = []
+        start = consumed
+        i = last + 1
+        while start < b_new:
+            new_entries.append(_write(i, _slice(start, start + bd)))
+            start += bd
+            i += 1
+        rewritten = None
+        if consumed:
+            old = self._load_block(last)  # direct read: no cache-stats noise
+            merged = {
+                k: np.concatenate(
+                    [old[k][:valid_in_last], new_fields[k][:consumed]], axis=0
+                )
+                for k in new_fields
+            }
+            rewritten = _write(last, merged, gen=f"_g{n0 + b_new:09d}")
+            blocks[last] = rewritten
+
+        manifest = dict(self.manifest)
+        manifest["blocks"] = blocks + new_entries
+        manifest["n_docs"] = n0 + b_new
+        manifest["n_blocks"] = len(manifest["blocks"])
+        mtmp = os.path.join(self.path, MANIFEST_NAME + ".tmp")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        os.replace(mtmp, os.path.join(self.path, MANIFEST_NAME))
+
+        self.manifest = manifest  # rebind: stale handles keep the old dict
+        self.__dict__.pop("_manifest_hash", None)  # rotate the content token
+        if rewritten is not None:
+            self.cache.drop(last)
+        return self.manifest_hash
+
 
 @dataclasses.dataclass
 class StoreSlice:
@@ -412,6 +695,11 @@ class StoreSlice:
     def nnz_max(self) -> Optional[int]:
         """Parent store's ELL padding width (None for dense)."""
         return self.store.nnz_max
+
+    @property
+    def dtype(self) -> np.dtype:
+        """Parent store's vector element dtype."""
+        return self.store.dtype
 
     @property
     def manifest_hash(self) -> str:

@@ -95,18 +95,20 @@ def corpus_store(
     ``repro.core.store.save_store`` — dense representation lands as dense
     blocks, ``sparse_medoid`` as ELL blocks. A sidecar ``PIPELINE.json``
     records the full generation request (every spec field, representation,
-    seed, block_docs). With ``reuse=True`` (default) an existing store at
-    ``path`` is kept as-is *only if* that sidecar matches the current
-    request exactly; any difference — a different spec (even one with the
-    same shape), seed, representation, or blocking — raises rather than
-    silently serving a stale corpus. The preparation pipeline is
-    deterministic in (spec, seed), so a reused matching store is
-    byte-identical to a rewrite."""
+    seed, block_docs) plus the written store's ``manifest_hash``. With
+    ``reuse=True`` (default) an existing store at ``path`` is kept as-is
+    *only if* that sidecar matches the current request exactly **and** the
+    store's content hash still matches the recorded one; any difference — a
+    different spec (even one with the same shape), seed, representation,
+    blocking, or a store grown/regenerated in place since generation
+    (``CorpusStore.append``) — raises rather than silently serving a stale
+    corpus. The preparation pipeline is deterministic in (spec, seed), so a
+    reused matching store is byte-identical to a rewrite."""
     import dataclasses
     import json
     import os
 
-    from repro.core.store import MANIFEST_NAME, save_store
+    from repro.core.store import MANIFEST_NAME, open_store, save_store
 
     request = {
         "spec": dataclasses.asdict(spec), "representation": representation,
@@ -118,15 +120,33 @@ def corpus_store(
         if os.path.exists(sidecar):
             with open(sidecar) as f:
                 recorded = json.load(f)
-        if recorded != request:
+        recorded_req = {
+            k: v for k, v in (recorded or {}).items() if k != "manifest_hash"
+        } or None
+        if recorded_req != request:
             raise ValueError(
                 f"existing store at {path} was generated from a different "
-                f"request: recorded {recorded}, current {request} — point "
+                f"request: recorded {recorded_req}, current {request} — point "
                 "--store at a fresh directory or delete the old one"
+            )
+        # content check: a store grown in place (CorpusStore.append /
+        # insert_into_store) or otherwise mutated since generation is NOT the
+        # prepared corpus this request describes, even though the generation
+        # request still matches
+        rec_hash = (recorded or {}).get("manifest_hash")
+        cur_hash = open_store(path).manifest_hash
+        if rec_hash is not None and rec_hash != cur_hash:
+            raise ValueError(
+                f"existing store at {path} matches this generation request "
+                "but its content changed since it was written (appended to "
+                "or regenerated — manifest hash "
+                f"{cur_hash} != recorded {rec_hash}); point --store at a "
+                "fresh directory or delete the old one"
             )
         return path
     backend, _ = corpus_backend(spec, representation=representation, seed=seed)
     save_store(path, backend, block_docs=block_docs)
+    request["manifest_hash"] = open_store(path).manifest_hash
     with open(sidecar, "w") as f:
         json.dump(request, f, indent=1, sort_keys=True)
     return path

@@ -98,24 +98,21 @@ def serve_paper_store(args):
     the index streams in block-by-block (``build_from_store``) or restores by
     manifest reference (``--ckpt`` → ``save_index``/``restore_index``), and
     queries are answered straight from the store — the full corpus is never
-    resident."""
+    resident. ``--mesh N`` serves shard-parallel with per-shard block caches
+    (``--budget-mb`` split evenly across the shards); ``--prefetch D`` moves
+    the sequential disk scans (streaming build, single-device queries, the
+    ground-truth block sweep) onto an async reader thread of that depth —
+    sharded queries fetch candidates on demand and are unaffected."""
     from repro.core import ktree as kt
     from repro.core.query import (
         AnswerCache, brute_force_topk_stream, recall_at_k, topk_search,
-        topk_search_cached,
+        topk_search_cached, topk_search_sharded,
     )
     from repro.ckpt import restore_index, save_index
     from repro.core.store import open_store
     from repro.data.pipeline import corpus_store
     from repro.data.synth_corpus import scaled
 
-    if args.mesh > 1:
-        raise SystemExit(
-            "--store does not compose with --mesh yet: store-backed sharded "
-            "serving is an open ROADMAP item (topk_search_sharded would "
-            "materialise the corpus, defeating the residency budget); drop "
-            "--mesh or drop --store"
-        )
     spec = registry.get(args.arch)
     rep = spec.cfg.get("representation", "dense")
     corpus_spec = scaled(spec.cfg["corpus"], n_docs=args.n_docs, culled=args.culled)
@@ -143,7 +140,7 @@ def serve_paper_store(args):
         t0 = time.time()
         tree = kt.build_from_store(
             store, order=args.order, medoid=rep == "sparse_medoid",
-            batch_size=256,
+            batch_size=256, prefetch=args.prefetch,
         )
         print(f"streaming-built K-tree over {store.n_docs} docs in "
               f"{time.time()-t0:.2f}s (depth={int(tree.depth)}, "
@@ -157,7 +154,27 @@ def serve_paper_store(args):
     nq = min(args.queries, store.n_docs)
     q_view = store.view(0, nq)
     x_q = make_dense_rows(store, nq)  # cache keys + ground truth share these
-    run = lambda src: topk_search(tree, src, k=args.k, beam=args.beam)
+    if args.mesh > 1:
+        # store-backed sharded serving: the corpus stays on disk — each mesh
+        # shard fetches only the candidates it owns through its own block
+        # cache (--budget-mb split evenly across the shards)
+        from repro.core.backend import shard_from_store
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.mesh)
+        sshards = shard_from_store(
+            mesh, store, budget_bytes=max(budget // args.mesh, 1)
+        )
+        mode = f"sharded×{args.mesh}"
+        run = lambda src: topk_search_sharded(
+            mesh, tree, src, corpus=sshards, k=args.k, beam=args.beam
+        )
+    else:
+        sshards = None
+        mode = "single-device"
+        run = lambda src: topk_search(
+            tree, src, k=args.k, beam=args.beam, prefetch=args.prefetch
+        )
     run(q_view)  # warm the jit cache
     if args.cache:
         # miss batches are dense rows (content hashing addresses raw bytes),
@@ -184,12 +201,24 @@ def serve_paper_store(args):
     print(f"store cache: hit_rate={cs['hit_rate']:.2f} "
           f"evictions={cs['evictions']} resident={cs['resident_bytes']/1e6:.1f}"
           f"/{cs['budget_bytes']/1e6:.1f}MB")
+    if sshards is not None:
+        for s, st in enumerate(sshards.cache_stats):
+            print(f"shard {s} cache: hit_rate={st['hit_rate']:.2f} "
+                  f"misses={st['misses']} evictions={st['evictions']} "
+                  f"resident={st['resident_bytes']/1e6:.2f}"
+                  f"/{st['budget_bytes']/1e6:.2f}MB")
+        print(f"peak store residency across shards: "
+              f"{sshards.peak_resident_bytes/1e6:.2f}MB "
+              f"(bound {args.mesh}×{max(budget // args.mesh, 1)/1e6:.2f}MB "
+              f"+ one-block floors)")
     # ground truth streams block-by-block off the store (never fully resident)
-    true = brute_force_topk_stream(x_q, _dense_store_blocks(store), args.k)
+    true = brute_force_topk_stream(
+        x_q, _dense_store_blocks(store, prefetch=args.prefetch), args.k
+    )
     recall = recall_at_k(docs, true)
     print(f"{nq} queries: beam={args.beam} k={args.k} "
           f"recall@{args.k}={recall:.3f} {qps:.0f} QPS "
-          f"({store.kind} store, out-of-core)")
+          f"({store.kind} store, out-of-core, {mode})")
 
 
 def make_dense_rows(store, nq: int) -> np.ndarray:
@@ -201,12 +230,13 @@ def make_dense_rows(store, nq: int) -> np.ndarray:
     return np.asarray(be.take(jnp.arange(nq, dtype=jnp.int32)))
 
 
-def _dense_store_blocks(store):
+def _dense_store_blocks(store, prefetch: int = 0):
     """Yield ``(row_offset, dense rows)`` per store block for
     ``brute_force_topk_stream`` — dense blocks as-is, ELL blocks densified by
     a host-side numpy scatter-add (padding slots are value 0, so they add
-    nothing). One block resident at a time."""
-    for lo, hi, arrays in store.iter_blocks():
+    nothing). One block resident at a time; ``prefetch ≥ 1`` reads the next
+    block on an async reader thread while the current one is scored."""
+    for lo, hi, arrays in store.iter_blocks(prefetch=prefetch):
         if store.kind == "dense":
             yield lo, arrays["x"][: hi - lo].astype(np.float32)
         else:
@@ -338,7 +368,8 @@ def main():
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--mesh", type=int, default=0, help="shard-parallel query "
                     "serving over N devices (topk_search_sharded); 0/1 = "
-                    "single device")
+                    "single device. Composes with --store: the corpus stays "
+                    "on disk behind per-shard block caches")
     ap.add_argument("--cache", type=int, default=0, help="LRU answer-cache "
                     "capacity (0 = off); the timed stream runs twice so the "
                     "report shows the hit path")
@@ -348,9 +379,16 @@ def main():
                     "blocks on demand (DESIGN.md §9). With --ckpt the index "
                     "checkpoints by manifest reference (save_index)")
     ap.add_argument("--budget-mb", type=float, default=64.0,
-                    help="block-cache residency budget for --store, in MB")
+                    help="block-cache residency budget for --store, in MB "
+                    "(with --mesh N: split evenly into N per-shard caches)")
     ap.add_argument("--block-docs", type=int, default=1024,
                     help="rows per store block (the disk I/O granule)")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="async block-prefetch depth for --store (reader "
+                    "thread ahead of the sequential disk scans: streaming "
+                    "build, single-device queries, ground truth; 0 = "
+                    "synchronous). Sharded queries (--mesh) fetch candidates "
+                    "on demand per chunk and are unaffected")
     args = ap.parse_args()
     spec = registry.get(args.arch)
     if spec.family == "lm":

@@ -1,0 +1,110 @@
+"""Shared corpus / tree / store factories for the test suite.
+
+Before this module, ``test_store.py`` / ``test_query_sharded.py`` /
+``test_invariants.py`` each hand-rolled near-identical corpus builders; these
+helpers are the single copy. Plain functions, not pytest fixtures, so they
+import both from test modules (the tests directory is on ``sys.path`` via
+``conftest.py``) and from the forced-multi-device *subprocess* scripts in
+``test_query_sharded.py`` (which cannot share the main process's jax config).
+
+The random patterns reproduce the old hand-rolled builders exactly (same rng
+consumption order), so retrofitted tests see byte-identical corpora.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def random_corpus(rng, n=210, d=12, sparse=False):
+    """Seeded N(0, 1) corpus ``f32[n, d]``. ``sparse=True`` zeroes ~60% of
+    the entries and plants one anchor term per row (no all-zero rows, so unit
+    norms stay defined) — the pattern the store/invariant suites share."""
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    if sparse:
+        x = (x * (rng.random((n, d)) < 0.4)).astype(np.float32)
+        x[np.arange(n), rng.integers(0, d, n)] += 1.0
+    return x
+
+
+def sparsify(rng, x, density=0.5):
+    """Sparse view of a dense corpus: keep each entry with ``density``, then
+    plant one anchor term per row (the sharded-serving suite's pattern)."""
+    n, d = x.shape
+    xs = (x * (rng.random(x.shape) < density)).astype(np.float32)
+    xs[np.arange(n), rng.integers(0, d, n)] += 1.0
+    return xs
+
+
+def clustered_corpus(rng, n_clusters=5, per_cluster=60, d=8, spread=5.0):
+    """Gaussian blobs around ``n_clusters`` means — queries routed through a
+    tree over this corpus have non-trivial beam behaviour (the sharded suite's
+    corpus)."""
+    means = rng.normal(0, spread, (n_clusters, d))
+    return np.concatenate(
+        [rng.normal(means[i], 1.0, (per_cluster, d)) for i in range(n_clusters)]
+    ).astype(np.float32)
+
+
+def corpus_data(x, sparse):
+    """The corpus as what ``build`` consumes: a Csr matrix (sparse) or a
+    device array (dense)."""
+    from repro.sparse.csr import csr_from_dense
+
+    return csr_from_dense(x) if sparse else jnp.asarray(x)
+
+
+def build_tree(data, order, medoid=False, batch_size=32, seed=1):
+    """Deterministically built K-tree over ``data`` (key = PRNGKey(seed))."""
+    from repro.core import ktree as kt
+
+    return kt.build(data, order=order, batch_size=batch_size, medoid=medoid,
+                    key=jax.random.PRNGKey(seed))
+
+
+@dataclasses.dataclass
+class StoreCase:
+    """One store-backed test case: the corpus in every view a test wants.
+
+    ``x``: dense host rows; ``data``: what ``build`` consumed (Csr for
+    sparse, device array for dense); ``path``: the on-disk block store;
+    ``tree``: the in-memory-built reference tree (streaming builds must
+    bit-match it)."""
+
+    x: np.ndarray
+    data: object
+    path: str
+    tree: object
+
+
+def store_case(dir_path, sparse=False, seed=0, n=210, d=12, block_docs=64,
+               order=6, batch_size=32, tree_seed=1):
+    """Build the canonical store-backed case: seeded corpus → on-disk block
+    store at ``dir_path/store`` (uneven last block for the defaults) + an
+    in-memory reference tree. Defaults reproduce the old ``dense_case``
+    fixture; ``sparse=True`` with (seed=2, n=170, d=20, tree_seed=3)
+    reproduces ``ell_case``."""
+    from repro.core.store import save_store
+
+    rng = np.random.default_rng(seed)
+    x = random_corpus(rng, n=n, d=d, sparse=sparse)
+    data = corpus_data(x, sparse)
+    path = os.path.join(str(dir_path), "store")
+    save_store(path, data, block_docs=block_docs)
+    tree = build_tree(data, order=order, medoid=sparse,
+                      batch_size=batch_size, seed=tree_seed)
+    return StoreCase(x=x, data=data, path=path, tree=tree)
+
+
+def assert_trees_equal(a, b):
+    """Every non-static KTree field of ``a`` and ``b`` is bit-identical."""
+    assert a.order == b.order and a.medoid == b.medoid
+    for f in dataclasses.fields(a):
+        if f.metadata.get("static"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name)),
+            err_msg=f.name,
+        )

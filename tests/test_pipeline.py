@@ -74,3 +74,25 @@ def test_labels_give_signal():
     d_same = ((same[:10, None] - same[None, 10:20]) ** 2).sum(-1).mean()
     d_other = ((same[:10, None] - other[None, :10]) ** 2).sum(-1).mean()
     assert d_same < d_other
+
+
+def test_corpus_store_reuse_refuses_grown_store(tmp_path):
+    """corpus_store reuse must refuse a store whose content changed since
+    generation — a matching request sidecar is not enough once
+    CorpusStore.append can grow the store in place (DESIGN.md §9)."""
+    from repro.core.store import open_store
+    from repro.data.pipeline import corpus_store
+
+    spec = scaled(INEX_LIKE, n_docs=120, culled=80)
+    path = str(tmp_path / "store")
+    corpus_store(spec, path, representation="dense", block_docs=32)
+    # identical request → reuse is silent
+    corpus_store(spec, path, representation="dense", block_docs=32)
+    # a different request still refuses
+    with pytest.raises(ValueError, match="different"):
+        corpus_store(spec, path, representation="dense", block_docs=64)
+    # grow the store in place: same request, different content → refuse
+    store = open_store(path)
+    store.append(np.ones((5, store.dim), np.float32))
+    with pytest.raises(ValueError, match="content changed"):
+        corpus_store(spec, path, representation="dense", block_docs=32)

@@ -2,9 +2,11 @@
 return the single-device `topk_search` answers — same docs, dists within float
 noise — on an 8-virtual-device CPU mesh, for dense and ELL-sparse corpora,
 uneven shard remainders, and k > docs-per-shard; the merge collective must
-stay O(B·k·n_shards). Runs in a subprocess so the main pytest process keeps
-its single-device jax config. Also: serve paper mode end-to-end with
---mesh/--cache."""
+stay O(B·k·n_shards). Store-backed sharding (DESIGN.md §9) must additionally
+be bit-identical to the in-memory sharded path with per-shard residency
+bounded by the partition budgets. Runs in a subprocess so the main pytest
+process keeps its single-device jax config. Also: serve paper mode end-to-end
+with --mesh/--cache and --store --mesh."""
 import json
 import os
 import re
@@ -15,27 +17,29 @@ import textwrap
 import pytest
 
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+_TESTS = os.path.abspath(os.path.dirname(__file__))
 
 _SCRIPT = textwrap.dedent(
     """
-    import os
+    import os, tempfile
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys, json, re
     sys.path.insert(0, {src!r})
+    sys.path.insert(0, {tests!r})
     import numpy as np, jax, jax.numpy as jnp
+    from fixtures import clustered_corpus, sparsify
     from repro.core import ktree as kt
+    from repro.core.backend import shard_from_store
     from repro.core.query import (
         topk_search, topk_search_sharded, _SHARDED_FN_CACHE, make_backend,
     )
+    from repro.core.store import open_store, save_store
     from repro.sparse.csr import csr_from_dense, csr_slice_rows
 
     out = {{}}
     rng = np.random.default_rng(0)
-    means = rng.normal(0, 5, (5, 8))
     # 300 docs over 8 shards: uneven remainder (300 = 8*37 + 4 -> zero-pad)
-    x = np.concatenate(
-        [rng.normal(means[i], 1.0, (60, 8)) for i in range(5)]
-    ).astype(np.float32)
+    x = clustered_corpus(rng, n_clusters=5, per_cluster=60, d=8)
     tree = kt.build(jnp.asarray(x), order=8, batch_size=32)
     q = jnp.asarray(x[:80] + 0.05 * rng.normal(0, 1, (80, 8)).astype(np.float32))
     mesh = jax.make_mesh((8,), ("data",))
@@ -71,8 +75,7 @@ _SCRIPT = textwrap.dedent(
                             k=12, beam=3))
 
     # 5. ELL-sparse corpus + sparse queries (the nnz-bounded sharded scorer)
-    xsp = (x * (rng.random(x.shape) < 0.5)).astype(np.float32)
-    xsp[np.arange(xsp.shape[0]), rng.integers(0, 8, xsp.shape[0])] += 1.0
+    xsp = sparsify(rng, x, density=0.5)
     m = csr_from_dense(xsp)
     tree_sp = kt.build(m, order=8, medoid=True, batch_size=32)
     qs = csr_slice_rows(m, 0, 50)
@@ -84,6 +87,46 @@ _SCRIPT = textwrap.dedent(
     mesh2 = jax.make_mesh((2, 4), ("data", "model"))
     out["mesh2d"] = compare(
         single, topk_search_sharded(mesh2, tree, q, corpus=x, k=10, beam=4))
+
+    # 8. store-backed sharded serving (DESIGN.md §9): corpus on disk behind
+    # per-shard block caches must bit-match the in-memory sharded path —
+    # uneven last block (300 over block 64), 1-byte budgets (one-block floor)
+    tmp = tempfile.mkdtemp(prefix="sharded-store")
+    save_store(os.path.join(tmp, "dense"), x, block_docs=64)
+    st_d = open_store(os.path.join(tmp, "dense"), budget_bytes=1)
+    sharded_mem = topk_search_sharded(mesh, tree, q, corpus=x, k=10, beam=4)
+    ss = shard_from_store(mesh, st_d, budget_bytes=1)
+    out["store_dense"] = compare(
+        sharded_mem,
+        topk_search_sharded(mesh, tree, q, corpus=ss, k=10, beam=4))
+    block_bytes = 64 * 8 * 4
+    out["store_resident"] = dict(
+        peak=ss.peak_resident_bytes, bound=8 * block_bytes,
+        per_shard_blocks=[s["resident_blocks"] for s in ss.cache_stats])
+    # store as the *query* source over the store-backed corpus
+    save_store(os.path.join(tmp, "queries"), np.asarray(q), block_docs=32)
+    st_q = open_store(os.path.join(tmp, "queries"), budget_bytes=1)
+    out["store_query_source"] = compare(
+        sharded_mem,
+        topk_search_sharded(mesh, tree, st_q, corpus=ss, k=10, beam=4))
+
+    # 9. store-backed sharded, k > docs-per-shard (40 docs over 8 shards)
+    save_store(os.path.join(tmp, "small"), xs, block_docs=8)
+    st_s = open_store(os.path.join(tmp, "small"), budget_bytes=1)
+    out["store_k_exceeds_shard"] = compare(
+        topk_search_sharded(mesh, tree_s, jnp.asarray(xs[:10]), corpus=xs,
+                            k=12, beam=3),
+        topk_search_sharded(mesh, tree_s, jnp.asarray(xs[:10]), corpus=st_s,
+                            k=12, beam=3))
+
+    # 10. store-backed sharded over the ELL corpus (pool scorer stays sparse)
+    save_store(os.path.join(tmp, "ell"), m, block_docs=64)
+    st_e = open_store(os.path.join(tmp, "ell"), budget_bytes=1)
+    out["store_sparse"] = compare(
+        topk_search_sharded(mesh, tree_sp, qs, corpus=m, k=5, beam=4),
+        topk_search_sharded(mesh, tree_sp, qs,
+                            corpus=shard_from_store(mesh, st_e, budget_bytes=1),
+                            k=5, beam=4))
 
     # 7. merge collective is O(B*k*S), never O(B*n): every all-gather in the
     # compiled sharded fn moves at most S*B*k elements per operand
@@ -120,10 +163,10 @@ _SCRIPT = textwrap.dedent(
 
 @pytest.fixture(scope="module")
 def sharded_results():
-    script = _SCRIPT.format(src=_SRC)
+    script = _SCRIPT.format(src=_SRC, tests=_TESTS)
     proc = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
-        timeout=600,
+        timeout=900,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
@@ -171,6 +214,63 @@ def test_merge_collective_is_bk_shards(sharded_results):
     # corpus gather would move
     assert c["max_elems"] <= c["bound"], c
     assert c["max_elems"] < c["corpus_scale"], c
+
+
+def test_store_backed_sharded_bit_identical_dense(sharded_results):
+    # §9 contract: disk-backed sharded answers == in-memory sharded answers,
+    # bit for bit (pool rows are the same bytes, scorer is the same exprs)
+    r = sharded_results["store_dense"]
+    assert r["docs_match"] and r["finite_match"] and r["dist_err"] == 0.0, r
+
+
+def test_store_backed_sharded_bit_identical_sparse(sharded_results):
+    r = sharded_results["store_sparse"]
+    assert r["docs_match"] and r["finite_match"] and r["dist_err"] == 0.0, r
+
+
+def test_store_backed_sharded_k_exceeds_docs_per_shard(sharded_results):
+    r = sharded_results["store_k_exceeds_shard"]
+    assert r["docs_match"] and r["finite_match"] and r["dist_err"] == 0.0, r
+
+
+def test_store_backed_sharded_query_source(sharded_results):
+    r = sharded_results["store_query_source"]
+    assert r["docs_match"] and r["finite_match"] and r["dist_err"] == 0.0, r
+
+
+def test_store_backed_sharded_residency_bound(sharded_results):
+    """Peak resident store bytes across all shard caches stays within
+    n_shards × per-shard budget — here 1-byte budgets, so the one-block
+    floor: at most one resident block per shard at any time."""
+    r = sharded_results["store_resident"]
+    assert 0 < r["peak"] <= r["bound"], r
+    assert all(b <= 1 for b in r["per_shard_blocks"]), r
+
+
+def test_serve_paper_store_sharded():
+    """serve paper mode end-to-end: --store --mesh 4 — streaming build, then
+    store-backed sharded queries with per-shard cache stats and the residency
+    report."""
+    import tempfile
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    store_dir = os.path.join(tempfile.mkdtemp(prefix="serve-store"), "blocks")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "ktree-inex",
+         "--n-docs", "250", "--culled", "200", "--order", "10",
+         "--queries", "48", "--beam", "2", "--mesh", "4",
+         "--store", store_dir, "--budget-mb", "1", "--block-docs", "64",
+         "--prefetch", "1"],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "streaming-built K-tree" in proc.stdout
+    assert "sharded×4" in proc.stdout
+    assert "shard 3 cache:" in proc.stdout
+    assert "peak store residency" in proc.stdout
+    assert "out-of-core" in proc.stdout
 
 
 def test_serve_paper_sharded_with_cache():

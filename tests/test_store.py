@@ -1,66 +1,47 @@
 """Out-of-core corpus store (DESIGN.md §9): block round-trips, LRU residency
 budget, store-backed vs in-memory bit-identical build + top-k for both
-backends (uneven last block, k > docs-per-block), manifest-reference
-checkpoints, and the regenerated-in-place staleness guards (restore_index +
-answer-cache corpus token)."""
-import dataclasses
+backends (uneven last block, k > docs-per-block), async block prefetch
+(reader thread, exact cache stats), store growth (append /
+insert_into_store, manifest rotation), manifest-reference checkpoints, and
+the regenerated-in-place staleness guards (restore_index + answer-cache
+corpus token)."""
 import os
+import threading
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from fixtures import assert_trees_equal, random_corpus, store_case
 from repro.ckpt import restore_index, save_index
 from repro.core import ktree as kt
 from repro.core.backend import backend_from_store, make_backend
 from repro.core.query import AnswerCache, topk_search, topk_search_cached
 from repro.core.store import (
-    BlockCache, StoreSlice, open_store, save_store,
+    BlockCache, Prefetcher, StoreSlice, open_store, save_store,
 )
 from repro.sparse.csr import csr_from_dense
 
 
 def planted(rng, n=210, d=12, sparse=False):
-    x = rng.normal(0, 1, (n, d)).astype(np.float32)
-    if sparse:
-        x = (x * (rng.random((n, d)) < 0.4)).astype(np.float32)
-        x[np.arange(n), rng.integers(0, d, n)] += 1.0
-    return x
-
-
-def assert_trees_equal(a, b):
-    assert a.order == b.order and a.medoid == b.medoid
-    for f in dataclasses.fields(a):
-        if f.metadata.get("static"):
-            continue
-        np.testing.assert_array_equal(
-            np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name)),
-            err_msg=f.name,
-        )
+    """Shared seeded corpus (tests/fixtures.py) — kept as a local alias for
+    the cases below that draw several corpora from one rng."""
+    return random_corpus(rng, n=n, d=d, sparse=sparse)
 
 
 @pytest.fixture(scope="module")
 def dense_case(tmp_path_factory):
-    rng = np.random.default_rng(0)
-    x = planted(rng)  # 210 docs, block 64 → uneven last block (18 rows)
-    path = str(tmp_path_factory.mktemp("dense") / "store")
-    save_store(path, x, block_docs=64)
-    tree = kt.build(jnp.asarray(x), order=6, batch_size=32,
-                    key=jax.random.PRNGKey(1))
-    return x, path, tree
+    # 210 docs, block 64 → uneven last block (18 rows)
+    c = store_case(tmp_path_factory.mktemp("dense"), sparse=False, seed=0)
+    return c.x, c.path, c.tree
 
 
 @pytest.fixture(scope="module")
 def ell_case(tmp_path_factory):
-    rng = np.random.default_rng(2)
-    x = planted(rng, n=170, d=20, sparse=True)
-    m = csr_from_dense(x)
-    path = str(tmp_path_factory.mktemp("ell") / "store")
-    save_store(path, m, block_docs=64)
-    tree = kt.build(m, order=6, medoid=True, batch_size=32,
-                    key=jax.random.PRNGKey(3))
-    return m, path, tree
+    c = store_case(tmp_path_factory.mktemp("ell"), sparse=True, seed=2,
+                   n=170, d=20, tree_seed=3)
+    return c.data, c.path, c.tree
 
 
 # --- round trips ------------------------------------------------------------
@@ -367,3 +348,324 @@ def test_cache_corpus_token_invalidates_on_store_regeneration(tmp_path):
     topk_search_cached(tree, q, legacy, k=3, beam=2)
     topk_search_cached(tree, q, legacy, k=3, beam=2)
     assert legacy.hits == 10
+
+
+def test_answer_cache_rebind_same_pair_is_noop():
+    """Rebinding the cache to the *same* (index object, corpus token) pair —
+    what every topk_search_cached call does — must keep entries and counters;
+    only a different index or token flushes."""
+    cache = AnswerCache(8)
+    tree_token = object()
+    cache.bind(tree_token, "hash-a")
+    key = AnswerCache.make_key(np.ones(4, np.float32), 3, 2)
+    cache.put(key, (np.zeros(3, np.int32), np.zeros(3, np.float32)))
+    assert cache.get(key) is not None and cache.hits == 1
+    cache.bind(tree_token, "hash-a")  # rebind: must be a no-op
+    assert len(cache) == 1
+    assert cache.get(key) is not None
+    assert cache.hits == 2 and cache.misses == 0
+    cache.bind(tree_token, "hash-b")  # changed token: flush (entries only)
+    assert len(cache) == 0 and cache.hits == 2 and cache.misses == 0
+
+
+# --- async block prefetch (DESIGN.md §9) ------------------------------------
+
+def test_prefetcher_order_errors_and_close():
+    fetched = []
+
+    def fetch(i):
+        fetched.append(i)
+        return i * 10
+
+    assert list(Prefetcher(range(6), fetch, depth=2)) == [
+        (i, i * 10) for i in range(6)
+    ]
+    assert fetched == list(range(6))
+
+    with pytest.raises(ValueError):
+        Prefetcher(range(3), fetch, depth=0)
+
+    def boom(i):
+        if i == 2:
+            raise RuntimeError("disk gone")
+        return i
+
+    got = []
+    with pytest.raises(RuntimeError, match="disk gone"):
+        for req, res in Prefetcher(range(5), boom, depth=1):
+            got.append(req)
+    assert got == [0, 1]
+
+    # early close stops the worker without draining the request stream
+    pf = Prefetcher(range(10**6), lambda i: i, depth=1)
+    it = iter(pf)
+    assert next(it) == (0, 0)
+    pf.close()
+    assert not pf._thread.is_alive()
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_prefetch_query_bit_identical(dense_case, ell_case, depth):
+    """topk_search with an async reader thread must answer exactly like the
+    synchronous store path (which itself bit-matches in-memory)."""
+    x, dpath, dtree = dense_case
+    d_sync, s_sync = topk_search(dtree, open_store(dpath, budget_bytes=1),
+                                 k=7, beam=3, chunk=50)
+    d_pf, s_pf = topk_search(dtree, open_store(dpath, budget_bytes=1),
+                             k=7, beam=3, chunk=50, prefetch=depth)
+    np.testing.assert_array_equal(d_sync, d_pf)
+    np.testing.assert_array_equal(s_sync, s_pf)
+    m, epath, etree = ell_case
+    d_sync, s_sync = topk_search(etree, open_store(epath, budget_bytes=1),
+                                 k=6, beam=3, chunk=48)
+    d_pf, s_pf = topk_search(etree, open_store(epath, budget_bytes=1),
+                             k=6, beam=3, chunk=48, prefetch=depth)
+    np.testing.assert_array_equal(d_sync, d_pf)
+    np.testing.assert_array_equal(s_sync, s_pf)
+
+
+def test_prefetch_build_and_stream_bit_identical(dense_case):
+    """Streaming build and the streamed ground truth must be invariant to the
+    reader thread (depth 1 and 2)."""
+    from repro.core.query import brute_force_topk_stream
+
+    x, path, tree = dense_case
+    for depth in (1, 2):
+        st = open_store(path, budget_bytes=1)
+        assert_trees_equal(
+            tree, kt.build_from_store(st, order=6, batch_size=32,
+                                      key=jax.random.PRNGKey(1),
+                                      prefetch=depth))
+    # ground truth: block scan through a reader thread == synchronous scan
+    def blocks(prefetch):
+        st = open_store(path, budget_bytes=1)
+        for lo, hi, arrays in st.iter_blocks(prefetch=prefetch):
+            yield lo, arrays["x"][: hi - lo]
+
+    x_q = np.asarray(x[:20])
+    np.testing.assert_array_equal(
+        brute_force_topk_stream(x_q, blocks(0), 9),
+        brute_force_topk_stream(x_q, blocks(2), 9),
+    )
+
+
+def test_block_cache_stats_exact_under_racing_reader(dense_case):
+    """A reader thread racing the consumer loop on one cache: every get lands
+    exactly one hit-or-miss, eviction accounting matches, and the one-block
+    floor holds at budget=1 byte throughout."""
+    _, path, _ = dense_case
+    store = open_store(path, budget_bytes=1)
+    n_iters, errs = 6, []
+    rows = np.arange(store.n_docs)
+
+    def hammer():
+        try:
+            for _ in range(n_iters):
+                store.take_rows(rows)  # touches every block, in order
+        except Exception as e:  # pragma: no cover - surfaced via errs
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    cache = store.cache
+    total_gets = 2 * n_iters * store.n_blocks
+    assert cache.hits + cache.misses == total_gets
+    # every loaded block except the one still resident was evicted
+    assert cache.evictions == cache.misses - 1
+    assert cache.stats["resident_blocks"] == 1
+    one_block = cache._block_bytes(store._load_block(0))
+    assert cache.resident_bytes == one_block
+
+
+# --- store growth: append + insert_into_store (DESIGN.md §9) ----------------
+
+def test_append_fills_tail_and_extends_manifest(tmp_path):
+    rng = np.random.default_rng(21)
+    x = planted(rng, n=100, d=6)
+    path = str(tmp_path / "grow")
+    save_store(path, x, block_docs=32)  # 4 blocks, last holds 4 valid rows
+    store = open_store(path)
+    h0 = store.manifest_hash
+    stale = open_store(path)  # opened before the append: keeps its manifest
+    x2 = planted(rng, n=70, d=6)
+    h1 = store.append(x2)
+    assert h1 == store.manifest_hash != h0
+    assert store.n_docs == 170 and store.n_blocks == 6
+    full = np.concatenate([x, x2])
+    np.testing.assert_array_equal(store.take_rows(np.arange(170))["x"], full)
+    # all digests (incl. the rewritten tail block) match the new manifest
+    open_store(path, verify=True)
+    re = open_store(path)
+    assert re.n_docs == 170 and re.manifest_hash == h1
+    # pre-append handles keep their old view of the old rows
+    assert stale.n_docs == 100 and stale.manifest_hash == h0
+    np.testing.assert_array_equal(stale.take_rows(np.arange(100))["x"], x)
+    with pytest.raises(IndexError):
+        stale.take_rows(np.array([150]))
+    # appending the empty batch is a no-op on the manifest
+    assert store.append(np.zeros((0, 6), np.float32)) == h1
+    # layout guards: wrong dim refuses, store sources refuse
+    with pytest.raises(ValueError, match="dim"):
+        store.append(np.zeros((3, 9), np.float32))
+    with pytest.raises(TypeError):
+        store.append(store)
+
+
+def test_append_crash_window_keeps_old_manifest_verifiable(tmp_path):
+    """The append crash contract: every file append writes (incl. the merged
+    tail block, which lands under a fresh generation name) is unreferenced by
+    the old manifest — so a crash after the file writes but before the
+    manifest replace leaves the previous store fully *verifiable*, not just
+    readable."""
+    from repro.core.store import MANIFEST_NAME
+
+    rng = np.random.default_rng(24)
+    x = planted(rng, n=100, d=6)
+    path = str(tmp_path / "crash")
+    save_store(path, x, block_docs=32)  # tail block holds 4 valid rows
+    mpath = os.path.join(path, MANIFEST_NAME)
+    with open(mpath) as f:
+        old_manifest = f.read()
+    store = open_store(path)
+    store.append(planted(rng, n=40, d=6))
+    open_store(path, verify=True)  # grown state verifies
+    # simulate the crash window: all block files on disk, manifest replace
+    # never happened → restore the old manifest and verify against it
+    with open(mpath, "w") as f:
+        f.write(old_manifest)
+    st = open_store(path, verify=True)
+    assert st.n_docs == 100
+    np.testing.assert_array_equal(st.take_rows(np.arange(100))["x"], x)
+
+
+def test_append_exact_block_boundary(tmp_path):
+    """Appending to a store whose last block is exactly full must start a
+    fresh block (no tail rewrite)."""
+    rng = np.random.default_rng(22)
+    x = planted(rng, n=64, d=5)
+    path = str(tmp_path / "full")
+    save_store(path, x, block_docs=32)
+    store = open_store(path)
+    digests0 = [e["digest"] for e in store.manifest["blocks"]]
+    x2 = planted(rng, n=10, d=5)
+    store.append(x2)
+    assert store.n_docs == 74 and store.n_blocks == 3
+    # the two original block files were not touched
+    assert [e["digest"] for e in store.manifest["blocks"][:2]] == digests0
+    np.testing.assert_array_equal(
+        store.take_rows(np.arange(74))["x"], np.concatenate([x, x2]))
+    open_store(path, verify=True)
+
+
+def test_ell_append_relayouts_at_store_width(ell_case, tmp_path):
+    """ELL append re-lays new rows at the store's recorded nnz_max width and
+    the grown store still round-trips through chunk backends."""
+    import shutil
+
+    m, path, tree = ell_case
+    grow = str(tmp_path / "ell-grow")
+    shutil.copytree(path, grow)
+    store = open_store(grow)
+    rng = np.random.default_rng(23)
+    x2 = planted(rng, n=25, d=20, sparse=True)
+    m2 = csr_from_dense(x2)
+    store.append(m2)
+    assert store.n_docs == 195
+    open_store(grow, verify=True)
+    be = backend_from_store(open_store(grow))
+    assert be.nnz_max == store.nnz_max
+    got = np.asarray(be.take(jnp.arange(170, 195, dtype=jnp.int32)))
+    np.testing.assert_array_equal(got, x2)
+
+
+def test_insert_into_store_matches_shadow_and_roundtrips_ckpt(tmp_path):
+    """Store-backed insert: tree bit-matches the in-memory shadow insert, the
+    rotated manifest_hash invalidates the pre-insert index checkpoint, and a
+    fresh save_index/restore_index round-trips the grown index."""
+    rng = np.random.default_rng(31)
+    x = planted(rng, n=120, d=8)
+    path = str(tmp_path / "store")
+    save_store(path, x, block_docs=32)
+    store = open_store(path)
+    tree = kt.build(jnp.asarray(x), order=6, batch_size=32,
+                    key=jax.random.PRNGKey(7))
+    idx_old = str(tmp_path / "idx-old")
+    save_index(idx_old, tree, store)
+
+    x2 = planted(rng, n=50, d=8)
+    h0 = store.manifest_hash
+    tree2 = kt.insert_into_store(tree, store, x2, key=jax.random.PRNGKey(8))
+    assert store.n_docs == 170 and store.manifest_hash != h0
+    kt.check_invariants(tree2, n_docs=170)
+    shadow = kt.insert(tree, jnp.asarray(x2), np.arange(120, 170),
+                       key=jax.random.PRNGKey(8))
+    assert_trees_equal(tree2, shadow)
+
+    # the pre-insert checkpoint now references a rotated corpus: refuse
+    with pytest.raises(ValueError, match="rewritten in place"):
+        restore_index(idx_old)
+    # a fresh checkpoint of the grown index round-trips
+    idx_new = str(tmp_path / "idx-new")
+    save_index(idx_new, tree2, store)
+    tree3, store3 = restore_index(idx_new, budget_bytes=1)
+    assert_trees_equal(tree2, tree3)
+    assert store3.n_docs == 170 and store3.manifest_hash == store.manifest_hash
+    full = np.concatenate([x, x2])
+    d_st, s_st = topk_search(tree3, store3, k=5, beam=3)
+    d_mem, s_mem = topk_search(tree2, jnp.asarray(full), k=5, beam=3)
+    np.testing.assert_array_equal(d_st, d_mem)
+    np.testing.assert_array_equal(s_st, s_mem)
+
+
+def test_insert_into_store_flushes_stale_answer_cache(tmp_path):
+    """Answers cached against the pre-insert corpus token must miss after
+    insert_into_store rotates the manifest hash (same tree object would
+    otherwise serve doc ids over a changed corpus)."""
+    rng = np.random.default_rng(33)
+    x = planted(rng, n=80, d=6)
+    path = str(tmp_path / "store")
+    save_store(path, x, block_docs=32)
+    store = open_store(path)
+    tree = kt.build(jnp.asarray(x), order=5, batch_size=16,
+                    key=jax.random.PRNGKey(9))
+    cache = AnswerCache(64)
+    q = x[:8]
+    topk_search_cached(tree, q, cache, k=3, beam=2,
+                       corpus_token=store.manifest_hash)
+    topk_search_cached(tree, q, cache, k=3, beam=2,
+                       corpus_token=store.manifest_hash)
+    assert cache.hits == 8 and cache.misses == 8
+
+    tree2 = kt.insert_into_store(tree, store, planted(rng, n=20, d=6),
+                                 key=jax.random.PRNGKey(10))
+    # new tree object AND new token — either alone must flush; together they
+    # must too (the regression: stale answers after in-place growth)
+    topk_search_cached(tree2, q, cache, k=3, beam=2,
+                       corpus_token=store.manifest_hash)
+    assert cache.hits == 8 and cache.misses == 16
+
+
+# --- partitions (store side of sharded serving) -----------------------------
+
+def test_partition_ownership_and_isolated_caches(dense_case):
+    x, path, _ = dense_case
+    store = open_store(path, budget_bytes=1)
+    parts = store.partition(4, budget_bytes=1)
+    # contiguous cover of [0, n) at the shard_rows extent (ceil(210/4)=53)
+    bounds = [(p.lo, p.hi) for p in parts]
+    assert bounds == [(0, 53), (53, 106), (106, 159), (159, 210)]
+    for s, p in enumerate(parts):
+        lo, hi = bounds[s]
+        np.testing.assert_array_equal(
+            p.take_rows(np.arange(hi - lo))["x"], x[lo:hi])
+    # partition reads never touch the parent handle's cache, or each other's
+    assert store.cache.stats["misses"] == 0
+    miss_counts = [p.store.cache.misses for p in parts]
+    assert all(m >= 1 for m in miss_counts)
+    assert all(p.store.cache.stats["resident_blocks"] == 1 for p in parts)
+    with pytest.raises(ValueError):
+        store.partition(0)
