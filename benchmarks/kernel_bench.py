@@ -21,10 +21,10 @@ from repro.kernels import ops, ref
 def timeit(fn, *args, warmup=2, iters=5):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6  # us
+    return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
 def main():

@@ -81,9 +81,9 @@ def main(
 
     # in-memory baselines: build once per nothing (independent of store shape)
     key = jax.random.PRNGKey(seed)
-    t0 = time.time()
+    t0 = time.perf_counter()
     tree_mem = kt.build(jnp.asarray(x_all), order=order, batch_size=256, key=key)
-    mem_build_s = time.time() - t0
+    mem_build_s = time.perf_counter() - t0
     rows.append(("oocore_build_inmemory", mem_build_s / n_docs * 1e6,
                  f"docs_per_s={n_docs/max(mem_build_s,1e-9):.0f}"))
     blob["build_docs_per_s"]["inmemory"] = n_docs / max(mem_build_s, 1e-9)
@@ -92,9 +92,9 @@ def main(
     topk_search(tree_mem, x_q, k=k, beam=beam, chunk=chunk)  # warm
     lat = []
     for _ in range(repeats):
-        t0 = time.time()
+        t0 = time.perf_counter()
         d_mem, s_mem = topk_search(tree_mem, x_q, k=k, beam=beam, chunk=chunk)
-        lat.append(time.time() - t0)
+        lat.append(time.perf_counter() - t0)
     mem_qps = nq / max(float(np.median(lat)), 1e-9)
     rows.append(("oocore_query_inmemory", np.median(lat) / nq * 1e6,
                  f"qps={mem_qps:.0f}"))
@@ -102,9 +102,9 @@ def main(
 
     for block_docs in block_sizes:
         path = os.path.join(base_dir, f"blk{block_docs}")
-        t0 = time.time()
+        t0 = time.perf_counter()
         save_store(path, x_all, block_docs=block_docs)
-        t_write = time.time() - t0
+        t_write = time.perf_counter() - t0
         rows.append((f"oocore_store_write_blk{block_docs}",
                      t_write / n_docs * 1e6,
                      f"docs_per_s={n_docs/max(t_write,1e-9):.0f}"))
@@ -117,10 +117,10 @@ def main(
 
             # --- streaming build under this residency budget ----------------
             store = open_store(path, budget_bytes=budget)
-            t0 = time.time()
+            t0 = time.perf_counter()
             tree_st = kt.build_from_store(store, order=order, batch_size=256,
                                           key=key)
-            t_build = time.time() - t0
+            t_build = time.perf_counter() - t0
             bs = store.cache.stats
             rows.append((
                 f"oocore_build_{tag}", t_build / n_docs * 1e6,
@@ -136,10 +136,10 @@ def main(
             topk_search(tree_mem, q_view, k=k, beam=beam, chunk=chunk)  # warm
             lat = []
             for _ in range(repeats):
-                t0 = time.time()
+                t0 = time.perf_counter()
                 d_st, s_st = topk_search(tree_mem, q_view, k=k, beam=beam,
                                          chunk=chunk)
-                lat.append(time.time() - t0)
+                lat.append(time.perf_counter() - t0)
             qps = nq / max(float(np.median(lat)), 1e-9)
             qs = store.cache.stats
             # §9 contract: disk-backed answers == in-memory answers, bit for bit
@@ -172,10 +172,10 @@ def main(
                 q_view = store.view(0, nq)
                 lat = []
                 for _ in range(repeats):
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     d_pf, s_pf = topk_search(tree_mem, q_view, k=k, beam=beam,
                                              chunk=chunk, prefetch=depth)
-                    lat.append(time.time() - t0)
+                    lat.append(time.perf_counter() - t0)
                 pf_qps = nq / max(float(np.median(lat)), 1e-9)
                 np.testing.assert_array_equal(d_mem, d_pf)
                 np.testing.assert_array_equal(s_mem, s_pf)
@@ -189,10 +189,10 @@ def main(
 
         # --- prefetched streaming build (one per block size) ----------------
         store = open_store(path, budget_bytes=budget)
-        t0 = time.time()
+        t0 = time.perf_counter()
         tree_pf = kt.build_from_store(store, order=order, batch_size=256,
                                       key=key, prefetch=2)
-        t_build = time.time() - t0
+        t_build = time.perf_counter() - t0
         for f in dataclasses.fields(tree_mem):
             if f.metadata.get("static"):
                 continue
@@ -231,12 +231,12 @@ def main(
                                     k=k, beam=beam, chunk=chunk)  # warm
                 lat = []
                 for _ in range(repeats):
-                    t0 = time.time()
+                    t0 = time.perf_counter()
                     d_sh, s_sh = topk_search_sharded(
                         mesh, tree_mem, x_qd, corpus=sshards, k=k, beam=beam,
                         chunk=chunk,
                     )
-                    lat.append(time.time() - t0)
+                    lat.append(time.perf_counter() - t0)
                 sh_qps = nq / max(float(np.median(lat)), 1e-9)
                 # §9 sharded contract: disk-backed == in-memory sharded, bit
                 # for bit, with residency bounded by the per-shard budgets

@@ -52,43 +52,43 @@ def run_corpus(name: str, spec, orders: List[int], seed: int = 0,
 
     for order in orders:
         # --- K-tree (dense)
-        t0 = time.time()
+        t0 = time.perf_counter()
         tree = kt.build(x, order=order, batch_size=batch_size, key=key)
         a, nc = kt.extract_assignment(tree, x.shape[0])
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         p, h = _score(a, labels, nc, n_labels)
         rows.append(f"{name},ktree,{order},{nc},{p:.4f},{h:.4f},{dt:.2f}")
 
         # --- Medoid K-tree
-        t0 = time.time()
+        t0 = time.perf_counter()
         mtree = kt.build(x, order=order, batch_size=batch_size, key=key, medoid=True)
         am, ncm = kt.extract_assignment(mtree, x.shape[0])
-        dtm = time.time() - t0
+        dtm = time.perf_counter() - t0
         p, h = _score(am, labels, ncm, n_labels)
         rows.append(f"{name},medoid_ktree,{order},{ncm},{p:.4f},{h:.4f},{dtm:.2f}")
 
         # --- Sampled (10%) K-tree
-        t0 = time.time()
+        t0 = time.perf_counter()
         asamp, ncs, _ = sampled_ktree_clustering(
             x, order=order, fraction=0.1, batch_size=batch_size,
             key=jax.random.split(key)[0], sample_mode="random",
         )
-        dts = time.time() - t0
+        dts = time.perf_counter() - t0
         p, h = _score(asamp, labels, ncs, n_labels)
         rows.append(f"{name},sampled_ktree,{order},{ncs},{p:.4f},{h:.4f},{dts:.2f}")
 
         # --- CLUTO-style k-means at matched k
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = kmeans_fixed_iters(key, x, nc, iters=10)
-        dtk = time.time() - t0
+        dtk = time.perf_counter() - t0
         p, h = _score(np.asarray(res.assign), labels, nc, n_labels)
         rows.append(f"{name},kmeans_cluto,{order},{nc},{p:.4f},{h:.4f},{dtk:.2f}")
 
         # --- repeated bisecting k-means (host loop is O(k): cap for budget)
         if nc <= bisect_cap:
-            t0 = time.time()
+            t0 = time.perf_counter()
             res = bisecting_kmeans(key, x, nc, inner_iters=10)
-            dtb = time.time() - t0
+            dtb = time.perf_counter() - t0
             p, h = _score(np.asarray(res.assign), labels, nc, n_labels)
             rows.append(f"{name},bisecting,{order},{nc},{p:.4f},{h:.4f},{dtb:.2f}")
     return rows

@@ -61,9 +61,9 @@ def main(
         prev = -1.0
         for beam in beams:
             topk_search(tree, x_q, k=k, beam=beam)  # warm the jit cache
-            t0 = time.time()
+            t0 = time.perf_counter()
             docs, _ = topk_search(tree, x_q, k=k, beam=beam)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             rec = recall_at_k(docs, true_k)
             trend = "+" if rec >= prev - 0.02 else "REGRESSION"
             prev = rec

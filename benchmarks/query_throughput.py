@@ -69,9 +69,9 @@ def main(
             topk_search(tree, x_q, k=k, beam=beam, chunk=chunk, pipeline=depth)
             lat = []
             for _ in range(repeats):
-                t0 = time.time()
+                t0 = time.perf_counter()
                 topk_search(tree, x_q, k=k, beam=beam, chunk=chunk, pipeline=depth)
-                lat.append(time.time() - t0)
+                lat.append(time.perf_counter() - t0)
             med = float(np.median(lat))
             qps = nq / max(med, 1e-9)
             qps_by_depth[depth] = qps
@@ -102,14 +102,14 @@ def main(
     for s0 in range(0, stream_len, batch):
         topk_search_cached(tree, x_stream[s0:s0 + batch], warm, k=k, beam=beam)
     cache = AnswerCache(capacity=nq)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for s0 in range(0, stream_len, batch):
         topk_search_cached(tree, x_stream[s0:s0 + batch], cache, k=k, beam=beam)
-    dt_cache = time.time() - t0
-    t0 = time.time()
+    dt_cache = time.perf_counter() - t0
+    t0 = time.perf_counter()
     for s0 in range(0, stream_len, batch):
         topk_search(tree, jnp.asarray(x_stream[s0:s0 + batch]), k=k, beam=beam)
-    dt_plain = time.time() - t0
+    dt_plain = time.perf_counter() - t0
     s = cache.stats
     rows.append((
         "query_cache_stream", dt_cache / stream_len * 1e6,
@@ -136,10 +136,10 @@ def main(
                             chunk=chunk)
         lat = []
         for _ in range(repeats):
-            t0 = time.time()
+            t0 = time.perf_counter()
             topk_search_sharded(mesh, tree, x_q, corpus=shards, k=k, beam=beam,
                                 chunk=chunk)
-            lat.append(time.time() - t0)
+            lat.append(time.perf_counter() - t0)
         med = float(np.median(lat))
         qps = nq / max(med, 1e-9)
         # the merge all-gathers one k-wide (id, dist) list per shard per query

@@ -24,14 +24,14 @@ def main(sizes=(1000, 2000, 4000, 8000), d: int = 256, order: int = 16):
     for n in sizes:
         lab = rng.integers(0, 20, n)
         x = jnp.asarray((means[lab] + rng.normal(0, 1, (n, d))).astype(np.float32))
-        t0 = time.time()
+        t0 = time.perf_counter()
         tree = kt.build(x, order=order, batch_size=256)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         _, nc = kt.extract_assignment(tree, n)
         rows.append((f"ktree_build_n{n}", dt * 1e6, f"clusters={nc}"))
-        t0 = time.time()
+        t0 = time.perf_counter()
         kmeans_fixed_iters(jax.random.PRNGKey(0), x, nc, iters=10)
-        dtk = time.time() - t0
+        dtk = time.perf_counter() - t0
         rows.append((f"kmeans_match_n{n}", dtk * 1e6, f"k={nc} ratio={dtk/dt:.2f}"))
     return rows
 

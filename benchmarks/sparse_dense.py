@@ -37,10 +37,10 @@ def backend_compare(n_docs: int = 1500, culled: int = 600, order: int = 16, seed
         ("dense", make_backend(m, "dense")),
         ("sparse", make_backend(m, "sparse")),
     ]:
-        t0 = time.time()
+        t0 = time.perf_counter()
         tree = kt.build(be, order=order, medoid=True, key=jax.random.PRNGKey(seed))
         jax.block_until_ready(tree.centers)
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         kt.check_invariants(tree, n_docs=n_docs)
         assign, nc = kt.extract_assignment(tree, n_docs)
         p = float(micro_purity(
@@ -94,10 +94,10 @@ def main(n_docs: int = 4000, culled: int = 2000):
         (f_dense, (x_dense, centers_t), "root_scores_dense_docs"),
     ]:
         jax.block_until_ready(f(*args))
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(5):
             jax.block_until_ready(f(*args))
-        rows.append((name, (time.time() - t0) / 5 * 1e6, f"k={k}"))
+        rows.append((name, (time.perf_counter() - t0) / 5 * 1e6, f"k={k}"))
 
     # --- the two K-tree vector backends end-to-end (tentpole path)
     rows.extend(backend_compare(

@@ -1,0 +1,584 @@
+"""Continuous-batching serving engine (DESIGN.md §8).
+
+``topk_search`` and friends are *offline* engines: hand them a fixed query
+array and they answer it as one closed batch. A service sees something else —
+requests arriving one at a time, each with its own query rows, ``k``,
+``beam``, and latency deadline — and the paper's operational claim ("suitable
+for large document collections" at scale) is about that regime. This module
+is the front end that turns the offline engines into a service:
+
+    submit() ──► bounded admission queue ──► batcher ──► engine call ──► demux
+                   │ full → shed               │ dispatch when the row budget
+                   │ (reject now, never        │ fills OR the oldest request's
+                   │  queue unboundedly)       │ deadline forcing-point arrives
+                                               │ fragments bucketed per (k, beam)
+
+- **Admission** — :meth:`ServingEngine.submit` enqueues a request and returns
+  a :class:`ResultHandle` future. The queue is bounded: when it is full the
+  request is *rejected immediately* (:class:`EngineSaturated`, counted in
+  ``shed``) instead of absorbed into an ever-growing backlog — under overload
+  latency stays bounded and the caller learns to back off.
+- **Dynamic batching** — the dispatcher thread drains the queue FIFO into a
+  batch of up to ``row_budget`` query rows, waiting for more arrivals only
+  until the oldest pending request's *forcing point*: ``admit + max_wait``,
+  tightened to ``deadline − dispatch_margin`` for requests that carry one. A
+  full batch dispatches immediately; a lone request on an idle engine waits
+  at most ``max_wait``.
+- **Bucketed, chunk-aligned execution** — the drained batch is fragmented by
+  ``(k, beam, pow2 request-size bucket)``: one offline-engine call per
+  distinct setting and size class, each request's rows padded to the bucket
+  (:func:`pow2_pad_rows`) and the call chunked *at* the bucket, so every
+  query chunk gathers exactly one request's rows — the same tensor its
+  standalone offline call gathers, which is what makes every request's
+  answer **bit-identical** to the offline engines (XLA numerics depend on
+  the gathered chunk shape, so naive concatenation would drift by ulps).
+  Compiles stay bounded by (settings × pow2 buckets) actually served, not by
+  batch composition — the same bucketing discipline as descent depths and
+  chunk sizes (DESIGN.md §6).
+- **Cache staging** — an optional :class:`repro.core.query.AnswerCache` runs
+  as a pre-batch stage (:func:`repro.core.query.cache_stage`): hit rows are
+  answered without occupying engine rows, misses are deduplicated, and every
+  computed answer is inserted — exactly :func:`topk_search_cached`'s
+  accounting, applied per fragment.
+- **Observability** — per-request latency lands in a
+  :class:`LatencyRecorder` (injectable monotonic clock — the fake-clock seam
+  the timing tests pin); :meth:`ServingEngine.stats` reports p50/p95/p99
+  latency, QPS, queue depth, shed/deadline-miss counters, batch occupancy,
+  and (when ``block_caches`` are wired, e.g. a store-backed corpus) the
+  per-batch peak disk residency via ``BlockCache.reset_peak``.
+
+The engine owns one dispatcher thread; ``submit`` is safe from any number of
+threads. All timing uses a monotonic clock (``time.perf_counter`` by
+default) — wall-clock ``time.time`` can step under NTP and corrupt latency
+percentiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.query import (
+    AnswerCache,
+    cache_fill,
+    cache_stage,
+    concat_request_rows,
+    split_batch_answers,
+    topk_search,
+    topk_search_sharded,
+)
+
+
+class EngineSaturated(RuntimeError):
+    """Admission rejected: the bounded request queue is full (the request was
+    counted in ``shed``). Back off and retry — the alternative, unbounded
+    queueing, converts overload into unbounded latency for everyone."""
+
+
+class EngineClosed(RuntimeError):
+    """The engine has been closed; no further requests are admitted."""
+
+
+class ResultHandle:
+    """Future for one admitted request: ``result()`` blocks until the batch
+    containing the request completes and returns ``(doc_ids i32[r, k],
+    sqdist f32[r, k])`` — bit-identical to the offline engine on the same
+    rows. ``deadline_missed`` is set (post-completion) when the answer landed
+    after the request's deadline; the answer is still delivered."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._value: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._error: Optional[BaseException] = None
+        self.deadline_missed = False
+
+    def _set(self, value) -> None:
+        self._value = value
+        self._done.set()
+
+    def _set_error(self, err: BaseException) -> None:
+        self._error = err
+        self._done.set()
+
+    def done(self) -> bool:
+        """True once the request has an answer (or a failure) attached."""
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block (up to ``timeout`` seconds) for the answer; re-raises the
+        engine-call exception if the dispatching batch failed."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("request not completed within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One queued request (internal): rows + per-request engine settings,
+    admit timestamp, absolute deadline / forcing point (engine clock), and
+    the caller's handle."""
+
+    rows: np.ndarray
+    k: int
+    beam: int
+    t_admit: float
+    deadline: Optional[float]
+    force_t: float
+    handle: ResultHandle
+
+
+class LatencyRecorder:
+    """Thread-safe per-request latency sink with percentile reporting.
+
+    ``clock`` is the one timing seam: every duration is the difference of two
+    ``clock()`` readings, monotonic by default (``time.perf_counter``) so an
+    NTP step or a coarse wall clock can never corrupt the percentiles — the
+    regression tests drive a fake clock through here and pin the arithmetic.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._samples: List[float] = []
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    def now(self) -> float:
+        """One clock reading (the engine stamps admits/completions here so
+        every timestamp shares the recorder's clock)."""
+        return self.clock()
+
+    def record(self, t_start: float, t_done: Optional[float] = None) -> float:
+        """Append one latency sample ``t_done − t_start`` (``t_done`` defaults
+        to now); returns the sample seconds."""
+        if t_done is None:
+            t_done = self.clock()
+        lat = t_done - t_start
+        with self._lock:
+            self._samples.append(lat)
+            if self._t_first is None:
+                self._t_first = t_start
+            self._t_last = t_done if self._t_last is None else max(self._t_last, t_done)
+        return lat
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._samples)
+
+    def percentiles(self, qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+        """``{"p50": ms, ...}`` over all recorded samples (empty → zeros)."""
+        with self._lock:
+            samples = np.asarray(self._samples, np.float64)
+        if samples.size == 0:
+            return {f"p{int(q)}": 0.0 for q in qs}
+        return {
+            f"p{int(q)}": float(np.percentile(samples, q) * 1e3) for q in qs
+        }
+
+    def throughput(self) -> float:
+        """Completed requests per second over the span from the first admit
+        to the last completion (0.0 until two timestamps exist)."""
+        with self._lock:
+            n = len(self._samples)
+            if n == 0 or self._t_first is None or self._t_last is None:
+                return 0.0
+            span = self._t_last - self._t_first
+        return n / span if span > 0 else 0.0
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two ≥ ``n`` (n ≥ 1) — the row-count bucket a request
+    or batch lands in, mirroring ``_levels_bucket``'s pow2 discipline."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def pow2_pad_rows(x: np.ndarray, to: Optional[int] = None) -> Tuple[np.ndarray, int]:
+    """Pad a row batch to ``to`` rows (default: the next power of two) by
+    repeating the last row; returns ``(x_padded, n_real)``.
+
+    Two jobs at once. (1) Compile bounding: the offline engines' jit
+    signature includes the query batch's ``[n, d]`` shape, so without padding
+    every distinct dynamic-batch size would compile afresh — the
+    serving-batch application of the ``padded_chunk_rows`` bucketing
+    discipline (DESIGN.md §6). (2) Bit-identity: an offline call on ``r``
+    rows pads its chunk row *ids* to ``pow2_bucket(r)`` by repeating the last
+    id — padding the row *content* the same way feeds the gathered scoring
+    kernel the identical tensor, so a request executed inside a chunk-aligned
+    batch answers bit-identically to its standalone call. Per-row
+    independence makes the padded rows' answers discards: the dispatcher
+    slices back to ``n_real`` before demuxing."""
+    n = x.shape[0]
+    m = pow2_bucket(n) if to is None else int(to)
+    if m == n:
+        return x, n
+    return np.concatenate([x, np.repeat(x[-1:], m - n, axis=0)]), n
+
+
+def make_search_fn(
+    tree, *, mesh=None, corpus=None, chunk: int = 512, pipeline: int = 2,
+    prefetch: int = 0,
+) -> Callable[..., Tuple[np.ndarray, np.ndarray]]:
+    """Adapt the offline engines to the ``search_fn(x, k, beam,
+    chunk_rows=None)`` signature :class:`ServingEngine` dispatches through.
+
+    ``mesh=None`` → :func:`topk_search` (single device; ``corpus`` unused).
+    With a mesh → :func:`topk_search_sharded` over ``corpus`` — pass a
+    pre-sharded handle (``backend.shard(mesh)`` or
+    ``backend.shard_from_store``) so rows/partitions are placed once, not per
+    batch. ``chunk_rows`` overrides the query chunk size for one call — the
+    engine passes each fragment's request bucket here so every chunk gathers
+    exactly one request's (padded) rows, which is what makes batched answers
+    bit-identical to standalone calls (see :func:`pow2_pad_rows`). The
+    returned callable carries the default chunk as ``fn.chunk`` so the engine
+    knows when a request is too large to chunk-align."""
+    if mesh is None:
+        def fn(x, k, beam, chunk_rows=None):
+            return topk_search(
+                tree, x, k=k, beam=beam, chunk=chunk_rows or chunk,
+                pipeline=pipeline, prefetch=prefetch,
+            )
+    else:
+        def fn(x, k, beam, chunk_rows=None):
+            return topk_search_sharded(
+                mesh, tree, x, corpus=corpus, k=k, beam=beam,
+                chunk=chunk_rows or chunk,
+            )
+    fn.chunk = chunk
+    return fn
+
+
+class ServingEngine:
+    """Continuous-batching front end over an offline search engine.
+
+    ``search_fn(x f32[R, d], k, beam) -> (docs i32[R, k], dist f32[R, k])``
+    is the execution seam — :func:`make_search_fn` builds it for the
+    single-device, sharded, and store-backed paths; any callable with the
+    same contract (per-row-independent answers) slots in.
+
+    Parameters:
+
+    - ``row_budget`` — max query rows per dispatched batch (the batch fills
+      to this, then dispatches; one oversized request still dispatches alone
+      — the offline engines chunk internally).
+    - ``max_queue`` — admission bound in *requests*; a full queue sheds.
+    - ``max_wait_s`` — idle dispatch latency cap: a batch never waits longer
+      than this for more arrivals.
+    - ``dispatch_margin_s`` — headroom subtracted from a request's deadline
+      to get its forcing point (estimated service time, so dispatch happens
+      early enough to matter).
+    - ``cache``/``corpus_token`` — optional :class:`AnswerCache` pre-batch
+      stage; the cache is bound to ``tree`` (required then) and
+      ``corpus_token`` exactly like :func:`topk_search_cached`.
+    - ``block_caches`` — ``BlockCache`` handles of a store-backed corpus;
+      the engine resets their peak residency per batch and reports the
+      largest per-batch disk working set.
+    - ``clock`` — monotonic time source shared with the
+      :class:`LatencyRecorder` (fake-clock seam for tests).
+
+    Use as a context manager; :meth:`close` drains admitted requests before
+    stopping, so no accepted request is ever dropped.
+    """
+
+    def __init__(
+        self,
+        search_fn: Callable[[np.ndarray, int, int], Tuple[np.ndarray, np.ndarray]],
+        *,
+        row_budget: int = 256,
+        max_queue: int = 128,
+        max_wait_s: float = 2e-3,
+        dispatch_margin_s: float = 0.0,
+        cache: Optional[AnswerCache] = None,
+        tree=None,
+        corpus_token: Optional[str] = None,
+        block_caches: Sequence = (),
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if row_budget < 1 or max_queue < 1:
+            raise ValueError(
+                f"row_budget and max_queue must be ≥ 1, got "
+                f"{row_budget}/{max_queue}"
+            )
+        if max_wait_s < 0 or dispatch_margin_s < 0:
+            raise ValueError("max_wait_s and dispatch_margin_s must be ≥ 0")
+        if cache is not None and tree is None:
+            raise ValueError("cache staging needs the tree to bind to")
+        self.search_fn = search_fn
+        try:
+            self._accepts_chunk = (
+                "chunk_rows" in inspect.signature(search_fn).parameters
+            )
+        except (TypeError, ValueError):
+            self._accepts_chunk = False
+        self._chunk_cap = int(getattr(search_fn, "chunk", 512))
+        self.row_budget = int(row_budget)
+        self.max_queue = int(max_queue)
+        self.max_wait_s = float(max_wait_s)
+        self.dispatch_margin_s = float(dispatch_margin_s)
+        self.cache = cache
+        self.block_caches = tuple(block_caches)
+        if cache is not None:
+            cache.bind(tree, corpus_token)
+        self.recorder = LatencyRecorder(clock)
+        self._cv = threading.Condition()
+        self._queue: "deque[_Pending]" = deque()
+        self._closing = False
+        # counters (under _cv's lock: the dispatcher and submit already hold it)
+        self._admitted = 0
+        self._shed = 0
+        self._completed = 0
+        self._failed = 0
+        self._deadline_misses = 0
+        self._n_batches = 0
+        self._n_fragments = 0
+        self._occupancy_sum = 0.0
+        self._max_queue_depth = 0
+        self._peak_batch_store_bytes = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    # ---------------------------------------------------------------- admit
+    def submit(
+        self, rows: np.ndarray, k: int = 10, beam: int = 4,
+        deadline_s: Optional[float] = None,
+    ) -> ResultHandle:
+        """Admit one request (``rows`` f32[r, d] query vectors, per-request
+        ``k``/``beam``, optional relative latency ``deadline_s``) and return
+        its :class:`ResultHandle`.
+
+        Raises :class:`EngineSaturated` (and counts a shed) when the bounded
+        queue is full — admission control is immediate rejection, never
+        unbounded queueing — and :class:`EngineClosed` after :meth:`close`."""
+        rows = np.asarray(rows)
+        if rows.ndim != 2 or rows.shape[0] < 1:
+            raise ValueError(
+                f"request rows must be [r ≥ 1, d], got shape {rows.shape}"
+            )
+        if k < 1 or beam < 1:
+            raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
+        t = self.recorder.now()
+        force_t = t + self.max_wait_s
+        deadline = None
+        if deadline_s is not None:
+            deadline = t + float(deadline_s)
+            force_t = min(force_t, deadline - self.dispatch_margin_s)
+        handle = ResultHandle()
+        with self._cv:
+            if self._closing:
+                raise EngineClosed("engine is closed")
+            if len(self._queue) >= self.max_queue:
+                self._shed += 1
+                raise EngineSaturated(
+                    f"queue full ({self.max_queue} requests) — shed"
+                )
+            self._queue.append(_Pending(
+                rows=rows, k=int(k), beam=int(beam), t_admit=t,
+                deadline=deadline, force_t=force_t, handle=handle,
+            ))
+            self._admitted += 1
+            self._max_queue_depth = max(self._max_queue_depth, len(self._queue))
+            self._cv.notify()
+        return handle
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests currently waiting for dispatch."""
+        with self._cv:
+            return len(self._queue)
+
+    # ------------------------------------------------------------- dispatch
+    def _take_batch(self) -> List[_Pending]:
+        """Pop FIFO requests up to ``row_budget`` rows (caller holds the
+        lock; always pops at least one)."""
+        batch: List[_Pending] = [self._queue.popleft()]
+        rows = batch[0].rows.shape[0]
+        while self._queue and rows + self._queue[0].rows.shape[0] <= self.row_budget:
+            nxt = self._queue.popleft()
+            rows += nxt.rows.shape[0]
+            batch.append(nxt)
+        return batch
+
+    def _loop(self) -> None:
+        """Dispatcher thread: wait for fill-or-forcing-point, then execute."""
+        while True:
+            with self._cv:
+                while not self._queue:
+                    if self._closing:
+                        return
+                    self._cv.wait(0.05)
+                # wait for the batch to fill — but never past the oldest
+                # pending request's forcing point
+                while True:
+                    total = sum(p.rows.shape[0] for p in self._queue)
+                    force_t = min(p.force_t for p in self._queue)
+                    now = self.recorder.now()
+                    if (total >= self.row_budget or now >= force_t
+                            or self._closing):
+                        break
+                    self._cv.wait(min(max(force_t - now, 0.0), 0.05))
+                batch = self._take_batch()
+            self._execute(batch)
+
+    def _fragments(self, batch: List[_Pending]):
+        """Group a drained batch by (k, beam, request row bucket), preserving
+        FIFO order within each group — one engine call per distinct setting
+        and pow2 size class, so the chunk-aligned dispatch (see
+        :meth:`_execute`) keeps every request's answer bit-identical to its
+        standalone offline call. Requests too large to chunk-align (rows >
+        the search fn's default chunk) get ``bucket None`` and dispatch solo
+        with offline semantics."""
+        groups: "Dict[Tuple[int, int, Optional[int]], List[_Pending]]" = {}
+        for p in batch:
+            r = p.rows.shape[0]
+            bucket = None if r > self._chunk_cap else pow2_bucket(r)
+            groups.setdefault((p.k, p.beam, bucket), []).append(p)
+        return groups
+
+    def _call(self, x, k, beam, chunk_rows=None):
+        """One offline-engine call, forwarding ``chunk_rows`` only when the
+        search fn takes it (custom callables without the seam still work —
+        they just don't get the chunk-alignment bit-identity guarantee)."""
+        if chunk_rows is not None and self._accepts_chunk:
+            docs, dist = self.search_fn(x, k, beam, chunk_rows=chunk_rows)
+        else:
+            docs, dist = self.search_fn(x, k, beam)
+        return np.asarray(docs), np.asarray(dist)
+
+    def _run_fragment(self, group: List[_Pending], k: int, beam: int,
+                      bucket: Optional[int]):
+        """Execute one (k, beam, bucket) fragment and return per-request
+        ``(docs, dist)`` answers in group order.
+
+        Chunk-aligned dispatch (``bucket`` set): each request's rows are
+        padded to the bucket, concatenated, and run with ``chunk_rows =
+        bucket`` — every query chunk then gathers exactly one request's
+        (padded) rows, the same tensor its standalone offline call gathers,
+        so answers are bit-identical per request. The fragment's chunk count
+        is padded to a power of two as well (whole dummy chunks of the last
+        row) so compiles stay bounded per (bucket, pow2 chunk count), not per
+        batch composition. ``bucket None`` (an oversized request) dispatches
+        that request alone with the search fn's own default chunking — the
+        literal offline call.
+
+        With a cache staged, hit rows are answered without engine rows and
+        the deduplicated miss batch runs at ``chunk_rows = 1`` — each cache
+        entry is then the bit-exact answer of a standalone single-row call,
+        so repeat single-row requests stay bit-identical however they
+        batch."""
+        if bucket is None:
+            p = group[0]
+            docs, dist = self._call(p.rows, k, beam)
+            return [(docs, dist)]
+        x, bounds = concat_request_rows([p.rows for p in group])
+        if self.cache is not None:
+            docs, dist, miss = cache_stage(self.cache, x, k, beam)
+            if miss:
+                rep = np.asarray([rows[0] for rows in miss.values()])
+                xm, n_miss = pow2_pad_rows(x[rep])
+                d_new, s_new = self._call(xm, k, beam, chunk_rows=1)
+                cache_fill(self.cache, miss, d_new[:n_miss], s_new[:n_miss],
+                           docs, dist)
+            return split_batch_answers(docs, dist, bounds)
+        parts = [pow2_pad_rows(p.rows, to=bucket)[0] for p in group]
+        n_pad = pow2_bucket(len(parts)) - len(parts)
+        parts.extend(np.repeat(parts[-1][-1:], bucket, axis=0)
+                     for _ in range(n_pad))
+        xb, _ = concat_request_rows(parts)
+        d_all, s_all = self._call(xb, k, beam, chunk_rows=bucket)
+        return [
+            (d_all[i * bucket:i * bucket + p.rows.shape[0]].copy(),
+             s_all[i * bucket:i * bucket + p.rows.shape[0]].copy())
+            for i, p in enumerate(group)
+        ]
+
+    def _execute(self, batch: List[_Pending]) -> None:
+        """Run one dispatched batch: per-(k, beam, bucket) fragment through
+        :meth:`_run_fragment`, then answer demux, latency + occupancy +
+        per-batch store-residency accounting."""
+        for c in self.block_caches:
+            c.reset_peak()
+        n_frags = 0
+        try:
+            for (k, beam, bucket), group in self._fragments(batch).items():
+                n_frags += 1
+                answers = self._run_fragment(group, k, beam, bucket)
+                for p, ans in zip(group, answers):
+                    t_done = self.recorder.now()
+                    self.recorder.record(p.t_admit, t_done)
+                    missed = p.deadline is not None and t_done > p.deadline
+                    p.handle.deadline_missed = missed
+                    p.handle._set(ans)
+                    with self._cv:
+                        self._completed += 1
+                        if missed:
+                            self._deadline_misses += 1
+        except BaseException as e:
+            for p in batch:
+                if not p.handle.done():
+                    p.handle._set_error(e)
+                    with self._cv:
+                        self._failed += 1
+        finally:
+            store_peak = sum(
+                int(c.peak_resident_bytes) for c in self.block_caches
+            )
+            with self._cv:
+                self._n_batches += 1
+                self._n_fragments += n_frags
+                self._occupancy_sum += (
+                    sum(p.rows.shape[0] for p in batch) / self.row_budget
+                )
+                self._peak_batch_store_bytes = max(
+                    self._peak_batch_store_bytes, store_peak
+                )
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Serving report snapshot: latency percentiles (ms), QPS, admission
+        counters (admitted/completed/shed/failed/deadline_misses), queue
+        depth (current + high-water), batch counts + mean row occupancy,
+        per-batch peak store residency, and the answer-cache stats when one
+        is staged."""
+        with self._cv:
+            snap = dict(
+                admitted=self._admitted,
+                completed=self._completed,
+                shed=self._shed,
+                failed=self._failed,
+                deadline_misses=self._deadline_misses,
+                queue_depth=len(self._queue),
+                max_queue_depth=self._max_queue_depth,
+                n_batches=self._n_batches,
+                n_fragments=self._n_fragments,
+                batch_occupancy=(
+                    self._occupancy_sum / self._n_batches
+                    if self._n_batches else 0.0
+                ),
+                peak_batch_store_bytes=self._peak_batch_store_bytes,
+            )
+        snap["latency_ms"] = self.recorder.percentiles()
+        snap["qps"] = self.recorder.throughput()
+        if self.cache is not None:
+            snap["cache"] = self.cache.stats
+        return snap
+
+    # ---------------------------------------------------------------- close
+    def close(self) -> None:
+        """Stop admitting, drain every already-admitted request, and join the
+        dispatcher (idempotent)."""
+        with self._cv:
+            self._closing = True
+            self._cv.notify_all()
+        self._thread.join()
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

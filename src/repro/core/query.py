@@ -50,7 +50,8 @@ from __future__ import annotations
 import collections
 import functools
 import hashlib
-from typing import Callable, Optional, Tuple
+import threading
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -671,7 +672,14 @@ class AnswerCache:
     whose doc ids point at different documents. ``bind(index, corpus_token)``
     closes that hole: pass the store's ``manifest_hash`` (a content hash over
     the per-block digests, DESIGN.md §9) and any token change flushes the
-    cache."""
+    cache.
+
+    Thread safety: the serving engine (``core/engine.py``) consults the cache
+    from its dispatcher thread while other threads admit requests, so
+    ``get``/``put``/``bind`` (and the stats snapshot) run under a lock —
+    matching the :class:`repro.core.store.BlockCache` treatment. Every call
+    increments exactly one of hits/misses and LRU order stays consistent
+    under concurrency."""
 
     def __init__(self, capacity: int):
         if capacity < 1:
@@ -682,6 +690,7 @@ class AnswerCache:
         )
         self._index = None
         self._corpus_token = None
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
@@ -693,10 +702,11 @@ class AnswerCache:
         — pass the store's ``manifest_hash``) flushes all entries. The bound
         index is held strongly, so its id can never be recycled while
         bound."""
-        if index is not self._index or corpus_token != self._corpus_token:
-            self._entries.clear()
-            self._index = index
-            self._corpus_token = corpus_token
+        with self._lock:
+            if index is not self._index or corpus_token != self._corpus_token:
+                self._entries.clear()
+                self._index = index
+                self._corpus_token = corpus_token
 
     @staticmethod
     def make_key(row: np.ndarray, k: int, beam: int) -> bytes:
@@ -709,34 +719,112 @@ class AnswerCache:
 
     def get(self, key: bytes):
         """(docs, dists) for a key, refreshing its LRU position; None on miss."""
-        val = self._entries.get(key)
-        if val is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return val
+        with self._lock:
+            val = self._entries.get(key)
+            if val is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return val
 
     def put(self, key: bytes, value: Tuple[np.ndarray, np.ndarray]) -> None:
         """Insert (docs, dists) at ``key``, evicting LRU entries over
         capacity."""
-        self._entries[key] = value
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     @property
     def stats(self) -> dict:
         """hits/misses/hit_rate/size/capacity for the serving report."""
-        total = self.hits + self.misses
-        return dict(
-            hits=self.hits, misses=self.misses,
-            hit_rate=self.hits / total if total else 0.0,
-            size=len(self._entries), capacity=self.capacity,
-        )
+        with self._lock:
+            total = self.hits + self.misses
+            return dict(
+                hits=self.hits, misses=self.misses,
+                hit_rate=self.hits / total if total else 0.0,
+                size=len(self._entries), capacity=self.capacity,
+            )
+
+
+def cache_stage(
+    cache: AnswerCache, x_q: np.ndarray, k: int, beam: int,
+) -> Tuple[np.ndarray, np.ndarray, "collections.OrderedDict[bytes, list]"]:
+    """Pre-batch cache stage: probe every row of ``x_q`` against ``cache``.
+
+    Returns ``(docs, dist, miss_rows)`` where hit rows of the [n, k] answer
+    arrays are already filled (misses stay (−1, +inf) until
+    :func:`cache_fill`) and ``miss_rows`` maps each missing content key to the
+    row indices sharing it, in first-appearance order — the in-batch dedup: one
+    engine row per distinct missing query. The caller must have ``bind``-ed
+    the cache; :func:`topk_search_cached` and the serving engine
+    (``core/engine.py``) both stage through here so their hit/miss accounting
+    and LRU traffic are identical."""
+    n = x_q.shape[0]
+    docs = np.full((n, k), -1, np.int32)
+    dist = np.full((n, k), np.inf, np.float32)
+    miss_rows: "collections.OrderedDict[bytes, list]" = collections.OrderedDict()
+    for i in range(n):
+        key = AnswerCache.make_key(x_q[i], k, beam)
+        val = cache.get(key)
+        if val is not None:
+            docs[i], dist[i] = val
+        else:
+            miss_rows.setdefault(key, []).append(i)
+    return docs, dist, miss_rows
+
+
+def cache_fill(
+    cache: AnswerCache,
+    miss_rows: "collections.OrderedDict[bytes, list]",
+    d_new: np.ndarray, s_new: np.ndarray,
+    docs: np.ndarray, dist: np.ndarray,
+) -> None:
+    """Complete a :func:`cache_stage`: scatter the miss batch's answers
+    (``d_new``/``s_new`` [n_miss, k], one row per ``miss_rows`` entry in
+    order) back into the staged [n, k] arrays and insert each into the
+    cache."""
+    for j, (key, rows) in enumerate(miss_rows.items()):
+        val = (d_new[j].copy(), s_new[j].copy())
+        cache.put(key, val)
+        for i in rows:
+            docs[i], dist[i] = val
+
+
+def concat_request_rows(
+    rows_list: Sequence[np.ndarray],
+) -> Tuple[np.ndarray, List[int]]:
+    """Stack per-request query-row fragments into one engine batch.
+
+    Returns ``(x [R_total, d], bounds)`` where ``bounds`` are the cumulative
+    row offsets (len = n_requests + 1) that :func:`split_batch_answers` uses
+    to demux the batched answers. The engine scores each row independently
+    (descent and leaf top-k are per-row), so batching fragments this way
+    changes no request's answer — the serving engine's scatter side."""
+    bounds = [0]
+    for r in rows_list:
+        bounds.append(bounds[-1] + int(r.shape[0]))
+    if not rows_list:
+        raise ValueError("concat_request_rows needs at least one fragment")
+    return np.concatenate([np.asarray(r) for r in rows_list], axis=0), bounds
+
+
+def split_batch_answers(
+    docs: np.ndarray, dist: np.ndarray, bounds: List[int],
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Demux one batched answer pair back into per-request fragments along
+    the ``bounds`` offsets produced by :func:`concat_request_rows` (copies, so
+    a request's result never aliases the batch buffer)."""
+    return [
+        (docs[lo:hi].copy(), dist[lo:hi].copy())
+        for lo, hi in zip(bounds[:-1], bounds[1:])
+    ]
 
 
 def topk_search_cached(
@@ -756,28 +844,14 @@ def topk_search_cached(
     regenerated in place under an unchanged tree object (DESIGN.md §9)."""
     cache.bind(tree, corpus_token)
     x_q = np.asarray(q)
-    n = x_q.shape[0]
-    docs = np.full((n, k), -1, np.int32)
-    dist = np.full((n, k), np.inf, np.float32)
-    miss_rows: "collections.OrderedDict[bytes, list]" = collections.OrderedDict()
-    for i in range(n):
-        key = AnswerCache.make_key(x_q[i], k, beam)
-        val = cache.get(key)
-        if val is not None:
-            docs[i], dist[i] = val
-        else:
-            miss_rows.setdefault(key, []).append(i)
+    docs, dist, miss_rows = cache_stage(cache, x_q, k, beam)
     if miss_rows:
         rep = np.asarray([rows[0] for rows in miss_rows.values()])
         if search_fn is None:
             d_new, s_new = topk_search(tree, x_q[rep], k=k, beam=beam, chunk=chunk)
         else:
             d_new, s_new = search_fn(x_q[rep])
-        for j, (key, rows) in enumerate(miss_rows.items()):
-            val = (d_new[j].copy(), s_new[j].copy())
-            cache.put(key, val)
-            for i in rows:
-                docs[i], dist[i] = val
+        cache_fill(cache, miss_rows, d_new, s_new, docs, dist)
     return docs, dist
 
 

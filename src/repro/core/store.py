@@ -88,6 +88,7 @@ class BlockCache:
         self._blocks: "Dict[int, Dict[str, np.ndarray]]" = {}
         self._lru: List[int] = []  # least-recent first
         self._bytes = 0
+        self._peak = 0
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -109,6 +110,7 @@ class BlockCache:
             self.misses += 1
             arrays = self._loader(block_id)
             self._bytes += self._block_bytes(arrays)
+            self._peak = max(self._peak, self._bytes)
             self._blocks[block_id] = arrays
             self._lru.append(block_id)
             while self._bytes > self.budget_bytes and len(self._lru) > 1:
@@ -132,6 +134,22 @@ class BlockCache:
         return self._bytes
 
     @property
+    def peak_resident_bytes(self) -> int:
+        """High-water residency since construction or the last
+        :meth:`reset_peak` — the per-batch accounting seam the serving engine
+        (``core/engine.py``) reads: reset before a batch dispatch, read after,
+        and the difference window is exactly that batch's disk working set."""
+        return self._peak
+
+    def reset_peak(self) -> int:
+        """Restart peak tracking at the current residency; returns the peak
+        of the window just closed (so per-batch accounting is one call)."""
+        with self._lock:
+            prev = self._peak
+            self._peak = self._bytes
+            return prev
+
+    @property
     def stats(self) -> dict:
         """hit/miss/eviction counters + residency for reports."""
         total = self.hits + self.misses
@@ -139,7 +157,7 @@ class BlockCache:
             hits=self.hits, misses=self.misses, evictions=self.evictions,
             hit_rate=self.hits / total if total else 0.0,
             resident_bytes=self._bytes, resident_blocks=len(self._lru),
-            budget_bytes=self.budget_bytes,
+            peak_resident_bytes=self._peak, budget_bytes=self.budget_bytes,
         )
 
 

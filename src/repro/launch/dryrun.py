@@ -135,7 +135,7 @@ def compile_cell(
     spec = registry.get(arch)
     mesh = mesh or make_production_mesh(multi_pod=multi_pod)
     rules = registry.rules_for(spec, shape, multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with use_rules(rules, mesh):
         state, s_axes = registry.abstract_state(spec, shape)
         inputs, i_axes = registry.abstract_inputs(spec, shape)
@@ -148,9 +148,9 @@ def compile_cell(
         donate = (0,) if kind == "train" else ()
         with mesh:
             lowered = jax.jit(fn, donate_argnums=donate).lower(state, inputs)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
     hlo = compiled.as_text()
     rec = {
         "arch": arch,

@@ -1,0 +1,158 @@
+"""Open-loop load generation + reporting for the continuous-batching engine
+(DESIGN.md §8; served by ``launch/serve.py --engine``).
+
+Closed-loop replay (send a batch, wait, send the next) can never show
+overload — the client self-throttles to whatever the server sustains. An
+**open-loop** generator schedules arrivals on its own clock (Poisson
+inter-arrival gaps at a target rate, seeded → reproducible) and submits each
+request at its scheduled instant regardless of how the previous ones are
+doing; when the engine saturates, the bounded queue sheds and the report
+shows it, instead of the latency silently absorbing the backlog. This is the
+standard serving-benchmark arrival model (sglang-style benchmark pipelines)
+and what ``benchmarks/serving.py`` sweeps across rates.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import EngineSaturated, ResultHandle, ServingEngine
+
+
+def open_loop_arrivals(
+    rate_qps: float, n_requests: int, seed: int = 0,
+) -> np.ndarray:
+    """Relative arrival offsets (seconds, ascending, len ``n_requests``) for a
+    Poisson process at ``rate_qps`` — exponential inter-arrival gaps from a
+    seeded rng, so a sweep is reproducible request-for-request."""
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be > 0, got {rate_qps}")
+    if n_requests < 1:
+        raise ValueError(f"n_requests must be ≥ 1, got {n_requests}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_qps, n_requests)
+    gaps[0] = 0.0  # first request fires at t0
+    return np.cumsum(gaps)
+
+
+def run_load(
+    engine: ServingEngine,
+    requests: Sequence[Tuple[np.ndarray, int, int]],
+    rate_qps: float,
+    deadline_s: Optional[float] = None,
+    seed: int = 0,
+    clock: Callable[[], float] = time.perf_counter,
+    sleep: Callable[[float], None] = time.sleep,
+) -> dict:
+    """Drive ``engine`` with an open-loop arrival process and return the
+    merged report.
+
+    ``requests``: the request pool as ``(rows, k, beam)`` tuples, submitted
+    in order at :func:`open_loop_arrivals` instants (monotonic ``clock``;
+    ``sleep`` is a seam for tests). Sheds (:class:`EngineSaturated`) are
+    counted and skipped — open loop means the next arrival stays on
+    schedule. Returns the engine's :meth:`ServingEngine.stats` snapshot plus
+    load-side fields: ``offered_qps`` (requests / offered span),
+    ``target_qps``, ``completed`` handles' answers are *not* retained — use
+    :func:`submit_all` when the caller needs them."""
+    handles, stats = submit_all(
+        engine, requests, rate_qps, deadline_s=deadline_s, seed=seed,
+        clock=clock, sleep=sleep,
+    )
+    for h in handles:
+        if h is not None:
+            h.result()
+    out = engine.stats()
+    out.update(stats)
+    return out
+
+
+def submit_all(
+    engine: ServingEngine,
+    requests: Sequence[Tuple[np.ndarray, int, int]],
+    rate_qps: float,
+    deadline_s: Optional[float] = None,
+    seed: int = 0,
+    clock: Callable[[], float] = time.perf_counter,
+    sleep: Callable[[float], None] = time.sleep,
+) -> Tuple[List[Optional[ResultHandle]], dict]:
+    """Open-loop submission pass: returns ``(handles, load_stats)`` where
+    ``handles[i]`` is request *i*'s :class:`ResultHandle` or ``None`` if it
+    was shed at admission. ``load_stats`` carries ``target_qps`` and the
+    achieved ``offered_qps`` (arrival schedule pressure, not completion
+    throughput — the engine's own stats report that)."""
+    offsets = open_loop_arrivals(rate_qps, len(requests), seed=seed)
+    handles: List[Optional[ResultHandle]] = []
+    t0 = clock()
+    for (rows, k, beam), dt in zip(requests, offsets):
+        lag = (t0 + dt) - clock()
+        if lag > 0:
+            sleep(lag)
+        try:
+            handles.append(
+                engine.submit(rows, k=k, beam=beam, deadline_s=deadline_s)
+            )
+        except EngineSaturated:
+            handles.append(None)
+    span = max(clock() - t0, 1e-9)
+    return handles, dict(
+        target_qps=float(rate_qps),
+        offered_qps=len(requests) / span,
+    )
+
+
+def request_pool(
+    x: np.ndarray, n_requests: int, rows_per_request: int = 1,
+    k: int = 10, beam: int = 4, seed: int = 0,
+) -> List[Tuple[np.ndarray, int, int]]:
+    """Build a request pool by sampling row groups from a query matrix:
+    ``n_requests`` tuples of (``rows_per_request`` rows drawn with a seeded
+    rng, k, beam). Repeated draws are likely on small pools — which is the
+    point when an :class:`repro.core.query.AnswerCache` is staged."""
+    if rows_per_request < 1:
+        raise ValueError(
+            f"rows_per_request must be ≥ 1, got {rows_per_request}"
+        )
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, max(x.shape[0] - rows_per_request + 1, 1),
+                          n_requests)
+    return [
+        (np.ascontiguousarray(x[s:s + rows_per_request]), k, beam)
+        for s in starts
+    ]
+
+
+def report_lines(stats: dict, label: str = "engine") -> List[str]:
+    """Human-readable serving report (one string per line) from a
+    :func:`run_load` / :meth:`ServingEngine.stats` dict — the lines
+    ``serve.py --engine`` prints and CI greps."""
+    lat = stats.get("latency_ms", {})
+    lines = [
+        f"{label}: {stats['completed']} completed / {stats['admitted']} "
+        f"admitted, shed={stats['shed']} "
+        f"deadline_misses={stats['deadline_misses']}",
+        f"{label} latency: p50={lat.get('p50', 0.0):.2f}ms "
+        f"p95={lat.get('p95', 0.0):.2f}ms p99={lat.get('p99', 0.0):.2f}ms "
+        f"qps={stats.get('qps', 0.0):.0f}"
+        + (f" (offered {stats['offered_qps']:.0f}/s"
+           f" target {stats['target_qps']:.0f}/s)"
+           if "offered_qps" in stats else ""),
+        f"{label} batching: {stats['n_batches']} batches "
+        f"({stats['n_fragments']} fragments), "
+        f"occupancy={stats['batch_occupancy']:.2f}, "
+        f"max_queue_depth={stats['max_queue_depth']}",
+    ]
+    if stats.get("peak_batch_store_bytes"):
+        lines.append(
+            f"{label} store: peak per-batch residency "
+            f"{stats['peak_batch_store_bytes'] / 1e6:.2f}MB"
+        )
+    if "cache" in stats:
+        c = stats["cache"]
+        lines.append(
+            f"{label} cache: hits={c['hits']} misses={c['misses']} "
+            f"hit_rate={c['hit_rate']:.2f} size={c['size']}/{c['capacity']}"
+        )
+    return lines

@@ -38,20 +38,20 @@ def serve_lm(args):
     prefill = jax.jit(lambda p, t: T.prefill(p, t, cfg, max_seq=max_seq))
     decode = jax.jit(lambda p, c, t, pos: T.decode_step(p, c, t, pos, cfg))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = prefill(params, prompts)
     logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
 
     toks = jnp.argmax(logits, -1)[:, None]
     out = [toks]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.gen_len - 1):
         logits, cache = decode(params, cache, toks, jnp.int32(args.prompt_len + i))
         toks = jnp.argmax(logits, -1)[:, None]
         out.append(toks)
     jax.block_until_ready(toks)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     gen = jnp.concatenate(out, axis=1)
     print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
           f"decoded {args.gen_len} tokens in {t_decode:.2f}s "
@@ -71,21 +71,21 @@ def serve_retrieval(args):
     rng = np.random.default_rng(1)
     q = jnp.asarray(rng.normal(0, 0.3, (1, cfg.embed_dim)).astype(np.float32))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     scores, idx = R.retrieval_score(params, q, items, topk=10)
     jax.block_until_ready(scores)
-    t_brute = time.time() - t0
+    t_brute = time.perf_counter() - t0
 
     # K-tree ANN (paper's search tree): maximum inner product ≈ NN on the
     # unit sphere — normalise items for the index
     norm = items / jnp.maximum(jnp.linalg.norm(items, axis=1, keepdims=True), 1e-9)
-    t0 = time.time()
+    t0 = time.perf_counter()
     tree = kt.build(norm, order=32, batch_size=512)
-    t_build = time.time() - t0
+    t_build = time.perf_counter() - t0
     qn = q / jnp.maximum(jnp.linalg.norm(q), 1e-9)
-    t0 = time.time()
+    t0 = time.perf_counter()
     doc, dist = kt.nn_search(tree, qn)
-    t_ann = time.time() - t0
+    t_ann = time.perf_counter() - t0
     in_topk = int(doc[0]) in set(np.asarray(idx[0]).tolist())
     print(f"brute-force top-10 in {t_brute*1e3:.1f}ms over {n} candidates; "
           f"K-tree build {t_build:.2f}s, ANN query {t_ann*1e3:.1f}ms, "
@@ -102,11 +102,15 @@ def serve_paper_store(args):
     (``--budget-mb`` split evenly across the shards); ``--prefetch D`` moves
     the sequential disk scans (streaming build, single-device queries, the
     ground-truth block sweep) onto an async reader thread of that depth —
-    sharded queries fetch candidates on demand and are unaffected."""
+    sharded queries fetch candidates on demand and are unaffected.
+    ``--engine`` composes with all of it: the store-backed (and sharded)
+    search fn is handed to the continuous-batching ``ServingEngine``
+    (DESIGN.md §8.1), whose per-batch report includes peak store residency
+    from the shards' block caches."""
     from repro.core import ktree as kt
+    from repro.core.engine import make_search_fn
     from repro.core.query import (
-        AnswerCache, brute_force_topk_stream, recall_at_k, topk_search,
-        topk_search_cached, topk_search_sharded,
+        AnswerCache, brute_force_topk_stream, recall_at_k, topk_search_cached,
     )
     from repro.ckpt import restore_index, save_index
     from repro.core.store import open_store
@@ -122,28 +126,28 @@ def serve_paper_store(args):
         # restore by manifest reference: the checkpoint names the store it
         # was built over (and its content hash) — serve that one, don't
         # touch/describe the --store path it may or may not equal
-        t0 = time.time()
+        t0 = time.perf_counter()
         tree, store = restore_index(args.ckpt, budget_bytes=budget)
         print(f"restored store-backed index from {args.ckpt} in "
-              f"{time.time()-t0:.2f}s (depth={int(tree.depth)}, "
+              f"{time.perf_counter()-t0:.2f}s (depth={int(tree.depth)}, "
               f"nodes={int(tree.n_nodes)}, store {store.path}: "
               f"{store.n_docs} docs, {store.n_blocks} blocks × "
               f"{store.block_docs}, budget {budget/1e6:.1f}MB)")
     else:
-        t0 = time.time()
+        t0 = time.perf_counter()
         corpus_store(corpus_spec, args.store, representation=rep,
                      block_docs=args.block_docs)
         store = open_store(args.store, budget_bytes=budget)
         print(f"store {args.store}: {store.n_docs} docs, {store.n_blocks} "
               f"blocks × {store.block_docs} docs ({store.nbytes/1e6:.1f}MB "
-              f"on disk, budget {budget/1e6:.1f}MB) in {time.time()-t0:.2f}s")
-        t0 = time.time()
+              f"on disk, budget {budget/1e6:.1f}MB) in {time.perf_counter()-t0:.2f}s")
+        t0 = time.perf_counter()
         tree = kt.build_from_store(
             store, order=args.order, medoid=rep == "sparse_medoid",
             batch_size=256, prefetch=args.prefetch,
         )
         print(f"streaming-built K-tree over {store.n_docs} docs in "
-              f"{time.time()-t0:.2f}s (depth={int(tree.depth)}, "
+              f"{time.perf_counter()-t0:.2f}s (depth={int(tree.depth)}, "
               f"nodes={int(tree.n_nodes)}, "
               f"cache: {store.cache.stats['evictions']} evictions, "
               f"resident {store.cache.resident_bytes/1e6:.1f}MB)")
@@ -166,36 +170,40 @@ def serve_paper_store(args):
             mesh, store, budget_bytes=max(budget // args.mesh, 1)
         )
         mode = f"sharded×{args.mesh}"
-        run = lambda src: topk_search_sharded(
-            mesh, tree, src, corpus=sshards, k=args.k, beam=args.beam
-        )
+        search_fn = make_search_fn(tree, mesh=mesh, corpus=sshards)
+        block_caches = [p.store.cache for p in sshards.parts]
     else:
         sshards = None
         mode = "single-device"
-        run = lambda src: topk_search(
-            tree, src, k=args.k, beam=args.beam, prefetch=args.prefetch
-        )
+        search_fn = make_search_fn(tree, prefetch=args.prefetch)
+        block_caches = [store.cache]
+    run = lambda src: search_fn(src, args.k, args.beam)
     run(q_view)  # warm the jit cache
+    if args.engine:
+        return serve_engine_mode(
+            args, search_fn, x_q, tree, mode=f"{mode}, out-of-core",
+            corpus_token=store.manifest_hash, block_caches=block_caches,
+        )
     if args.cache:
         # miss batches are dense rows (content hashing addresses raw bytes),
         # so the miss engine is the dense-row engine — warm it *outside* the
         # timed loop, or its first-compile cost lands in the QPS report
         run(x_q)
         cache = AnswerCache(args.cache)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(2):  # pass 1 cold-fills, pass 2 replays (hit path)
             docs, _ = topk_search_cached(
                 tree, x_q, cache, k=args.k, beam=args.beam,
                 search_fn=run, corpus_token=store.manifest_hash,
             )
-        qps = 2 * nq / max(time.time() - t0, 1e-9)
+        qps = 2 * nq / max(time.perf_counter() - t0, 1e-9)
         s = cache.stats
         print(f"cache: hits={s['hits']} misses={s['misses']} "
               f"hit_rate={s['hit_rate']:.2f} size={s['size']}/{s['capacity']}")
     else:
-        t0 = time.time()
+        t0 = time.perf_counter()
         docs, _ = run(q_view)
-        qps = nq / max(time.time() - t0, 1e-9)
+        qps = nq / max(time.perf_counter() - t0, 1e-9)
 
     cs = store.cache.stats
     print(f"store cache: hit_rate={cs['hit_rate']:.2f} "
@@ -219,6 +227,90 @@ def serve_paper_store(args):
     print(f"{nq} queries: beam={args.beam} k={args.k} "
           f"recall@{args.k}={recall:.3f} {qps:.0f} QPS "
           f"({store.kind} store, out-of-core, {mode})")
+
+
+def serve_engine_mode(args, search_fn, x_q, tree, mode,
+                      corpus_token=None, block_caches=()):
+    """``--engine``: continuous-batching service mode (DESIGN.md §8).
+
+    Instead of replaying the query file as one closed batch, requests are
+    generated **open-loop** at ``--rate`` arrivals/s (Poisson gaps, seeded)
+    and admitted into a ``core.engine.ServingEngine`` — bounded queue
+    (``--max-queue``, overload sheds instead of queueing unboundedly),
+    dynamic batches up to ``--row-budget`` rows dispatched on fill or the
+    oldest request's deadline forcing point (``--max-wait-ms`` /
+    ``--deadline-ms``), optional ``--cache`` answer-cache pre-stage. The
+    report is p50/p95/p99 latency + QPS + shed/occupancy/queue-depth — and a
+    bit-identity check of one served request against the offline engine."""
+    from repro.core.engine import ServingEngine
+    from repro.core.query import AnswerCache
+    from repro.launch.engine import report_lines, request_pool, run_load
+
+    cache = AnswerCache(args.cache) if args.cache else None
+    xw = np.asarray(x_q)
+    pool = request_pool(
+        xw, n_requests=args.requests,
+        rows_per_request=args.rows_per_req, k=args.k, beam=args.beam,
+    )
+    # warm the chunk-aligned shapes dynamic batches hit: the engine pads each
+    # request to its pow2 bucket and chunks fragments at the bucket, with the
+    # fragment's chunk count also pow2-padded — so the compile ladder is
+    # (bucket × pow2 chunk counts). First compiles land here, not in the
+    # latency percentiles
+    from repro.core.engine import pow2_bucket
+
+    bucket = pow2_bucket(args.rows_per_req)
+    cap = pow2_bucket(args.row_budget)
+
+    def _warm(s, chunk_rows):
+        reps = -(-s // xw.shape[0])  # ceil
+        search_fn(np.tile(xw, (reps, 1))[:s], args.k, args.beam,
+                  chunk_rows=chunk_rows)
+
+    s = bucket
+    while True:
+        _warm(s, bucket)
+        if s >= 2 * cap:
+            break
+        s *= 2
+    if cache is not None:
+        # cache miss batches run at single-row chunking (per-row-stable
+        # answers); warm its pow2 miss-count ladder too
+        m = 1
+        while m <= cap:
+            _warm(m, 1)
+            m *= 2
+    deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+    print(f"engine serving ({mode}): rate={args.rate:.0f}/s "
+          f"requests={args.requests} rows/req={args.rows_per_req} "
+          f"row_budget={args.row_budget} max_queue={args.max_queue} "
+          f"max_wait={args.max_wait_ms}ms"
+          + (f" deadline={args.deadline_ms}ms" if deadline else ""))
+    with ServingEngine(
+        search_fn, row_budget=args.row_budget, max_queue=args.max_queue,
+        max_wait_s=args.max_wait_ms / 1e3, cache=cache, tree=tree,
+        corpus_token=corpus_token, block_caches=block_caches,
+    ) as eng:
+        stats = run_load(eng, pool, rate_qps=args.rate, deadline_s=deadline)
+        rows, k, beam = pool[0]
+        d_eng, s_eng = eng.submit(rows, k=k, beam=beam).result(timeout=120)
+    if cache is None:
+        d_off, s_off = search_fn(rows, k, beam)
+    else:
+        # cache entries are per-row answers (computed at single-row
+        # chunking), so the offline reference is the per-row standalone calls
+        parts = [search_fn(rows[i:i + 1], k, beam)
+                 for i in range(rows.shape[0])]
+        d_off = np.concatenate([np.asarray(p[0]) for p in parts])
+        s_off = np.concatenate([np.asarray(p[1]) for p in parts])
+    ok = bool((np.asarray(d_eng) == np.asarray(d_off)).all()
+              and (np.asarray(s_eng) == np.asarray(s_off)).all())
+    for line in report_lines(stats):
+        print(line)
+    print("engine answers vs offline engine: "
+          + ("bit-identical" if ok else "MISMATCH"))
+    if not ok:
+        raise SystemExit("engine answers diverged from the offline engine")
 
 
 def make_dense_rows(store, nq: int) -> np.ndarray:
@@ -246,6 +338,20 @@ def _dense_store_blocks(store, prefetch: int = 0):
             yield lo, xb
 
 
+def _dense_backend_blocks(backend, n_docs: int, block: int = 16384):
+    """Yield ``(row_offset, dense rows)`` per backend row block for
+    ``brute_force_topk_stream`` — the in-memory counterpart of
+    :func:`_dense_store_blocks`. Block size matches ``brute_force_topk``'s
+    ``doc_block`` default, so the streamed ground truth merges at the same
+    boundaries (shared ``_merge_topk`` step → identical ids); only one
+    densified block is host-resident at a time instead of the whole corpus."""
+    import jax.numpy as jnp
+
+    for lo in range(0, n_docs, block):
+        rows = jnp.arange(lo, min(lo + block, n_docs), dtype=jnp.int32)
+        yield lo, np.asarray(backend.take(rows).astype(jnp.float32))
+
+
 def serve_paper(args):
     """K-tree retrieval serving: build-or-restore the index, answer batched
     top-k beam-search queries (single-device, or shard-parallel with
@@ -253,9 +359,9 @@ def serve_paper(args):
     report recall@k vs brute force and QPS. ``--store DIR`` switches to the
     out-of-core path (:func:`serve_paper_store`)."""
     from repro.core import ktree as kt
+    from repro.core.engine import make_search_fn
     from repro.core.query import (
-        AnswerCache, brute_force_topk, recall_at_k, topk_search,
-        topk_search_cached, topk_search_sharded,
+        AnswerCache, brute_force_topk_stream, recall_at_k, topk_search_cached,
     )
     from repro.ckpt import restore_ktree, save_ktree
     from repro.data.pipeline import corpus_backend
@@ -275,7 +381,7 @@ def serve_paper(args):
         else args.ckpt + ".npz"
     )
     if ckpt_file and os.path.exists(ckpt_file):
-        t0 = time.time()
+        t0 = time.perf_counter()
         tree = restore_ktree(args.ckpt)
         # guard against serving an index built over a different corpus: doc
         # ids in the tree must address rows of *this* corpus
@@ -290,12 +396,12 @@ def serve_paper(args):
                 f"dim={backend.dim} n_docs={corpus_spec.n_docs}); "
                 "rebuild with a fresh --ckpt path or matching --n-docs/--culled"
             )
-        print(f"restored K-tree from {ckpt_file} in {time.time()-t0:.2f}s "
+        print(f"restored K-tree from {ckpt_file} in {time.perf_counter()-t0:.2f}s "
               f"(depth={int(tree.depth)}, nodes={int(tree.n_nodes)})")
     else:
-        t0 = time.time()
+        t0 = time.perf_counter()
         tree = kt.build(backend, order=args.order, medoid=medoid, batch_size=256)
-        print(f"built K-tree over {args.n_docs} docs in {time.time()-t0:.2f}s "
+        print(f"built K-tree over {args.n_docs} docs in {time.perf_counter()-t0:.2f}s "
               f"(depth={int(tree.depth)}, nodes={int(tree.n_nodes)})")
         if args.ckpt:
             print(f"saved index to {save_ktree(args.ckpt, tree)}")
@@ -311,41 +417,44 @@ def serve_paper(args):
         mesh = make_serving_mesh(args.mesh)
         shards = backend.shard(mesh)  # rows placed across shards once
         mode = f"sharded×{args.mesh}"
-
-        def run(xq):
-            return topk_search_sharded(
-                mesh, tree, xq, corpus=shards, k=args.k, beam=args.beam
-            )
+        search_fn = make_search_fn(tree, mesh=mesh, corpus=shards)
     else:
         mode = "single-device"
+        search_fn = make_search_fn(tree)
 
-        def run(xq):
-            return topk_search(tree, xq, k=args.k, beam=args.beam)
+    def run(xq):
+        return search_fn(xq, args.k, args.beam)
 
     run(x_q)  # warm the jit cache
+    if args.engine:
+        return serve_engine_mode(args, search_fn, x_q, tree, mode=mode)
     if args.cache:
         # timed section answers the stream twice: pass 1 cold-fills the LRU,
         # pass 2 replays it — the hit path the report's hit_rate measures
         cache = AnswerCache(args.cache)
-        t0 = time.time()
+        t0 = time.perf_counter()
         docs, _ = topk_search_cached(
             tree, x_q, cache, k=args.k, beam=args.beam, search_fn=run
         )
         docs, _ = topk_search_cached(
             tree, x_q, cache, k=args.k, beam=args.beam, search_fn=run
         )
-        qps = 2 * nq / max(time.time() - t0, 1e-9)
+        qps = 2 * nq / max(time.perf_counter() - t0, 1e-9)
         s = cache.stats
         print(f"cache: hits={s['hits']} misses={s['misses']} "
               f"hit_rate={s['hit_rate']:.2f} size={s['size']}/{s['capacity']}")
     else:
-        t0 = time.time()
+        t0 = time.perf_counter()
         docs, _ = run(x_q)
-        qps = nq / max(time.time() - t0, 1e-9)
+        qps = nq / max(time.perf_counter() - t0, 1e-9)
 
-    # brute-force ground truth on the query slice (exact squared distances)
-    x_all = np.asarray(backend.take(jnp.arange(corpus_spec.n_docs, dtype=jnp.int32)))
-    recall = recall_at_k(docs, brute_force_topk(x_q, x_all, args.k))
+    # brute-force ground truth on the query slice (exact squared distances),
+    # streamed block-wise off the backend — densifying the whole corpus in one
+    # take() defeated the blocked brute force for sparse/large corpora
+    true = brute_force_topk_stream(
+        x_q, _dense_backend_blocks(backend, corpus_spec.n_docs), args.k
+    )
+    recall = recall_at_k(docs, true)
     print(f"{nq} queries: beam={args.beam} k={args.k} "
           f"recall@{args.k}={recall:.3f} {qps:.0f} QPS ({rep} backend, {mode})")
 
@@ -389,6 +498,29 @@ def main():
                     "build, single-device queries, ground truth; 0 = "
                     "synchronous). Sharded queries (--mesh) fetch candidates "
                     "on demand per chunk and are unaffected")
+    # --- continuous-batching engine mode (DESIGN.md §8) ---
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the continuous-batching engine: "
+                    "open-loop request arrivals at --rate, bounded admission "
+                    "queue, dynamic batches, p50/p95/p99 latency report. "
+                    "Composes with --mesh/--cache/--store")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="open-loop arrival rate, requests/s (--engine)")
+    ap.add_argument("--requests", type=int, default=512,
+                    help="number of generated requests (--engine)")
+    ap.add_argument("--rows-per-req", type=int, default=1,
+                    help="query rows per generated request (--engine)")
+    ap.add_argument("--row-budget", type=int, default=256,
+                    help="max query rows per dispatched batch (--engine)")
+    ap.add_argument("--max-queue", type=int, default=128,
+                    help="admission-queue bound in requests; a full queue "
+                    "sheds instead of growing (--engine)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="batch-formation wait cap, ms (--engine)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request completion deadline, ms; 0 = none. "
+                    "The batcher dispatches no later than the oldest "
+                    "request's deadline forcing point (--engine)")
     args = ap.parse_args()
     spec = registry.get(args.arch)
     if spec.family == "lm":

@@ -159,7 +159,7 @@ def train_loop(
     from repro import ckpt as ckpt_lib
 
     start = int(state.step)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, n_steps):
         batch = batch_fn(step)
         state, metrics = step_fn(state, batch)
@@ -167,4 +167,4 @@ def train_loop(
             on_metrics(step, jax.tree.map(float, metrics))
         if ckpt_dir and ((step + 1) % ckpt_every == 0 or step + 1 == n_steps):
             ckpt_lib.save(ckpt_dir, state.as_dict(), step + 1)
-    return state, time.time() - t0
+    return state, time.perf_counter() - t0

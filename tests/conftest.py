@@ -6,6 +6,14 @@ import types
 # override belongs ONLY to the dry-run entry point)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute tests (subprocess re-runs under forced device "
+        "counts); deselect with -m 'not slow'",
+    )
+
 # ---------------------------------------------------------------------------
 # hypothesis guard: the property tests import `hypothesis` at module scope, so
 # a missing install used to kill collection of six whole modules. When the

@@ -308,3 +308,118 @@ def test_query_identity_after_restore(tmp_path, dense_setup):
     d2, s2 = topk_search(tree2, q, k=10, beam=4)
     np.testing.assert_array_equal(d1, d2)
     np.testing.assert_array_equal(s1, s2)
+
+
+# ---------------------------------------------------------------------------
+# serving-engine seams (DESIGN.md §8): batch scatter/gather helpers, cache
+# staging, empty-batch edges, and answer-cache thread safety
+# ---------------------------------------------------------------------------
+
+def test_topk_search_empty_query_batch(dense_setup):
+    tree, _, _ = dense_setup
+    docs, dist = topk_search(tree, np.zeros((0, 8), np.float32), k=5, beam=2)
+    assert docs.shape == (0, 5) and dist.shape == (0, 5)
+    assert docs.dtype == np.int32 and dist.dtype == np.float32
+
+
+def test_topk_search_cached_empty_batch_and_all_hits(dense_setup):
+    from repro.core.query import AnswerCache, topk_search_cached
+
+    tree, x, _ = dense_setup
+    cache = AnswerCache(capacity=8)
+    # nq = 0: no probes, no engine call, well-formed empty answers
+    d0, s0 = topk_search_cached(
+        tree, np.zeros((0, 8), np.float32), cache, k=5, beam=2)
+    assert d0.shape == (0, 5) and s0.shape == (0, 5)
+    assert cache.stats["hits"] == 0 and cache.stats["misses"] == 0
+    # all-hit batch: the miss branch (engine call) must not run at all
+    q = x[:3]
+    d1, s1 = topk_search_cached(tree, q, cache, k=5, beam=2)
+    def boom(_):
+        raise AssertionError("engine called on an empty miss batch")
+    d2, s2 = topk_search_cached(tree, q, cache, k=5, beam=2, search_fn=boom)
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(s1, s2)
+    assert cache.stats["hits"] == 3
+
+
+def test_concat_split_round_trip():
+    from repro.core.query import concat_request_rows, split_batch_answers
+
+    rng = np.random.default_rng(0)
+    frags = [rng.normal(0, 1, (r, 4)).astype(np.float32) for r in (1, 3, 2)]
+    x, bounds = concat_request_rows(frags)
+    assert x.shape == (6, 4) and bounds == [0, 1, 4, 6]
+    docs = np.arange(6 * 2, dtype=np.int32).reshape(6, 2)
+    dist = docs.astype(np.float32)
+    parts = split_batch_answers(docs, dist, bounds)
+    assert len(parts) == 3
+    for (d, s), (lo, hi) in zip(parts, zip(bounds[:-1], bounds[1:])):
+        np.testing.assert_array_equal(d, docs[lo:hi])
+        np.testing.assert_array_equal(s, dist[lo:hi])
+        d[:] = -7  # split copies: mutating a part must not alias the batch
+    assert (docs >= 0).all()
+    with pytest.raises(ValueError):
+        concat_request_rows([])
+
+
+def test_cache_stage_and_fill_accounting(dense_setup):
+    from repro.core.query import AnswerCache, cache_fill, cache_stage
+
+    tree, x, _ = dense_setup
+    cache = AnswerCache(capacity=8)
+    cache.bind(tree)
+    # rows 0 and 2 identical -> one dedup'd miss; row 1 distinct
+    q = np.stack([x[0], x[1], x[0]])
+    docs, dist, miss = cache_stage(cache, q, 4, 2)
+    assert (docs == -1).all() and np.isinf(dist).all()
+    assert len(miss) == 2  # dedup within the batch
+    assert list(miss.values())[0] == [0, 2]
+    d_new = np.arange(2 * 4, dtype=np.int32).reshape(2, 4)
+    s_new = d_new.astype(np.float32)
+    cache_fill(cache, miss, d_new, s_new, docs, dist)
+    np.testing.assert_array_equal(docs[0], d_new[0])
+    np.testing.assert_array_equal(docs[2], d_new[0])
+    np.testing.assert_array_equal(docs[1], d_new[1])
+    assert len(cache) == 2
+    # a second stage over the same rows is all hits
+    docs2, dist2, miss2 = cache_stage(cache, q, 4, 2)
+    assert not miss2
+    np.testing.assert_array_equal(docs2, docs)
+    np.testing.assert_array_equal(dist2, dist)
+
+
+def test_answer_cache_thread_safety_racing_threads():
+    """Two threads hammering get/put on a capacity-1 cache: counters stay
+    exact (every get is a hit or a miss), size bounded, no corruption — the
+    serving engine consults the cache from its dispatcher thread while other
+    threads admit requests."""
+    import threading
+    from repro.core.query import AnswerCache
+
+    cache = AnswerCache(capacity=1)
+    keys = [AnswerCache.make_key(np.float32([i, i]), 3, 1) for i in range(4)]
+    val = (np.zeros((3,), np.int32), np.zeros((3,), np.float32))
+    n_iter = 400
+    results = {}
+
+    def worker(tag, order):
+        local = 0
+        for i in range(n_iter):
+            key = keys[order[i % len(order)]]
+            if cache.get(key) is None:
+                cache.put(key, val)
+            else:
+                local += 1
+        results[tag] = local
+
+    t1 = threading.Thread(target=worker, args=("a", [0, 1, 2, 3]))
+    t2 = threading.Thread(target=worker, args=("b", [3, 2, 1, 0]))
+    t1.start(); t2.start(); t1.join(); t2.join()
+    st = cache.stats
+    assert st["hits"] + st["misses"] == 2 * n_iter  # every get counted once
+    assert st["hits"] == results["a"] + results["b"]
+    assert len(cache) == 1  # capacity bound held under the race
+    # the surviving entry is intact
+    k_live = [k for k in keys if cache.get(k) is not None]
+    assert len(k_live) == 1
