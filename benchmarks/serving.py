@@ -76,10 +76,10 @@ def main(
             break
         s *= 2
     if cache_capacity:
-        m = 1
-        while m <= cap:
-            _warm(m, 1)
-            m *= 2
+        miss_rows = 1
+        while miss_rows <= cap:
+            _warm(miss_rows, 1)
+            miss_rows *= 2
     # capacity anchor: flood a fresh engine (open loop at an absurd rate) and
     # take its achieved completion rate — this includes dispatch, demux, and
     # Python-threading overhead, so the 0.5x leg of the sweep really is

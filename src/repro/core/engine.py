@@ -462,9 +462,9 @@ class ServingEngine:
         so answers are bit-identical per request. The fragment's chunk count
         is padded to a power of two as well (whole dummy chunks of the last
         row) so compiles stay bounded per (bucket, pow2 chunk count), not per
-        batch composition. ``bucket None`` (an oversized request) dispatches
-        that request alone with the search fn's own default chunking — the
-        literal offline call.
+        batch composition. ``bucket None`` (oversized requests) dispatches
+        each request in the group alone with the search fn's own default
+        chunking — the literal offline call per request.
 
         With a cache staged, hit rows are answered without engine rows and
         the deduplicated miss batch runs at ``chunk_rows = 1`` — each cache
@@ -472,9 +472,7 @@ class ServingEngine:
         so repeat single-row requests stay bit-identical however they
         batch."""
         if bucket is None:
-            p = group[0]
-            docs, dist = self._call(p.rows, k, beam)
-            return [(docs, dist)]
+            return [self._call(p.rows, k, beam) for p in group]
         x, bounds = concat_request_rows([p.rows for p in group])
         if self.cache is not None:
             docs, dist, miss = cache_stage(self.cache, x, k, beam)
@@ -508,6 +506,12 @@ class ServingEngine:
             for (k, beam, bucket), group in self._fragments(batch).items():
                 n_frags += 1
                 answers = self._run_fragment(group, k, beam, bucket)
+                if len(answers) != len(group):
+                    raise RuntimeError(
+                        f"fragment (k={k}, beam={beam}, bucket={bucket}) "
+                        f"returned {len(answers)} answers for "
+                        f"{len(group)} requests"
+                    )
                 for p, ans in zip(group, answers):
                     t_done = self.recorder.now()
                     self.recorder.record(p.t_admit, t_done)

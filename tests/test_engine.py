@@ -173,6 +173,26 @@ def test_engine_oversized_request_still_served():
     _assert_bit_identical(got, _offline(tree, q[:11], 4, 2))
 
 
+def test_engine_two_oversized_same_setting_requests_both_served():
+    # regression: two bucket-None requests (rows > the search fn's chunk)
+    # sharing (k, beam) land in ONE fragment; each must get its own offline
+    # call — the engine once answered only the first and left every later
+    # handle in the group unset (its caller blocked forever)
+    tree, q = _mini_case()
+    fn = make_search_fn(tree, chunk=8)
+    reqs = [q[:11], q[3:13]]
+    for r in reqs:  # warm the offline shapes outside the engine
+        fn(r, 4, 2)
+    with ServingEngine(fn, row_budget=64, max_queue=8,
+                       max_wait_s=0.25) as eng:
+        handles = [eng.submit(r, k=4, beam=2) for r in reqs]
+        results = [h.result(timeout=120) for h in handles]
+    for r, got in zip(reqs, results):
+        _assert_bit_identical(got, fn(r, 4, 2))
+    st = eng.stats()
+    assert st["completed"] == len(reqs) and st["failed"] == 0
+
+
 # ---------------------------------------------------------------- overload
 
 def test_engine_overload_sheds_at_bounded_queue():
