@@ -1,0 +1,314 @@
+"""Chaos bench (DESIGN.md §10): availability + latency under injected faults.
+
+Measures the hardened serving path as a *fault-tolerance contract*, not a
+throughput number: a seeded :class:`repro.core.faults.FaultPlan` injects
+transient read errors (a sweep of rates) and in-flight bit-flip corruption
+behind the store, and every leg reports
+
+- **availability** — fraction of query rows answered (degrade mode drops
+  only rows whose block is quarantined; everything else must answer);
+- **strict_ok** — fraction of *answered* rows bit-identical to a fault-free
+  reference run (the zero-silent-wrong-answers criterion: this must be 1.0
+  on every leg, and the bench asserts it);
+- **p50/p99 per-call latency** — what retry/backoff costs the tail;
+- the store's hardened-read counters (retries, verify failures,
+  quarantines).
+
+Three sections:
+
+1. **store legs** — store-backed ``topk_search`` over the whole corpus at
+   transient fault rates 0 / 0.05 / 0.10, plus one leg with a persistently
+   corrupt block (digest verification catches the flip, the block
+   quarantines, exactly its rows drop).
+2. **engine leg** — a :class:`repro.core.engine.ServingEngine` with
+   ``request_timeout_s`` driven through a search fn that stalls on a seeded
+   subset of calls: the watchdog expires the stalled requests with
+   ``EngineTimeout`` and the bench asserts every admitted request resolved
+   (completed + failed == admitted — the no-hang guarantee).
+3. **fsck leg** — flip a byte of one block file on disk, time
+   ``fsck_store`` (detect) and ``repair_store`` (excise + manifest rewrite),
+   then check a degraded query over the repaired store answers the
+   surviving rows bit-identically to the fault-free reference.
+
+Results land in ``BENCH_chaos.json`` (``--json``) so the CI chaos job
+archives the availability/latency trajectory per commit.
+
+Run:  PYTHONPATH=src python benchmarks/chaos.py [--smoke] \
+          [--json BENCH_chaos.json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _percentiles(lat_ms):
+    lat = np.asarray(lat_ms, np.float64)
+    return {
+        "p50": float(np.percentile(lat, 50)),
+        "p99": float(np.percentile(lat, 99)),
+    }
+
+
+def _run_leg(tree, store, k, beam, query_batch, on_fault="degrade"):
+    """Query the full corpus back against the index in ``query_batch``-row
+    calls; returns (docs, dist, per-call latencies ms, dropped row ids)."""
+    n = store.n_docs
+    docs = np.full((n, k), -1, np.int32)
+    dist = np.full((n, k), np.inf, np.float32)
+    lat_ms, dropped = [], []
+    from repro.core.query import topk_search
+
+    for lo in range(0, n, query_batch):
+        hi = min(lo + query_batch, n)
+        t0 = time.perf_counter()
+        out = topk_search(tree, store.view(lo, hi), k=k, beam=beam,
+                          on_fault=on_fault)
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+        docs[lo:hi], dist[lo:hi] = out[0], out[1]
+        if len(out) == 3:
+            dropped.extend(lo + r for r in out[2].dropped_query_rows)
+    return docs, dist, lat_ms, sorted(dropped)
+
+
+def main(
+    n_docs: int = 4000,
+    culled: int = 800,
+    order: int = 16,
+    k: int = 10,
+    beam: int = 4,
+    block_docs: int = 256,
+    query_batch: int = 64,
+    fault_rates=(0.0, 0.05, 0.10),
+    engine_requests: int = 256,
+    engine_stall_rate: float = 0.1,
+    seed: int = 0,
+    store_dir: str | None = None,
+    json_path: str | None = None,
+):
+    """Run the chaos sweep; returns ``(name, us_per_call, derived)`` rows."""
+    from repro.core import ktree as kt
+    from repro.core.engine import ServingEngine, make_search_fn, pow2_bucket
+    from repro.core.faults import FaultPlan, _coin
+    from repro.core.fsck import fsck_store, repair_store
+    from repro.core.store import open_store, save_store
+    from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
+    from repro.launch.engine import request_pool, run_load
+    from repro.sparse.csr import csr_to_dense
+
+    spec = scaled(INEX_LIKE, n_docs=n_docs, culled=culled)
+    m, _ = prepared_corpus(spec, seed=seed)
+    x_all = np.asarray(csr_to_dense(m))
+    tree = kt.build(jnp.asarray(x_all), order=order, batch_size=256,
+                    key=jax.random.PRNGKey(seed))
+
+    tmp = None
+    if store_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="chaos_store_")
+        store_dir = tmp.name
+    path = os.path.join(store_dir, "store")
+    save_store(path, x_all, block_docs=block_docs)
+
+    rows, blob = [], {
+        "n_docs": n_docs, "k": k, "beam": beam, "block_docs": block_docs,
+        "query_batch": query_batch, "seed": seed, "legs": {},
+    }
+
+    # fault-free reference: same call pattern as every leg, so bit-identity
+    # comparisons are apples-to-apples
+    ref_store = open_store(path)
+    d_ref, s_ref, _, _ = _run_leg(tree, ref_store, k, beam, query_batch,
+                                  on_fault="raise")
+
+    corrupt_block = ref_store.n_blocks - 1
+    legs = [(f"rate_{r:g}", FaultPlan(seed=seed + 1, transient_rate=r), ())
+            for r in fault_rates]
+    legs.append((
+        "corrupt_1block",
+        FaultPlan(seed=seed + 1, transient_rate=fault_rates[-1],
+                  corrupt_blocks=(corrupt_block,)),
+        tuple(range(*ref_store.block_rows(corrupt_block))),
+    ))
+    for name, plan, expect_dropped in legs:
+        store = open_store(path, fault_plan=plan)
+        t0 = time.perf_counter()
+        docs, dist, lat_ms, dropped = _run_leg(
+            tree, store, k, beam, query_batch
+        )
+        span = time.perf_counter() - t0
+        answered = np.setdiff1d(np.arange(n_docs), np.asarray(dropped, int))
+        availability = answered.size / n_docs
+        strict_ok = float(
+            np.mean((docs[answered] == d_ref[answered]).all(1)
+                    & (dist[answered] == s_ref[answered]).all(1))
+        ) if answered.size else 1.0
+        assert strict_ok == 1.0, (
+            f"chaos leg {name}: answered rows diverged from the fault-free "
+            f"reference (strict_ok={strict_ok}) — silent wrong answers"
+        )
+        assert tuple(dropped) == expect_dropped, (
+            f"chaos leg {name}: dropped rows {dropped[:8]}... != expected "
+            f"{expect_dropped[:8]}..."
+        )
+        cs = store.cache.stats
+        pct = _percentiles(lat_ms)
+        rows.append((
+            f"chaos_{name}", 1e6 * span / max(len(lat_ms), 1),
+            f"availability={availability:.3f} strict_ok={strict_ok:.3f} "
+            f"p50={pct['p50']:.1f}ms p99={pct['p99']:.1f}ms "
+            f"retries={cs['read_retries']} verify_fail={cs['verify_failures']} "
+            f"quarantined={cs['quarantined']}",
+        ))
+        blob["legs"][name] = {
+            "transient_rate": plan.transient_rate,
+            "corrupt_blocks": sorted(plan.corrupt_blocks),
+            "availability": availability, "strict_ok": strict_ok,
+            "latency_ms": pct, "qps": n_docs / max(span, 1e-9),
+            "dropped_rows": len(dropped),
+            "read_retries": cs["read_retries"],
+            "read_errors": cs["read_errors"],
+            "verify_failures": cs["verify_failures"],
+            "quarantined": cs["quarantined"],
+            "injected": plan.stats,
+        }
+
+    # --- engine leg: stalls vs the watchdog (no request may hang) ----------
+    base_fn = make_search_fn(tree)
+    nq = min(1024, n_docs)
+    x_q = x_all[:nq]
+    # a stall blocks the dispatcher, so requests arriving during it age in
+    # the queue — the arrival rate is kept moderate so a stall expires its
+    # own victims (watchdog timeouts > 0) without starving the whole stream
+    stall_s, timeout_s, rate_qps = 0.08, 0.05, 50.0
+    calls = [0]
+
+    def flaky_fn(x, k_, beam_, chunk_rows=None):
+        i = calls[0]
+        calls[0] += 1
+        if _coin(seed + 2, "stall", i) < engine_stall_rate:
+            time.sleep(stall_s)
+        return base_fn(x, k_, beam_, chunk_rows=chunk_rows)
+
+    flaky_fn.chunk = base_fn.chunk
+    flaky_fn.on_fault = None
+    bucket, cap = pow2_bucket(1), pow2_bucket(32)
+    s = bucket
+    while True:  # warm the engine's compile ladder outside the timed run
+        reps = -(-s // nq)
+        base_fn(np.tile(x_q, (reps, 1))[:s], k, beam, chunk_rows=bucket)
+        if s >= 2 * cap:
+            break
+        s *= 2
+    pool = request_pool(x_q, n_requests=engine_requests, k=k, beam=beam,
+                        seed=seed + 3)
+    with ServingEngine(flaky_fn, row_budget=32, max_queue=engine_requests,
+                       request_timeout_s=timeout_s) as eng:
+        stats = run_load(eng, pool, rate_qps=rate_qps, seed=seed + 4)
+    resolved = stats["completed"] + stats["failed"]
+    assert resolved == stats["admitted"], (
+        f"engine chaos leg: {stats['admitted'] - resolved} requests never "
+        f"resolved — a hang the watchdog should have expired"
+    )
+    lat = stats["latency_ms"]
+    rows.append((
+        "chaos_engine_stalls", 1e6 / max(stats["qps"], 1e-9),
+        f"admitted={stats['admitted']} completed={stats['completed']} "
+        f"timeouts={stats['timeouts']} "
+        f"watchdog_restarts={stats['watchdog_restarts']} "
+        f"availability={stats['completed'] / max(stats['admitted'], 1):.3f} "
+        f"p50={lat['p50']:.1f}ms p99={lat['p99']:.1f}ms",
+    ))
+    blob["engine"] = {
+        "stall_rate": engine_stall_rate, "stall_s": stall_s,
+        "request_timeout_s": timeout_s,
+        "admitted": stats["admitted"], "completed": stats["completed"],
+        "failed": stats["failed"], "timeouts": stats["timeouts"],
+        "watchdog_restarts": stats["watchdog_restarts"],
+        "availability": stats["completed"] / max(stats["admitted"], 1),
+        "latency_ms": {"p50": lat["p50"], "p99": lat["p99"]},
+    }
+
+    # --- fsck leg: on-disk damage → detect → repair → degraded serve -------
+    victim = sorted(glob.glob(os.path.join(path, "*_00000.npy")))[0]
+    raw = bytearray(open(victim, "rb").read())
+    raw[200] ^= 0xFF  # past the .npy header: only the digest can catch it
+    open(victim, "wb").write(bytes(raw))
+    t0 = time.perf_counter()
+    detect = fsck_store(path)
+    t_detect = time.perf_counter() - t0
+    assert not detect.clean and [i for i, _ in detect.damaged] == [0], (
+        f"fsck missed the damaged block: {detect.lines()}"
+    )
+    t0 = time.perf_counter()
+    repair = repair_store(path)
+    t_repair = time.perf_counter() - t0
+    assert repair.repaired == (0,) and fsck_store(path).clean
+    post = open_store(path)
+    docs, dist, _, dropped = _run_leg(tree, post, k, beam, query_batch)
+    lost = set(range(*post.block_rows(0)))
+    survivors = np.asarray(sorted(set(range(n_docs)) - lost), int)
+    assert set(dropped) == lost and (
+        (docs[survivors] == d_ref[survivors]).all()
+        and (dist[survivors] == s_ref[survivors]).all()
+    ), "post-repair degraded answers diverged on surviving rows"
+    rows.append((
+        "chaos_fsck", 1e6 * (t_detect + t_repair),
+        f"detect={t_detect * 1e3:.1f}ms repair={t_repair * 1e3:.1f}ms "
+        f"excised={list(repair.repaired)} "
+        f"post_repair_availability={survivors.size / n_docs:.3f} "
+        f"survivors_bit_identical=True",
+    ))
+    blob["fsck"] = {
+        "detect_s": t_detect, "repair_s": t_repair,
+        "excised": list(repair.repaired),
+        "post_repair_availability": survivors.size / n_docs,
+        "survivors_bit_identical": True,
+    }
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+        rows.append(("chaos_bench_json", 0.0, f"wrote {json_path}"))
+    if tmp is not None:
+        tmp.cleanup()
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=4000)
+    ap.add_argument("--culled", type=int, default=800)
+    ap.add_argument("--order", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=4)
+    ap.add_argument("--block-docs", type=int, default=256)
+    ap.add_argument("--query-batch", type=int, default=64)
+    ap.add_argument("--rates", type=float, nargs="+", default=[0.0, 0.05, 0.10],
+                    help="transient read-fault rates to sweep")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="engine-leg request count")
+    ap.add_argument("--json", default="", help="write BENCH_chaos.json here")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run: tiny corpus, short sweeps",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.docs, args.culled, args.order = 600, 250, 10
+        args.block_docs, args.query_batch, args.requests = 64, 64, 96
+    for name, us, extra in main(
+        n_docs=args.docs, culled=args.culled, order=args.order, k=args.k,
+        beam=args.beam, block_docs=args.block_docs,
+        query_batch=args.query_batch, fault_rates=tuple(args.rates),
+        engine_requests=args.requests,
+        json_path=args.json or None,
+    ):
+        print(f"{name},{us:.1f},{extra}")

@@ -9,6 +9,7 @@ One section per paper table/figure + the system benches:
   query_throughput — serving QPS/latency: chunk × pipeline × shards + cache
   serving       — continuous-batching engine: open-loop arrival-rate sweep
   oocore        — out-of-core store: build/query under a residency budget
+  chaos         — availability/latency under injected store + engine faults
   kernel_bench  — kernel micro-benches + oracle agreement
   roofline      — §Roofline terms from the dry-run artifacts (if present)
 
@@ -107,6 +108,17 @@ def main() -> None:
             if args.smoke else {}
         )
         for name, us, extra in oocore.main(**oo_kwargs):
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "chaos" not in args.skip:
+        print("\n== chaos (fault injection, DESIGN.md §10) ==", flush=True)
+        from benchmarks import chaos
+        ch_kwargs = (
+            dict(n_docs=600, culled=250, order=10, block_docs=64,
+                 engine_requests=96)
+            if args.smoke else {}
+        )
+        for name, us, extra in chaos.main(**ch_kwargs):
             print(f"{name},{us:.1f},{extra}", flush=True)
 
     if "kernels" not in args.skip:

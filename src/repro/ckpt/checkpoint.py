@@ -70,8 +70,17 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None, shardings: Any
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:09d}")
     like_leaves, treedef = jax.tree.flatten(like)
-    with open(os.path.join(path, "MANIFEST.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    mpath = os.path.join(path, "MANIFEST.msgpack")
+    try:
+        with open(mpath, "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+    except (ValueError, msgpack.exceptions.ExtraData,
+            msgpack.exceptions.UnpackException) as e:
+        from repro.core.store import ManifestError
+
+        raise ManifestError(
+            mpath, f"corrupt or truncated checkpoint manifest ({e})"
+        ) from e
     assert manifest["n_leaves"] == len(like_leaves), (
         f"checkpoint has {manifest['n_leaves']} leaves, expected {len(like_leaves)}"
     )
@@ -188,23 +197,42 @@ def restore_index(path: str, budget_bytes: Optional[int] = None, check: bool = T
     mismatch — the corpus was regenerated in place (or grown by
     ``insert_into_store`` after the save), so the tree's doc ids would
     silently address different (or fewer) documents than the tree that was
-    checkpointed alongside them."""
-    import json
+    checkpointed alongside them. One mismatch is allowed: a store *repaired*
+    by ``store_fsck`` records its pre-repair hashes in the manifest's
+    ``fsck_lineage`` chain — excision keeps blocks positional, so the tree's
+    doc ids still address the same rows and the pair restores (reads of the
+    excised blocks fail typed / degrade, DESIGN.md §10). A corrupt or
+    truncated ``INDEX.json`` raises a typed
+    ``repro.core.store.ManifestError`` naming the file."""
+    from repro.core.store import (
+        DEFAULT_BUDGET_BYTES, ManifestError, load_manifest, open_store,
+    )
 
-    from repro.core.store import DEFAULT_BUDGET_BYTES, open_store
-
-    with open(os.path.join(path, INDEX_META_NAME)) as f:
-        ref = json.load(f)
+    ipath = os.path.join(path, INDEX_META_NAME)
+    if not os.path.exists(ipath):
+        raise FileNotFoundError(
+            f"no store-backed index checkpoint at {path} "
+            f"(missing {INDEX_META_NAME})"
+        )
+    ref = load_manifest(ipath)
+    for key in ("store_path", "manifest_hash"):
+        if key not in ref:
+            raise ManifestError(
+                ipath, f"index reference is missing the {key!r} field "
+                       "(corrupt or not a save_index checkpoint)"
+            )
     tree = restore_ktree(os.path.join(path, "tree"))
     store = open_store(
         ref["store_path"],
         budget_bytes=DEFAULT_BUDGET_BYTES if budget_bytes is None else budget_bytes,
     )
     if check and store.manifest_hash != ref["manifest_hash"]:
-        raise ValueError(
-            f"index {path} references corpus store {ref['store_path']} with "
-            f"manifest hash {ref['manifest_hash']}, but the store on disk now "
-            f"hashes to {store.manifest_hash} — the corpus was rewritten in "
-            "place; rebuild the index (or pass check=False to pair anyway)"
-        )
+        if ref["manifest_hash"] not in store.manifest.get("fsck_lineage", ()):
+            raise ValueError(
+                f"index {path} references corpus store {ref['store_path']} "
+                f"with manifest hash {ref['manifest_hash']}, but the store on "
+                f"disk now hashes to {store.manifest_hash} — the corpus was "
+                "rewritten in place; rebuild the index (or pass check=False "
+                "to pair anyway)"
+            )
     return tree, store

@@ -453,17 +453,29 @@ class StoreDocShards:
         return (("values", (self.nnz_max,), self._dtype),
                 ("cols", (self.nnz_max,), np.int32))
 
-    def chunk_pools(self, cand: np.ndarray, valid: np.ndarray):
+    def chunk_pools(self, cand: np.ndarray, valid: np.ndarray,
+                    on_fault: str = "raise"):
         """Fetch one chunk's owned candidate rows into per-shard pools.
 
         ``cand`` i32[B, C] global candidate doc ids, ``valid`` bool[B, C].
-        Returns ``(pools, pool_idx, owned)``: ``pools`` is a tuple of stacked
-        arrays ``[S, U, …]`` (each shard's deduplicated owned candidate rows,
-        zero-padded to a shared power-of-two ``U``), ``pool_idx`` i32[S, B, C]
-        maps each candidate slot to its pool row (0 where unowned — masked),
-        and ``owned`` bool[S, B, C] marks the slots shard ``s`` must score —
-        the same ownership predicate the in-memory ``to_local`` computes.
-        Updates :attr:`peak_resident_bytes` from the partition caches."""
+        Returns ``(pools, pool_idx, owned, dropped_ids)``: ``pools`` is a
+        tuple of stacked arrays ``[S, U, …]`` (each shard's deduplicated
+        owned candidate rows, zero-padded to a shared power-of-two ``U``),
+        ``pool_idx`` i32[S, B, C] maps each candidate slot to its pool row
+        (0 where unowned — masked), ``owned`` bool[S, B, C] marks the slots
+        shard ``s`` must score — the same ownership predicate the in-memory
+        ``to_local`` computes — and ``dropped_ids`` is the global doc ids
+        this chunk could not fetch (always empty with ``on_fault="raise"``,
+        where an unreadable block raises its typed ``BlockError`` instead).
+
+        ``on_fault="degrade"`` (DESIGN.md §10): candidates whose store block
+        exhausted its read retries are removed from ``owned`` — they score
+        +inf exactly as if no shard owned them, so answers are bit-identical
+        to a search over the surviving corpus subset. Updates
+        :attr:`peak_resident_bytes` from the partition caches."""
+        from repro.core.store import check_on_fault
+
+        check_on_fault(on_fault)
         s_count, (b, c) = self.n_shards, cand.shape
         per_shard = []
         u_max = 1
@@ -484,10 +496,20 @@ class StoreDocShards:
         )
         pool_idx = np.zeros((s_count, b, c), np.int32)
         owned = np.zeros((s_count, b, c), bool)
+        dropped: list = []
         for s, (lo, own, ids) in enumerate(per_shard):
             owned[s] = own
             if ids.size:
-                got = self.parts[s].take_rows(ids - lo)
+                if on_fault == "degrade":
+                    got, ok = self.parts[s].take_rows_masked(ids - lo)
+                    if not ok.all():
+                        bad = ids[~ok]
+                        dropped.append(bad)
+                        # drop only the unreadable blocks' candidates: they
+                        # score +inf, exactly as if no shard owned them
+                        owned[s] &= ~np.isin(cand, bad)
+                else:
+                    got = self.parts[s].take_rows(ids - lo)
                 for pool, (name, _, _) in zip(pools, self._pool_fields()):
                     pool[s, : ids.size] = got[name]
                 pool_idx[s][own] = np.searchsorted(ids, cand[own]).astype(np.int32)
@@ -495,7 +517,10 @@ class StoreDocShards:
             self.peak_resident_bytes,
             sum(p.store.cache.resident_bytes for p in self.parts),
         )
-        return pools, pool_idx, owned
+        dropped_ids = (
+            np.concatenate(dropped) if dropped else np.empty(0, cand.dtype)
+        )
+        return pools, pool_idx, owned, dropped_ids
 
     @property
     def cache_stats(self) -> list:

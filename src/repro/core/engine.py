@@ -46,6 +46,19 @@ is the front end that turns the offline engines into a service:
   latency, QPS, queue depth, shed/deadline-miss counters, batch occupancy,
   and (when ``block_caches`` are wired, e.g. a store-backed corpus) the
   per-batch peak disk residency via ``BlockCache.reset_peak``.
+- **Robustness** (DESIGN.md §10) — a **watchdog** thread guarantees that
+  every admitted request resolves — an answer, a typed error, or a timeout —
+  so a caller blocked in :meth:`ResultHandle.result` can never hang forever.
+  It enforces the engine-wide ``request_timeout_s`` (overdue requests, queued
+  *or* in flight behind a wedged ``search_fn``, fail with
+  :class:`EngineTimeout`) and restarts the dispatcher thread if it ever dies
+  (the orphaned in-flight batch fails with :class:`EngineFault`; later
+  requests are served by the replacement). ``close(drain=False)`` fails
+  queued and in-flight requests with :class:`EngineClosed` instead of
+  waiting on them. Degraded answers from the offline engines'
+  ``on_fault="degrade"`` mode (see :func:`make_search_fn`) surface on the
+  handle as ``ResultHandle.degraded`` plus the
+  :class:`repro.core.faults.FaultReport` in ``ResultHandle.report``.
 
 The engine owns one dispatcher thread; ``submit`` is safe from any number of
 threads. All timing uses a monotonic clock (``time.perf_counter`` by
@@ -81,7 +94,23 @@ class EngineSaturated(RuntimeError):
 
 
 class EngineClosed(RuntimeError):
-    """The engine has been closed; no further requests are admitted."""
+    """The engine has been closed; no further requests are admitted. Also the
+    failure attached to queued/in-flight handles abandoned by
+    ``close(drain=False)``."""
+
+
+class EngineTimeout(TimeoutError):
+    """A request exceeded its time budget: either the caller's
+    ``result(timeout=...)`` wait elapsed, or the engine watchdog expired the
+    request against the engine-wide ``request_timeout_s`` (in which case the
+    handle is *failed* with this error — the request will never deliver an
+    answer). Subclasses :class:`TimeoutError`."""
+
+
+class EngineFault(RuntimeError):
+    """The dispatcher thread died while this request was in flight; the
+    watchdog failed the orphaned handle with this error and restarted the
+    dispatcher. The request was *not* answered — resubmit if desired."""
 
 
 class ResultHandle:
@@ -89,21 +118,46 @@ class ResultHandle:
     containing the request completes and returns ``(doc_ids i32[r, k],
     sqdist f32[r, k])`` — bit-identical to the offline engine on the same
     rows. ``deadline_missed`` is set (post-completion) when the answer landed
-    after the request's deadline; the answer is still delivered."""
+    after the request's deadline; the answer is still delivered.
+
+    Resolution is **set-once**: the first of {answer, engine error, watchdog
+    timeout, close} to land wins and every later attempt is a no-op, so the
+    dispatcher completing a request the watchdog already expired cannot
+    overwrite the timeout (and vice versa). ``degraded`` is True when the
+    answer came from a degraded engine call (``on_fault="degrade"`` with
+    quarantined blocks — DESIGN.md §10); ``report`` then carries the
+    :class:`repro.core.faults.FaultReport`."""
 
     def __init__(self):
         self._done = threading.Event()
+        self._lock = threading.Lock()
         self._value: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._error: Optional[BaseException] = None
         self.deadline_missed = False
+        self.degraded = False
+        self.report = None
 
-    def _set(self, value) -> None:
-        self._value = value
-        self._done.set()
+    def _resolve(self, value) -> bool:
+        """Attach the answer unless already resolved; True if this call won."""
+        with self._lock:
+            if self._done.is_set():
+                return False
+            self._value = value
+            self._done.set()
+            return True
 
-    def _set_error(self, err: BaseException) -> None:
-        self._error = err
-        self._done.set()
+    def _resolve_error(self, err: BaseException) -> bool:
+        """Attach a failure unless already resolved; True if this call won."""
+        with self._lock:
+            if self._done.is_set():
+                return False
+            self._error = err
+            self._done.set()
+            return True
+
+    # older internal spellings (kept for any external caller)
+    _set = _resolve
+    _set_error = _resolve_error
 
     def done(self) -> bool:
         """True once the request has an answer (or a failure) attached."""
@@ -111,9 +165,11 @@ class ResultHandle:
 
     def result(self, timeout: Optional[float] = None):
         """Block (up to ``timeout`` seconds) for the answer; re-raises the
-        engine-call exception if the dispatching batch failed."""
+        engine-call exception if the dispatching batch failed. A ``timeout``
+        elapsing raises :class:`EngineTimeout` (a :class:`TimeoutError`) —
+        the request itself is still pending and may resolve later."""
         if not self._done.wait(timeout):
-            raise TimeoutError("request not completed within timeout")
+            raise EngineTimeout("request not completed within timeout")
         if self._error is not None:
             raise self._error
         return self._value
@@ -223,7 +279,7 @@ def pow2_pad_rows(x: np.ndarray, to: Optional[int] = None) -> Tuple[np.ndarray, 
 
 def make_search_fn(
     tree, *, mesh=None, corpus=None, chunk: int = 512, pipeline: int = 2,
-    prefetch: int = 0,
+    prefetch: int = 0, on_fault: Optional[str] = None,
 ) -> Callable[..., Tuple[np.ndarray, np.ndarray]]:
     """Adapt the offline engines to the ``search_fn(x, k, beam,
     chunk_rows=None)`` signature :class:`ServingEngine` dispatches through.
@@ -237,20 +293,29 @@ def make_search_fn(
     exactly one request's (padded) rows, which is what makes batched answers
     bit-identical to standalone calls (see :func:`pow2_pad_rows`). The
     returned callable carries the default chunk as ``fn.chunk`` so the engine
-    knows when a request is too large to chunk-align."""
+    knows when a request is too large to chunk-align.
+
+    ``on_fault`` (DESIGN.md §10): ``None`` keeps the offline engines'
+    default (``"raise"`` — unreadable corpus blocks fail the batch with a
+    typed store error). ``"degrade"`` serves past quarantined blocks: calls
+    return a third :class:`repro.core.faults.FaultReport` element, which the
+    engine strips off the answer and surfaces as ``ResultHandle.degraded`` /
+    ``.report``."""
+    kw = {} if on_fault is None else {"on_fault": on_fault}
     if mesh is None:
         def fn(x, k, beam, chunk_rows=None):
             return topk_search(
                 tree, x, k=k, beam=beam, chunk=chunk_rows or chunk,
-                pipeline=pipeline, prefetch=prefetch,
+                pipeline=pipeline, prefetch=prefetch, **kw,
             )
     else:
         def fn(x, k, beam, chunk_rows=None):
             return topk_search_sharded(
                 mesh, tree, x, corpus=corpus, k=k, beam=beam,
-                chunk=chunk_rows or chunk,
+                chunk=chunk_rows or chunk, **kw,
             )
     fn.chunk = chunk
+    fn.on_fault = on_fault
     return fn
 
 
@@ -281,9 +346,16 @@ class ServingEngine:
       largest per-batch disk working set.
     - ``clock`` — monotonic time source shared with the
       :class:`LatencyRecorder` (fake-clock seam for tests).
+    - ``request_timeout_s`` — engine-wide per-request time budget (admit →
+      answer), enforced by the watchdog thread: an overdue request — still
+      queued *or* in flight behind a wedged ``search_fn`` — is failed with
+      :class:`EngineTimeout` so its caller unblocks. ``None`` (default)
+      disables expiry; the watchdog still runs for dispatcher restarts.
 
     Use as a context manager; :meth:`close` drains admitted requests before
-    stopping, so no accepted request is ever dropped.
+    stopping, so no accepted request is ever dropped. ``close(drain=False)``
+    abandons queued/in-flight requests with :class:`EngineClosed` instead —
+    the escape hatch when the search fn itself is wedged.
     """
 
     def __init__(
@@ -294,6 +366,7 @@ class ServingEngine:
         max_queue: int = 128,
         max_wait_s: float = 2e-3,
         dispatch_margin_s: float = 0.0,
+        request_timeout_s: Optional[float] = None,
         cache: Optional[AnswerCache] = None,
         tree=None,
         corpus_token: Optional[str] = None,
@@ -307,6 +380,11 @@ class ServingEngine:
             )
         if max_wait_s < 0 or dispatch_margin_s < 0:
             raise ValueError("max_wait_s and dispatch_margin_s must be ≥ 0")
+        if request_timeout_s is not None and request_timeout_s <= 0:
+            raise ValueError(
+                f"request_timeout_s must be > 0 when set, got "
+                f"{request_timeout_s}"
+            )
         if cache is not None and tree is None:
             raise ValueError("cache staging needs the tree to bind to")
         self.search_fn = search_fn
@@ -321,6 +399,9 @@ class ServingEngine:
         self.max_queue = int(max_queue)
         self.max_wait_s = float(max_wait_s)
         self.dispatch_margin_s = float(dispatch_margin_s)
+        self.request_timeout_s = (
+            None if request_timeout_s is None else float(request_timeout_s)
+        )
         self.cache = cache
         self.block_caches = tuple(block_caches)
         if cache is not None:
@@ -329,12 +410,17 @@ class ServingEngine:
         self._cv = threading.Condition()
         self._queue: "deque[_Pending]" = deque()
         self._closing = False
+        self._abort = False
+        self._inflight: Optional[List[_Pending]] = None
         # counters (under _cv's lock: the dispatcher and submit already hold it)
         self._admitted = 0
         self._shed = 0
         self._completed = 0
         self._failed = 0
         self._deadline_misses = 0
+        self._timeouts = 0
+        self._watchdog_restarts = 0
+        self._degraded = 0
         self._n_batches = 0
         self._n_fragments = 0
         self._occupancy_sum = 0.0
@@ -342,6 +428,15 @@ class ServingEngine:
         self._peak_batch_store_bytes = 0
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
+        self._watchdog_stop = threading.Event()
+        self._watchdog_tick = (
+            0.02 if self.request_timeout_s is None
+            else min(0.02, self.request_timeout_s / 4.0)
+        )
+        self._watchdog_thread = threading.Thread(
+            target=self._watchdog_loop, daemon=True
+        )
+        self._watchdog_thread.start()
 
     # ---------------------------------------------------------------- admit
     def submit(
@@ -405,25 +500,107 @@ class ServingEngine:
         return batch
 
     def _loop(self) -> None:
-        """Dispatcher thread: wait for fill-or-forcing-point, then execute."""
+        """Dispatcher thread: wait for fill-or-forcing-point, then execute.
+
+        The in-flight batch is published as ``_inflight`` (set under the lock
+        in the same critical section that pops it, cleared only after every
+        handle is resolved) so the watchdog can expire or orphan-fail it —
+        if this thread dies mid-batch, ``_inflight`` still names exactly the
+        handles that would otherwise hang."""
         while True:
             with self._cv:
                 while not self._queue:
-                    if self._closing:
+                    if self._closing or self._abort:
                         return
                     self._cv.wait(0.05)
                 # wait for the batch to fill — but never past the oldest
-                # pending request's forcing point
-                while True:
+                # pending request's forcing point (the watchdog may expire
+                # queued requests concurrently, so re-check for emptiness)
+                while self._queue:
                     total = sum(p.rows.shape[0] for p in self._queue)
                     force_t = min(p.force_t for p in self._queue)
                     now = self.recorder.now()
                     if (total >= self.row_budget or now >= force_t
-                            or self._closing):
+                            or self._closing or self._abort):
                         break
                     self._cv.wait(min(max(force_t - now, 0.0), 0.05))
+                if self._abort:
+                    return
+                if not self._queue:
+                    continue
                 batch = self._take_batch()
+                self._inflight = batch
             self._execute(batch)
+            with self._cv:
+                self._inflight = None
+
+    # ------------------------------------------------------------- watchdog
+    def _watchdog_loop(self) -> None:
+        """Watchdog thread: one :meth:`_watchdog_pass` per tick until
+        :meth:`close` stops it."""
+        while not self._watchdog_stop.wait(self._watchdog_tick):
+            self._watchdog_pass()
+
+    def _watchdog_pass(self) -> None:
+        """One watchdog sweep — the no-hang guarantee (DESIGN.md §10).
+
+        (a) Dispatcher liveness: if the dispatcher thread died (a bug or
+        BaseException below :meth:`_execute`'s own handler), fail its
+        orphaned in-flight handles with :class:`EngineFault` and start a
+        replacement dispatcher, so the engine keeps serving.
+        (b) Request expiry (when ``request_timeout_s`` is set): fail every
+        queued or in-flight request older than the budget with
+        :class:`EngineTimeout` — resolution is set-once, so a later engine
+        answer for an expired request is discarded, never double-counted."""
+        with self._cv:
+            stopped = self._closing or self._abort
+            dead = not self._thread.is_alive()
+        if dead and not stopped:
+            with self._cv:
+                orphans = list(self._inflight or [])
+                self._inflight = None
+                self._watchdog_restarts += 1
+                replacement = threading.Thread(target=self._loop, daemon=True)
+                self._thread = replacement
+            err = EngineFault(
+                "dispatcher thread died mid-batch; request abandoned "
+                "(dispatcher restarted — resubmit if desired)"
+            )
+            n_orphaned = sum(
+                1 for p in orphans if p.handle._resolve_error(err)
+            )
+            with self._cv:
+                self._failed += n_orphaned
+            replacement.start()
+        budget = self.request_timeout_s
+        if budget is None:
+            return
+        now = self.recorder.now()
+        expired: List[_Pending] = []
+        with self._cv:
+            if any(now - p.t_admit > budget for p in self._queue):
+                keep: "deque[_Pending]" = deque()
+                for p in self._queue:
+                    (expired if now - p.t_admit > budget else keep).append(p)
+                self._queue = keep
+            expired.extend(
+                p for p in (self._inflight or [])
+                if now - p.t_admit > budget
+            )
+        if not expired:
+            return
+        n_timed_out = 0
+        for p in expired:
+            err = EngineTimeout(
+                f"request exceeded request_timeout_s={budget:g}s "
+                f"(admitted {now - p.t_admit:.3f}s ago) — expired by the "
+                f"engine watchdog"
+            )
+            if p.handle._resolve_error(err):
+                n_timed_out += 1
+        with self._cv:
+            self._timeouts += n_timed_out
+            self._failed += n_timed_out
 
     def _fragments(self, batch: List[_Pending]):
         """Group a drained batch by (k, beam, request row bucket), preserving
@@ -443,12 +620,22 @@ class ServingEngine:
     def _call(self, x, k, beam, chunk_rows=None):
         """One offline-engine call, forwarding ``chunk_rows`` only when the
         search fn takes it (custom callables without the seam still work —
-        they just don't get the chunk-alignment bit-identity guarantee)."""
+        they just don't get the chunk-alignment bit-identity guarantee).
+
+        Normalizes the return to ``(docs, dist, report)``: degrade-mode
+        engines (``on_fault="degrade"``) return a third
+        :class:`repro.core.faults.FaultReport` element; plain engines get
+        ``report=None``."""
         if chunk_rows is not None and self._accepts_chunk:
-            docs, dist = self.search_fn(x, k, beam, chunk_rows=chunk_rows)
+            out = self.search_fn(x, k, beam, chunk_rows=chunk_rows)
         else:
-            docs, dist = self.search_fn(x, k, beam)
-        return np.asarray(docs), np.asarray(dist)
+            out = self.search_fn(x, k, beam)
+        if len(out) == 3:
+            docs, dist, report = out
+        else:
+            docs, dist = out
+            report = None
+        return np.asarray(docs), np.asarray(dist), report
 
     def _run_fragment(self, group: List[_Pending], k: int, beam: int,
                       bucket: Optional[int]):
@@ -470,28 +657,46 @@ class ServingEngine:
         the deduplicated miss batch runs at ``chunk_rows = 1`` — each cache
         entry is then the bit-exact answer of a standalone single-row call,
         so repeat single-row requests stay bit-identical however they
-        batch."""
+        batch. A *degraded* miss batch (on_fault="degrade" with quarantined
+        blocks) is scattered to its requests but **not** inserted into the
+        cache — a degraded answer must never outlive the fault that produced
+        it.
+
+        Answers come back as ``(docs, dist, report)`` triples; in a
+        chunk-aligned fragment every request shares the fragment's report
+        (corpus-side quarantine affects the whole call)."""
         if bucket is None:
             return [self._call(p.rows, k, beam) for p in group]
         x, bounds = concat_request_rows([p.rows for p in group])
         if self.cache is not None:
+            report = None
             docs, dist, miss = cache_stage(self.cache, x, k, beam)
             if miss:
                 rep = np.asarray([rows[0] for rows in miss.values()])
                 xm, n_miss = pow2_pad_rows(x[rep])
-                d_new, s_new = self._call(xm, k, beam, chunk_rows=1)
-                cache_fill(self.cache, miss, d_new[:n_miss], s_new[:n_miss],
-                           docs, dist)
-            return split_batch_answers(docs, dist, bounds)
+                d_new, s_new, report = self._call(xm, k, beam, chunk_rows=1)
+                if report is not None and report.degraded:
+                    # scatter only — degraded answers stay out of the cache
+                    for j, (_, rows) in enumerate(miss.items()):
+                        for i in rows:
+                            docs[i], dist[i] = d_new[j], s_new[j]
+                else:
+                    cache_fill(self.cache, miss, d_new[:n_miss],
+                               s_new[:n_miss], docs, dist)
+            return [
+                (d, s, report)
+                for d, s in split_batch_answers(docs, dist, bounds)
+            ]
         parts = [pow2_pad_rows(p.rows, to=bucket)[0] for p in group]
         n_pad = pow2_bucket(len(parts)) - len(parts)
         parts.extend(np.repeat(parts[-1][-1:], bucket, axis=0)
                      for _ in range(n_pad))
         xb, _ = concat_request_rows(parts)
-        d_all, s_all = self._call(xb, k, beam, chunk_rows=bucket)
+        d_all, s_all, report = self._call(xb, k, beam, chunk_rows=bucket)
         return [
             (d_all[i * bucket:i * bucket + p.rows.shape[0]].copy(),
-             s_all[i * bucket:i * bucket + p.rows.shape[0]].copy())
+             s_all[i * bucket:i * bucket + p.rows.shape[0]].copy(),
+             report)
             for i, p in enumerate(group)
         ]
 
@@ -512,20 +717,26 @@ class ServingEngine:
                         f"returned {len(answers)} answers for "
                         f"{len(group)} requests"
                     )
-                for p, ans in zip(group, answers):
+                for p, (d, s, report) in zip(group, answers):
                     t_done = self.recorder.now()
-                    self.recorder.record(p.t_admit, t_done)
                     missed = p.deadline is not None and t_done > p.deadline
+                    degraded = report is not None and report.degraded
                     p.handle.deadline_missed = missed
-                    p.handle._set(ans)
-                    with self._cv:
-                        self._completed += 1
-                        if missed:
-                            self._deadline_misses += 1
+                    p.handle.degraded = degraded
+                    p.handle.report = report
+                    if p.handle._resolve((d, s)):
+                        # a watchdog-expired handle keeps its timeout;
+                        # only a winning resolve counts as completed
+                        self.recorder.record(p.t_admit, t_done)
+                        with self._cv:
+                            self._completed += 1
+                            if missed:
+                                self._deadline_misses += 1
+                            if degraded:
+                                self._degraded += 1
         except BaseException as e:
             for p in batch:
-                if not p.handle.done():
-                    p.handle._set_error(e)
+                if p.handle._resolve_error(e):
                     with self._cv:
                         self._failed += 1
         finally:
@@ -556,6 +767,9 @@ class ServingEngine:
                 shed=self._shed,
                 failed=self._failed,
                 deadline_misses=self._deadline_misses,
+                timeouts=self._timeouts,
+                watchdog_restarts=self._watchdog_restarts,
+                degraded=self._degraded,
                 queue_depth=len(self._queue),
                 max_queue_depth=self._max_queue_depth,
                 n_batches=self._n_batches,
@@ -573,13 +787,39 @@ class ServingEngine:
         return snap
 
     # ---------------------------------------------------------------- close
-    def close(self) -> None:
-        """Stop admitting, drain every already-admitted request, and join the
-        dispatcher (idempotent)."""
+    def close(self, drain: bool = True) -> None:
+        """Stop admitting and shut down (idempotent).
+
+        ``drain=True`` (default): every already-admitted request completes
+        before the dispatcher joins — no accepted request is ever dropped.
+        ``drain=False``: queued and in-flight requests are *failed* with
+        :class:`EngineClosed` immediately, so their callers unblock even if
+        the search fn is wedged; the dispatcher thread is abandoned (daemon)
+        if it does not exit within a grace period and any late answer it
+        produces is discarded by set-once resolution."""
         with self._cv:
             self._closing = True
+            dropped: List[_Pending] = []
+            if not drain:
+                self._abort = True
+                dropped = list(self._queue)
+                self._queue.clear()
+                dropped.extend(self._inflight or [])
             self._cv.notify_all()
-        self._thread.join()
+        if drain:
+            self._thread.join()
+        else:
+            err = EngineClosed(
+                "engine closed with drain=False; request abandoned"
+            )
+            n_dropped = sum(
+                1 for p in dropped if p.handle._resolve_error(err)
+            )
+            with self._cv:
+                self._failed += n_dropped
+            self._thread.join(timeout=1.0)
+        self._watchdog_stop.set()
+        self._watchdog_thread.join(timeout=1.0)
 
     def __enter__(self) -> "ServingEngine":
         return self

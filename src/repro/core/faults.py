@@ -1,0 +1,222 @@
+"""Deterministic fault injection for the out-of-core serving path.
+
+The paper's disk-based K-tree (DESIGN.md §9) makes query answers depend on
+block I/O, background reader threads, and a dispatcher thread.  This module
+is the single seam through which every failure mode of that stack is
+injected *reproducibly*: a :class:`FaultPlan` is handed to
+``open_store(fault_plan=...)`` and consulted on every block read (and on
+every write step of ``CorpusStore.append``), so tests and benchmarks can
+replay the exact same fault schedule from a seed.
+
+Fault taxonomy (DESIGN.md §10):
+
+- **transient read errors** — an :class:`InjectedReadError` on a subset of
+  read attempts; the hardened read path retries with capped exponential
+  backoff and the answer stays bit-identical.
+- **persistent read errors** — every attempt on a block fails; retries
+  exhaust, the block is quarantined, and the read surfaces a typed
+  ``BlockUnavailable``.
+- **bit-flip corruption** — a byte of the on-disk payload is flipped past
+  the ``.npy`` header; blake2b verification catches it and surfaces
+  ``BlockCorrupt``.
+- **read stalls** — a configurable sleep before a block's payload returns,
+  exercising engine watchdog / ``EngineTimeout`` paths.
+- **write kill-points** — :meth:`FaultPlan.on_write` raises
+  :class:`InjectedCrash` after a configured number of write steps,
+  simulating a crash at any point inside ``CorpusStore.append`` /
+  ``insert_into_store`` for generation-safety tests.
+
+All decisions are pure functions of ``(seed, block, attempt)`` — no global
+RNG state — so a plan injects the same faults no matter how reads interleave
+across threads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from typing import Dict, FrozenSet, Iterable, Optional, Tuple
+
+
+class InjectedReadError(IOError):
+    """A :class:`FaultPlan`-injected block read failure.
+
+    ``persistent`` distinguishes faults that will never clear (every attempt
+    on the block fails) from transient ones that a retry can outlast.
+    Transient faults are retryable; the hardened read path in
+    ``core/store.py`` keys its retry decision off the ``retryable``
+    attribute.
+    """
+
+    retryable = True
+
+    def __init__(self, block: int, attempt: int, persistent: bool = False):
+        kind = "persistent" if persistent else "transient"
+        super().__init__(
+            f"injected {kind} read fault: block {block}, attempt {attempt}"
+        )
+        self.block = block
+        self.attempt = attempt
+        self.persistent = persistent
+
+
+class InjectedCrash(RuntimeError):
+    """A :class:`FaultPlan`-injected process "crash" at a write step.
+
+    Raised by :meth:`FaultPlan.on_write` once the configured number of write
+    steps has completed — the kill-point seam for crash-safety sweeps over
+    ``CorpusStore.append`` and ``insert_into_store``.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultReport:
+    """What a degraded (``on_fault="degrade"``) search dropped and why.
+
+    Returned as the third element of a search's answer tuple.  When
+    ``degraded`` is False the answer is bit-identical to a fault-free run;
+    when True, only the listed quarantined blocks' candidates (or query
+    rows) were dropped and the surviving answers are bit-identical to a
+    reference search over the surviving subset.
+    """
+
+    degraded: bool = False
+    quarantined_blocks: Tuple[int, ...] = ()
+    dropped_query_rows: Tuple[int, ...] = ()
+    dropped_docs: int = 0
+    errors: Tuple[str, ...] = ()
+
+
+def _coin(seed: int, *key) -> float:
+    """Deterministic uniform [0, 1) draw keyed by ``(seed, *key)``."""
+    h = hashlib.blake2b(repr((seed,) + key).encode(), digest_size=8).digest()
+    return int.from_bytes(h, "big") / float(1 << 64)
+
+
+class FaultPlan:
+    """A seeded, per-block-addressable schedule of injected faults.
+
+    Parameters
+    ----------
+    seed:
+        Root of all randomized decisions; two plans with the same parameters
+        inject identical fault schedules.
+    transient_rate:
+        Probability that any given ``(block, attempt)`` read attempt raises a
+        transient :class:`InjectedReadError`.  The draw is a pure function of
+        ``(seed, block, attempt)``, so a failing attempt fails on every
+        replay and a retry (next attempt index) re-rolls the coin.
+    transient_blocks / transient_attempts:
+        Deterministic variant: the first ``transient_attempts`` read attempts
+        of each listed block fail, later attempts succeed — the directed way
+        to exercise the retry path.
+    persistent_blocks:
+        Blocks whose every read attempt fails (retries exhaust; the store
+        quarantines them and raises ``BlockUnavailable``).
+    corrupt_blocks:
+        Blocks whose on-disk payload bytes are bit-flipped in flight (past
+        the ``.npy`` header, so digest verification — not the parser — must
+        catch it and raise ``BlockCorrupt``).
+    stall_blocks / stall_s:
+        Blocks whose reads sleep ``stall_s`` seconds before returning,
+        for watchdog / timeout tests.
+    kill_after_writes:
+        If set, the ``kill_after_writes + 1``-th write step observed by
+        :meth:`on_write` raises :class:`InjectedCrash` (the first
+        ``kill_after_writes`` steps succeed).
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        transient_rate: float = 0.0,
+        transient_blocks: Iterable[int] = (),
+        transient_attempts: int = 1,
+        persistent_blocks: Iterable[int] = (),
+        corrupt_blocks: Iterable[int] = (),
+        stall_blocks: Iterable[int] = (),
+        stall_s: float = 0.0,
+        kill_after_writes: Optional[int] = None,
+    ):
+        self.seed = int(seed)
+        self.transient_rate = float(transient_rate)
+        self.transient_blocks: FrozenSet[int] = frozenset(transient_blocks)
+        self.transient_attempts = int(transient_attempts)
+        self.persistent_blocks: FrozenSet[int] = frozenset(persistent_blocks)
+        self.corrupt_blocks: FrozenSet[int] = frozenset(corrupt_blocks)
+        self.stall_blocks: FrozenSet[int] = frozenset(stall_blocks)
+        self.stall_s = float(stall_s)
+        self.kill_after_writes = kill_after_writes
+        self._lock = threading.Lock()
+        self._writes_seen = 0
+        self._counts: Dict[str, int] = {
+            "transient_injected": 0,
+            "persistent_injected": 0,
+            "corruptions_injected": 0,
+            "stalls_injected": 0,
+            "writes_seen": 0,
+        }
+
+    def _bump(self, key: str) -> None:
+        with self._lock:
+            self._counts[key] += 1
+
+    def on_read(self, block: int, attempt: int) -> None:
+        """Consulted before each read attempt; sleeps and/or raises.
+
+        Called by the hardened read path in ``core/store.py`` with the
+        0-based retry ``attempt`` index.  May sleep (stall), raise a
+        persistent or transient :class:`InjectedReadError`, or return
+        normally (no fault this attempt).
+        """
+        if self.stall_s > 0.0 and block in self.stall_blocks:
+            self._bump("stalls_injected")
+            time.sleep(self.stall_s)
+        if block in self.persistent_blocks:
+            self._bump("persistent_injected")
+            raise InjectedReadError(block, attempt, persistent=True)
+        if block in self.transient_blocks and attempt < self.transient_attempts:
+            self._bump("transient_injected")
+            raise InjectedReadError(block, attempt)
+        if self.transient_rate > 0.0:
+            if _coin(self.seed, "read", block, attempt) < self.transient_rate:
+                self._bump("transient_injected")
+                raise InjectedReadError(block, attempt)
+
+    def corrupt_bytes(self, block: int, field: str, raw: bytes) -> bytes:
+        """Bit-flip one payload byte of a corrupt block's field in flight.
+
+        The flip lands past byte 128 (the ``.npy`` header) so the array still
+        parses — only digest verification can detect the damage, which is
+        exactly the failure mode the verify-at-read path must catch.
+        """
+        if block not in self.corrupt_blocks or len(raw) <= 129:
+            return raw
+        self._bump("corruptions_injected")
+        span = len(raw) - 129
+        pos = 129 + int(_coin(self.seed, "flip", block, field) * span)
+        out = bytearray(raw)
+        out[pos] ^= 0x40
+        return bytes(out)
+
+    def on_write(self, label: str) -> None:
+        """Consulted before each write step; raises at the kill point.
+
+        ``label`` names the step (e.g. ``"block:tail"``, ``"manifest"``) so
+        crash sweeps can report where they died.
+        """
+        with self._lock:
+            self._counts["writes_seen"] += 1
+            n = self._counts["writes_seen"]
+        if self.kill_after_writes is not None and n > self.kill_after_writes:
+            raise InjectedCrash(
+                f"injected crash before write step {n} ({label})"
+            )
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Counters of injected faults so far (copied snapshot)."""
+        with self._lock:
+            return dict(self._counts)

@@ -1,0 +1,242 @@
+"""Offline store verify/repair — ``store_fsck`` (DESIGN.md §10).
+
+The hardened read path (``core/store.py``) discovers damage *lazily*: a block
+fails verification when something finally reads it, gets quarantined, and
+degrade-mode serving drops its rows. This module is the *eager* counterpart —
+an offline pass over a store directory that:
+
+- **verifies** every live block file against the manifest digests (and that
+  the files exist at all) without needing to open a serving handle, and
+- **repairs** a damaged store by *excising* the broken blocks: each damaged
+  entry is replaced by a tombstone (``{"i": i, "excised": true, "reason":
+  ...}``), the offending files are moved aside (``<name>.damaged`` — kept for
+  forensics, never silently deleted), and a consistent manifest is atomically
+  rewritten (tmp + ``os.replace``), rotating ``manifest_hash`` so answer
+  caches treat the excised store as new content. The pre-repair hash is
+  appended to a ``fsck_lineage`` chain in the manifest, which lets
+  manifest-reference consumers (``ckpt.restore_index``, the pipeline
+  sidecar's reuse check) distinguish a *repaired* store — same corpus, same
+  doc ids, minus the damaged blocks — from a store regenerated in place.
+
+Blocks are *positional* (block ``i`` owns global rows ``[i·block_docs,
+(i+1)·block_docs)``), so repair never renumbers anything: surviving blocks
+keep their ids and row ranges, and a store opened after repair answers
+bit-identically to an undamaged store over the surviving rows (the excised
+blocks' rows are pre-quarantined — reads raise
+:class:`repro.core.store.BlockUnavailable`, degrade-mode searches drop them).
+
+``tools/store_fsck.py`` is the CLI wrapper; ``launch/serve.py --fsck`` runs
+the same pass before serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Tuple
+
+from repro.core.store import (
+    FORMAT_TAG,
+    MANIFEST_NAME,
+    ManifestError,
+    _digest,
+    load_manifest,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FsckReport:
+    """Result of one fsck pass over a store directory.
+
+    ``damaged`` lists ``(block_id, reason)`` for every live block that failed
+    this pass (missing file or digest mismatch); ``excised_prior`` are blocks
+    already tombstoned by an earlier repair. ``repaired`` names the blocks
+    this pass excised (empty for scan-only). ``manifest_hash_before/after``
+    are the store's content tokens around the pass — they differ exactly when
+    a repair rewrote the manifest."""
+
+    path: str
+    n_blocks: int
+    n_docs: int
+    checked: int
+    damaged: Tuple[Tuple[int, str], ...]
+    excised_prior: Tuple[int, ...]
+    repaired: Tuple[int, ...]
+    manifest_hash_before: str
+    manifest_hash_after: str
+
+    @property
+    def clean(self) -> bool:
+        """True when every live block verified (prior tombstones are not
+        damage — they were already dealt with)."""
+        return not self.damaged
+
+    def lines(self) -> Tuple[str, ...]:
+        """Human/grep-friendly report lines (the CLI and ``serve.py --fsck``
+        print exactly these)."""
+        out = [
+            f"fsck: {self.path}: checked {self.checked}/{self.n_blocks} "
+            f"blocks ({self.n_docs} docs"
+            + (f", {len(self.excised_prior)} previously excised"
+               if self.excised_prior else "")
+            + ")"
+        ]
+        for i, reason in self.damaged:
+            out.append(f"fsck: block {i} DAMAGED: {reason}")
+        if self.repaired:
+            out.append(
+                f"fsck: repaired — excised {len(self.repaired)} block(s) "
+                f"{list(self.repaired)}, manifest rewritten "
+                f"({self.manifest_hash_before} -> {self.manifest_hash_after})"
+            )
+        elif self.damaged:
+            out.append(
+                f"fsck: {len(self.damaged)} damaged block(s) — run with "
+                f"repair to excise"
+            )
+        else:
+            out.append("fsck: clean")
+        return tuple(out)
+
+
+def _manifest_hash(manifest: dict) -> str:
+    """Content token of a manifest dict — the same blake2b-128 of the
+    canonical JSON that :meth:`repro.core.store.CorpusStore.manifest_hash`
+    memoises."""
+    blob = json.dumps(manifest, sort_keys=True).encode()
+    return hashlib.blake2b(blob, digest_size=16).hexdigest()
+
+
+def _load_checked(path: str) -> dict:
+    """Load + format-guard a store manifest (shared by scan and repair)."""
+    mpath = os.path.join(path, MANIFEST_NAME)
+    if not os.path.exists(mpath):
+        raise FileNotFoundError(
+            f"no corpus store at {path} (missing {MANIFEST_NAME})"
+        )
+    manifest = load_manifest(mpath)
+    if manifest.get("format") != FORMAT_TAG:
+        raise ManifestError(
+            mpath,
+            f"unknown store format {manifest.get('format')!r} "
+            f"(expected {FORMAT_TAG!r})",
+        )
+    return manifest
+
+
+def _scan(path: str, manifest: dict):
+    """Verify every live block; returns ``(damaged, excised_prior,
+    checked)``."""
+    damaged = []
+    excised_prior = []
+    checked = 0
+    for entry in manifest["blocks"]:
+        i = int(entry["i"])
+        if entry.get("excised"):
+            excised_prior.append(i)
+            continue
+        checked += 1
+        missing = [
+            fname for fname in entry["files"].values()
+            if not os.path.exists(os.path.join(path, fname))
+        ]
+        if missing:
+            damaged.append((i, f"missing file(s): {', '.join(missing)}"))
+            continue
+        # field-name-sorted digest concatenation, matching save_store
+        dig = "".join(
+            _digest(os.path.join(path, entry["files"][name]))
+            for name in sorted(entry["files"])
+        )
+        if dig != entry["digest"]:
+            damaged.append((
+                i,
+                f"content digest mismatch (read {dig}, "
+                f"manifest {entry['digest']})",
+            ))
+    return damaged, excised_prior, checked
+
+
+def fsck_store(path: str) -> FsckReport:
+    """Scan-only fsck: verify every live block file of the store at ``path``
+    against the manifest digests. Touches nothing on disk; ``report.clean``
+    says whether the store verifies."""
+    manifest = _load_checked(path)
+    damaged, excised_prior, checked = _scan(path, manifest)
+    h = _manifest_hash(manifest)
+    return FsckReport(
+        path=path,
+        n_blocks=int(manifest["n_blocks"]),
+        n_docs=int(manifest["n_docs"]),
+        checked=checked,
+        damaged=tuple(damaged),
+        excised_prior=tuple(excised_prior),
+        repaired=(),
+        manifest_hash_before=h,
+        manifest_hash_after=h,
+    )
+
+
+def repair_store(path: str) -> FsckReport:
+    """Fsck + repair: excise every damaged block of the store at ``path``.
+
+    Damaged blocks' manifest entries become tombstones, their surviving files
+    are moved aside as ``<name>.damaged``, and the manifest is atomically
+    rewritten — see the module docstring for the exact guarantees. A clean
+    store is left byte-identical (no manifest rewrite, same
+    ``manifest_hash``). Idempotent: a second pass finds the tombstones
+    already in place and nothing to do."""
+    manifest = _load_checked(path)
+    damaged, excised_prior, checked = _scan(path, manifest)
+    h_before = _manifest_hash(manifest)
+    if not damaged:
+        return FsckReport(
+            path=path,
+            n_blocks=int(manifest["n_blocks"]),
+            n_docs=int(manifest["n_docs"]),
+            checked=checked,
+            damaged=(),
+            excised_prior=tuple(excised_prior),
+            repaired=(),
+            manifest_hash_before=h_before,
+            manifest_hash_after=h_before,
+        )
+    bad = {i: reason for i, reason in damaged}
+    blocks = []
+    # lineage: excision keeps blocks positional (doc ids unchanged), so
+    # consumers holding the pre-repair content token (index checkpoints,
+    # pipeline sidecars) may safely pair with the repaired store — the chain
+    # of pre-repair manifest hashes lets them tell "repaired" from
+    # "regenerated"
+    lineage = list(manifest.get("fsck_lineage", ())) + [h_before]
+    for entry in manifest["blocks"]:
+        i = int(entry["i"])
+        if i not in bad:
+            blocks.append(entry)
+            continue
+        for fname in entry["files"].values():
+            full = os.path.join(path, fname)
+            if os.path.exists(full):
+                # keep the evidence, but out of the manifest's namespace so
+                # a later append can never collide with it
+                os.replace(full, full + ".damaged")
+        blocks.append({"i": i, "excised": True, "reason": bad[i]})
+    new_manifest = dict(manifest)
+    new_manifest["blocks"] = blocks
+    new_manifest["fsck_lineage"] = lineage
+    mtmp = os.path.join(path, MANIFEST_NAME + ".tmp")
+    with open(mtmp, "w") as f:
+        json.dump(new_manifest, f, indent=1, sort_keys=True)
+    os.replace(mtmp, os.path.join(path, MANIFEST_NAME))
+    return FsckReport(
+        path=path,
+        n_blocks=int(new_manifest["n_blocks"]),
+        n_docs=int(new_manifest["n_docs"]),
+        checked=checked,
+        damaged=tuple(damaged),
+        excised_prior=tuple(excised_prior),
+        repaired=tuple(sorted(bad)),
+        manifest_hash_before=h_before,
+        manifest_hash_after=_manifest_hash(new_manifest),
+    )

@@ -70,9 +70,11 @@ from repro.core.backend import (
     make_backend,
     shard_from_store,
 )
+from repro.core.faults import FaultReport
 from repro.core.ktree import (
     KTree, _levels_bucket, chunked_query_rows, leaf_nodes, padded_chunk_rows,
 )
+from repro.core.store import check_on_fault
 from repro.kernels.ref import topk_from_dist, topk_merge_ref
 
 
@@ -200,31 +202,46 @@ def _pipeline_chunks(chunks, pipeline: int, dispatch, docs_out, dist_out):
         drain_one()
 
 
-def _store_chunk_iter(store, n: int, chunk: int, prefetch: int):
+def _store_chunk_iter(store, n: int, chunk: int, prefetch: int, dropped=None):
     """Yield ``(rows_np, fetched row arrays)`` per padded query chunk of a
     store source. ``prefetch=0``: the disk read happens inline, right before
     the chunk is dispatched (the §8 dispatch-ahead pipeline then overlaps it
     with the *previous* chunk's compute). ``prefetch ≥ 1``: the reads move to
     a ``store.Prefetcher`` reader thread of that depth, which additionally
     overlaps them with the current chunk's D2H copy-out — the yielded arrays
-    (and hence the answers) are identical either way."""
+    (and hence the answers) are identical either way.
+
+    ``dropped`` (degrade mode, DESIGN.md §10): a list that collects the
+    global query-row ids whose store blocks were unreadable after retries —
+    those rows are zero-filled in the yielded arrays and the caller must
+    flag their answers (−1, +inf)."""
+
+    def fetch(req):
+        rows_np, padded = req
+        if dropped is None:
+            return store.take_rows(padded)
+        got, ok = store.take_rows_masked(padded)
+        if not ok.all():
+            # padded[:rows_np.size] == rows_np (padding repeats the last row)
+            dropped.extend(int(r) for r in rows_np[~ok[: rows_np.size]])
+        return got
+
     if prefetch:
         from repro.core.store import Prefetcher
 
         with Prefetcher(
-            padded_chunk_rows(n, chunk),
-            lambda req: store.take_rows(req[1]), depth=prefetch,
+            padded_chunk_rows(n, chunk), fetch, depth=prefetch,
         ) as pf:
             for (rows_np, _), got in pf:
                 yield rows_np, got
         return
-    for rows_np, padded in padded_chunk_rows(n, chunk):
-        yield rows_np, store.take_rows(padded)
+    for req in padded_chunk_rows(n, chunk):
+        yield req[0], fetch(req)
 
 
 def topk_search(
     tree: KTree, q, k: int = 10, beam: int = 4, chunk: int = 512,
-    pipeline: int = 2, prefetch: int = 0,
+    pipeline: int = 2, prefetch: int = 0, on_fault: str = "raise",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k ANN document search with beam-width recall control.
 
@@ -241,10 +258,21 @@ def topk_search(
     old synchronous loop — benchmarks/query_throughput.py measures the gap).
     ``prefetch ≥ 1`` (store sources only) moves the disk reads onto an async
     ``store.Prefetcher`` reader thread of that depth, overlapping the next
-    chunk's read with compute *and* the current D2H — answers unchanged."""
+    chunk's read with compute *and* the current D2H — answers unchanged.
+
+    Fault handling (DESIGN.md §10): with the default ``on_fault="raise"`` a
+    store block that exhausts its read retries surfaces a typed
+    ``BlockCorrupt``/``BlockUnavailable``. ``on_fault="degrade"`` instead
+    drops only the unreadable blocks' query rows — their answers become
+    (−1, +inf), surviving rows stay bit-identical to a fault-free run — and
+    returns a third element, a :class:`repro.core.faults.FaultReport`
+    flagging ``degraded=True`` whenever anything was dropped."""
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
+    check_on_fault(on_fault)
     store = q if is_store(q) else None
+    degrade = on_fault == "degrade"
+    dropped: Optional[list] = [] if (degrade and store is not None) else None
     be = None if store is not None else make_backend(q)
     src = store if store is not None else be
     if src.dim != tree.dim:
@@ -258,6 +286,8 @@ def topk_search(
     docs_out = np.full((n, k), -1, np.int32)
     dist_out = np.full((n, k), np.inf, np.float32)
     if n == 0:
+        if degrade:
+            return docs_out, dist_out, FaultReport()
         return docs_out, dist_out
 
     if store is not None:
@@ -273,7 +303,7 @@ def topk_search(
                 max_levels=max_levels, beam=beam, k=k,
             )
 
-        chunks = _store_chunk_iter(store, n, chunk, prefetch)
+        chunks = _store_chunk_iter(store, n, chunk, prefetch, dropped)
     else:
         def dispatch(rows):
             return _beam_search(
@@ -284,6 +314,17 @@ def topk_search(
         chunks = chunked_query_rows(n, chunk)
 
     _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out)
+    if degrade:
+        rows_lost = tuple(sorted(set(dropped))) if dropped else ()
+        if rows_lost:
+            idx = np.asarray(rows_lost, np.int64)
+            docs_out[idx] = -1
+            dist_out[idx] = np.inf
+        qset = tuple(sorted(store.quarantined)) if store is not None else ()
+        return docs_out, dist_out, FaultReport(
+            degraded=bool(rows_lost), quarantined_blocks=qset,
+            dropped_query_rows=rows_lost,
+        )
     return docs_out, dist_out
 
 
@@ -496,14 +537,21 @@ def _get_store_merge_fn(mesh, kind: str, k: int):
 
 def _topk_search_sharded_store(
     mesh, tree: KTree, q, sshards: StoreDocShards, k: int, beam: int,
-    chunk: int,
+    chunk: int, on_fault: str = "raise",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Shard-parallel top-k over a disk-backed corpus (DESIGN.md §9): per
     chunk, the jitted descent yields the beam candidate set, each shard's
     partition fetches only the candidates it owns through its own block
     cache (:meth:`StoreDocShards.chunk_pools`), and the shard-map pool merge
     returns the exact global top-k. The full corpus is never resident — peak
-    store bytes stay within n_shards × per-shard budget."""
+    store bytes stay within n_shards × per-shard budget.
+
+    ``on_fault="degrade"`` (DESIGN.md §10) drops only the unreadable blocks'
+    candidates (their docs score +inf, exactly as if no shard owned them) and
+    unreadable *query* rows (flagged (−1, +inf)); surviving answers are
+    bit-identical to a reference search over the surviving corpus subset.
+    Returns a third :class:`repro.core.faults.FaultReport` element."""
+    degrade = on_fault == "degrade"
     store_q = q if is_store(q) else None
     qbe = None if store_q is not None else make_backend(q)
     n = (store_q if store_q is not None else qbe).n_docs
@@ -512,11 +560,32 @@ def _topk_search_sharded_store(
     merge_fn = _get_store_merge_fn(mesh, sshards.kind, k)
     docs_out = np.full((n, k), -1, np.int32)
     dist_out = np.full((n, k), np.inf, np.float32)
+    rows_lost: set = set()
+    docs_lost: set = set()
+
+    def _report() -> FaultReport:
+        qset = set(sshards.parts[0].quarantined)
+        if store_q is not None:
+            qset |= set(store_q.quarantined)
+        return FaultReport(
+            degraded=bool(rows_lost or docs_lost),
+            quarantined_blocks=tuple(sorted(qset)),
+            dropped_query_rows=tuple(sorted(rows_lost)),
+            dropped_docs=len(docs_lost),
+        )
+
     if n == 0:
-        return docs_out, dist_out
+        return (docs_out, dist_out, _report()) if degrade \
+            else (docs_out, dist_out)
     for rows_np, padded in padded_chunk_rows(n, chunk):
         if store_q is not None:
-            qbe_c = backend_from_store(store_q, padded)
+            if degrade:
+                got, ok = store_q.take_rows_masked(padded)
+                if not ok.all():
+                    rows_lost.update(int(r) for r in padded[~ok])
+                qbe_c = backend_from_rows(store_q, got)
+            else:
+                qbe_c = backend_from_store(store_q, padded)
             rows = jnp.arange(padded.size, dtype=jnp.int32)
         else:
             qbe_c = qbe
@@ -526,12 +595,20 @@ def _topk_search_sharded_store(
             max_levels=max_levels, beam=beam,
         )
         # host sync: the candidate ids drive this chunk's disk fetches
-        pools, pool_idx, owned = sshards.chunk_pools(
-            np.asarray(cand), np.asarray(valid)
+        pools, pool_idx, owned, dropped_ids = sshards.chunk_pools(
+            np.asarray(cand), np.asarray(valid), on_fault=on_fault
         )
+        if dropped_ids.size:
+            docs_lost.update(int(i) for i in dropped_ids)
         ids, dist = merge_fn(pools, pool_idx, owned, xq, q_sq, cand, valid)
         docs_out[rows_np] = np.asarray(ids)[: rows_np.size]
         dist_out[rows_np] = np.asarray(dist)[: rows_np.size]
+    if degrade:
+        if rows_lost:
+            idx = np.asarray(sorted(rows_lost), np.int64)
+            docs_out[idx] = -1
+            dist_out[idx] = np.inf
+        return docs_out, dist_out, _report()
     return docs_out, dist_out
 
 
@@ -545,7 +622,7 @@ def shard_corpus(mesh, corpus, axes=None) -> DocShards:
 
 def topk_search_sharded(
     mesh, tree: KTree, q, corpus=None, k: int = 10, beam: int = 4,
-    chunk: int = 512, pipeline: int = 2,
+    chunk: int = 512, pipeline: int = 2, on_fault: str = "raise",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Shard-parallel top-k search: same answers as :func:`topk_search`, with
     the corpus row-sharded over ``mesh``'s data axes (DESIGN.md §8).
@@ -573,9 +650,19 @@ def topk_search_sharded(
     either corpus kind. The store-corpus path runs one chunk at a time
     (``pipeline`` does not apply): the descent's candidate ids must return to
     the host to drive that chunk's disk fetches.
+
+    Fault handling (DESIGN.md §10): ``on_fault="degrade"`` applies to store
+    query sources and store corpora — unreadable query rows answer (−1, +inf)
+    and quarantined corpus blocks' candidates are dropped (scored +inf, as
+    if no shard owned them); surviving answers stay bit-identical to a
+    reference search over the surviving subset. Degrade mode returns a third
+    :class:`repro.core.faults.FaultReport` element; the default ``"raise"``
+    keeps the two-tuple API and surfaces typed block errors.
     """
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
+    check_on_fault(on_fault)
+    degrade = on_fault == "degrade"
     store_q = q if is_store(q) else None
     qbe = None if store_q is not None else make_backend(q)
     q_src = store_q if store_q is not None else qbe
@@ -594,7 +681,8 @@ def topk_search_sharded(
                 f"corpus dim {sshards.dim} != tree dim {tree.dim}"
             )
         return _topk_search_sharded_store(
-            mesh, tree, q, sshards, k=k, beam=beam, chunk=chunk
+            mesh, tree, q, sshards, k=k, beam=beam, chunk=chunk,
+            on_fault=on_fault,
         )
     fresh = not isinstance(corpus, (DenseDocShards, EllDocShards))
     shards = shard_corpus(mesh, corpus_from_tree(tree) if corpus is None else corpus)
@@ -624,14 +712,22 @@ def topk_search_sharded(
     n = q_src.n_docs
     docs_out = np.full((n, k), -1, np.int32)
     dist_out = np.full((n, k), np.inf, np.float32)
+    rows_lost: set = set()
     if n == 0:
-        return docs_out, dist_out
+        return (docs_out, dist_out, FaultReport()) if degrade \
+            else (docs_out, dist_out)
 
     if store_q is not None:
         # store-sourced queries: fetch each chunk's rows from the block cache
         # and descend a chunk-sized backend, exactly like topk_search's §9 path
         def dispatch(padded_np):
-            qbe_c = backend_from_store(store_q, padded_np)
+            if degrade:
+                got, ok = store_q.take_rows_masked(padded_np)
+                if not ok.all():
+                    rows_lost.update(int(r) for r in padded_np[~ok])
+                qbe_c = backend_from_rows(store_q, got)
+            else:
+                qbe_c = backend_from_store(store_q, padded_np)
             rows = jnp.arange(padded_np.size, dtype=jnp.int32)
             return fn(tree, qbe_c, rows, jnp.int32(levels), shards)
 
@@ -643,6 +739,16 @@ def topk_search_sharded(
         chunks = chunked_query_rows(n, chunk)
 
     _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out)
+    if degrade:
+        if rows_lost:
+            idx = np.asarray(sorted(rows_lost), np.int64)
+            docs_out[idx] = -1
+            dist_out[idx] = np.inf
+        qset = tuple(sorted(store_q.quarantined)) if store_q is not None else ()
+        return docs_out, dist_out, FaultReport(
+            degraded=bool(rows_lost), quarantined_blocks=qset,
+            dropped_query_rows=tuple(sorted(rows_lost)),
+        )
     return docs_out, dist_out
 
 

@@ -37,6 +37,15 @@ loop for growing corpora: ``ktree.insert_into_store`` spills newly inserted
 leaf vectors into the padding tail of the last block plus freshly appended
 block files, atomically extending the manifest.
 
+Fault model (DESIGN.md §10): every block read goes through a hardened path —
+blake2b digest verification at read time (on by default, opt out via
+:class:`ReadPolicy`), capped exponential backoff + jitter on transient
+failures, and quarantine of blocks that exhaust their retries, surfacing
+typed :class:`BlockCorrupt` / :class:`BlockUnavailable` errors with exact
+counters in ``BlockCache.stats``. A :class:`repro.core.faults.FaultPlan`
+passed to :func:`open_store` injects reproducible faults behind the same
+seam.
+
 This module is deliberately numpy/host-only (no jax imports): stores cross no
 jit boundary. The device-side seam is ``repro.core.backend.from_store`` —
 chunk-sized in-memory backends materialised from store rows on demand.
@@ -45,19 +54,93 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import io
 import json
 import os
 import queue
 import shutil
 import threading
+import time
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core.faults import _coin
 
 MANIFEST_NAME = "manifest.json"
 FORMAT_TAG = "ktree-store-v1"
 DEFAULT_BLOCK_DOCS = 4096
 DEFAULT_BUDGET_BYTES = 256 * 1024 * 1024
+
+
+class BlockError(RuntimeError):
+    """Base of typed block-read failures.
+
+    ``retryable`` is False: these are post-retry *verdicts* — the hardened
+    read path raises them only once the :class:`ReadPolicy` retries are
+    exhausted (so :class:`Prefetcher` propagates them instead of restarting
+    its reader thread).
+    """
+
+    retryable = False
+
+    def __init__(self, path: str, block: int, detail: str):
+        super().__init__(f"{path}: block {block}: {detail}")
+        self.path = path
+        self.block = block
+
+
+class BlockCorrupt(BlockError, ValueError):
+    """Block content failed blake2b digest verification after retries."""
+
+
+class BlockUnavailable(BlockError, IOError):
+    """Block cannot be read: I/O failure after retries, quarantined by an
+    earlier exhausted read, or excised from the manifest by ``store_fsck``."""
+
+
+class ManifestError(ValueError):
+    """A manifest/sidecar file that cannot be parsed or fails its format
+    guard — always names the offending path (instead of surfacing a raw
+    ``json.JSONDecodeError`` with no context)."""
+
+    def __init__(self, path: str, detail: str):
+        super().__init__(f"{path}: {detail}")
+        self.path = path
+
+
+class _DigestMismatch(Exception):
+    """Internal: one read attempt's content failed digest verification."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadPolicy:
+    """How hard a store read tries before giving up (DESIGN.md §10).
+
+    ``verify`` checks each block's blake2b digest against the manifest on
+    every decode (on by default; per-store opt-out for trusted media).
+    Failed attempts — I/O errors, injected faults, digest mismatches — are
+    retried up to ``max_retries`` times with capped exponential backoff
+    (``backoff_s · 2^(attempt-1)``, capped at ``backoff_cap_s``) plus a
+    deterministic jitter fraction of up to ``jitter`` drawn from ``seed``,
+    so concurrent readers of a flaky block don't retry in lockstep and test
+    runs stay reproducible.
+    """
+
+    verify: bool = True
+    max_retries: int = 3
+    backoff_s: float = 0.005
+    backoff_cap_s: float = 0.1
+    jitter: float = 0.5
+    seed: int = 0
+
+
+def check_on_fault(on_fault: str) -> None:
+    """Validate an ``on_fault`` mode argument (``"raise"`` or ``"degrade"``)."""
+    if on_fault not in ("raise", "degrade"):
+        raise ValueError(
+            f"on_fault must be 'raise' or 'degrade', got {on_fault!r}"
+        )
 
 
 class BlockCache:
@@ -93,6 +176,12 @@ class BlockCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # hardened-read counters (DESIGN.md §10), bumped by the store's
+        # loader as faults are observed/retried/exhausted
+        self.read_retries = 0
+        self.read_errors = 0
+        self.verify_failures = 0
+        self.quarantined = 0
 
     @staticmethod
     def _block_bytes(arrays: Dict[str, np.ndarray]) -> int:
@@ -158,6 +247,8 @@ class BlockCache:
             hit_rate=self.hits / total if total else 0.0,
             resident_bytes=self._bytes, resident_blocks=len(self._lru),
             peak_resident_bytes=self._peak, budget_bytes=self.budget_bytes,
+            read_retries=self.read_retries, read_errors=self.read_errors,
+            verify_failures=self.verify_failures, quarantined=self.quarantined,
         )
 
 
@@ -173,40 +264,76 @@ class Prefetcher:
     moves off the dispatch path (DESIGN.md §9: the next block's read overlaps
     device compute *and* the current chunk's D2H copy-out, where the
     ``pipeline`` dispatch-ahead alone still serialised read → dispatch).
-    A ``fetch`` exception is re-raised at the consumer's next step. Use as a
-    context manager (or call :meth:`close`) to stop the worker early;
-    exhausting the iterator joins it automatically.
+    Fault handling (DESIGN.md §10): a ``fetch`` exception whose type carries
+    ``retryable = False`` (the store's :class:`BlockError` verdicts — the
+    read policy already exhausted its retries) is re-raised at the consumer's
+    next step. Any other exception is treated as a transient reader fault:
+    the worker thread is restarted up to ``max_restarts`` times, re-issuing
+    the failed request, and only an exhausted restart budget propagates —
+    result order is preserved across restarts, so consumers stay
+    bit-identical. Use as a context manager (or call :meth:`close`) to stop
+    the worker early; exhausting the iterator joins it automatically.
     """
 
     _DONE = object()
     _ERR = object()
 
-    def __init__(self, requests: Iterable, fetch: Callable, depth: int = 1):
+    def __init__(self, requests: Iterable, fetch: Callable, depth: int = 1,
+                 max_restarts: int = 2):
         if depth < 1:
             raise ValueError(f"prefetch depth must be ≥ 1, got {depth}")
         self.depth = int(depth)
+        self.max_restarts = int(max_restarts)
+        self.restarts = 0
         self._results: "queue.Queue" = queue.Queue(maxsize=self.depth)
         self._stop = threading.Event()
         self._requests = iter(requests)
         self._fetch = fetch
+        self._inflight_req = None
+        self._have_inflight = False
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
-    def _run(self):
-        """Worker loop: fetch ahead until the requests run dry or close()."""
+    def _emit(self, req):
+        """Fetch one request and hand the result to the consumer queue."""
+        self._inflight_req = req
+        self._have_inflight = True
+        item = (req, self._fetch(req))
+        self._have_inflight = False
+        while not self._stop.is_set():
+            try:
+                self._results.put(item, timeout=0.1)
+                break
+            except queue.Full:
+                continue
+
+    def _run(self, retry_req=None):
+        """Worker loop: fetch ahead until the requests run dry or close().
+
+        ``retry_req`` re-issues the request a previous (faulted) worker
+        incarnation died on, so a restart loses no results."""
         try:
+            if retry_req is not None:
+                self._emit(retry_req)
             for req in self._requests:
                 if self._stop.is_set():
                     return
-                item = (req, self._fetch(req))
-                while not self._stop.is_set():
-                    try:
-                        self._results.put(item, timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
+                self._emit(req)
             self._put_final((Prefetcher._DONE, None))
         except BaseException as e:  # surfaced at the consumer's next step
+            if (getattr(e, "retryable", True)
+                    and self.restarts < self.max_restarts
+                    and not self._stop.is_set()):
+                # transient reader fault: restart the thread on the failed
+                # request; only exhausted budgets reach the consumer
+                self.restarts += 1
+                failed = self._inflight_req if self._have_inflight else None
+                self._have_inflight = False
+                self._thread = threading.Thread(
+                    target=self._run, args=(failed,), daemon=True
+                )
+                self._thread.start()
+                return
             self._put_final((Prefetcher._ERR, e))
 
     def _put_final(self, item):
@@ -388,6 +515,9 @@ class CorpusStore:
     path: str
     manifest: dict
     cache: BlockCache
+    read_policy: ReadPolicy = dataclasses.field(default_factory=ReadPolicy)
+    fault_plan: Optional[object] = None
+    quarantined: Dict[int, str] = dataclasses.field(default_factory=dict)
 
     # -- shape / identity ---------------------------------------------------
     @property
@@ -453,15 +583,90 @@ class CorpusStore:
         return h
 
     # -- block access -------------------------------------------------------
+    def _read_block_attempt(
+        self, i: int, entry: dict, attempt: int
+    ) -> Dict[str, np.ndarray]:
+        """One raw read + digest verify + decode attempt of block ``i``.
+
+        The :class:`repro.core.faults.FaultPlan` seam sits on the raw bytes:
+        injected stalls/read errors fire before the read, injected bit-flips
+        mangle the payload in flight — so digest verification (not the
+        parser) is what must catch corruption, exactly as with real media."""
+        plan = self.fault_plan
+        if plan is not None:
+            plan.on_read(i, attempt)
+        raws = {}
+        for name in sorted(entry["files"]):
+            with open(os.path.join(self.path, entry["files"][name]), "rb") as f:
+                raw = f.read()
+            if plan is not None:
+                raw = plan.corrupt_bytes(i, name, raw)
+            raws[name] = raw
+        if self.read_policy.verify:
+            # field-name-sorted concatenation, matching save_store's layout
+            dig = "".join(
+                hashlib.blake2b(raws[n], digest_size=16).hexdigest()
+                for n in sorted(raws)
+            )
+            if dig != entry["digest"]:
+                raise _DigestMismatch(
+                    f"content digest mismatch (read {dig}, "
+                    f"manifest {entry['digest']})"
+                )
+        return {
+            name: np.load(io.BytesIO(raw), allow_pickle=False)
+            for name, raw in raws.items()
+        }
+
     def _load_block(self, i: int) -> Dict[str, np.ndarray]:
-        """Decode block ``i`` from disk (mmap → private in-memory copy, so the
-        cache's byte accounting matches actual residency)."""
+        """Decode block ``i`` from disk through the hardened read path.
+
+        Verifies the block's blake2b digest (``read_policy.verify``, on by
+        default), retries failed attempts — I/O errors, injected faults,
+        digest mismatches — with capped exponential backoff + deterministic
+        jitter, and **quarantines** a block that exhausts its retries so
+        subsequent reads fail fast. Surfaces :class:`BlockCorrupt` (digest
+        mismatch) or :class:`BlockUnavailable` (I/O / quarantined / excised),
+        with exact counters on this handle's :class:`BlockCache`."""
         entry = self.manifest["blocks"][i]
-        out = {}
-        for name, fname in entry["files"].items():
-            arr = np.load(os.path.join(self.path, fname), mmap_mode="r")
-            out[name] = np.array(arr)  # materialise: residency is the point
-        return out
+        if entry.get("excised"):
+            reason = "excised by store_fsck: " + str(entry.get("reason", ""))
+        else:
+            reason = self.quarantined.get(i)
+        if reason is not None:
+            raise BlockUnavailable(self.path, i, reason)
+        pol, cache = self.read_policy, self.cache
+        last: Optional[BaseException] = None
+        for attempt in range(pol.max_retries + 1):
+            if attempt:
+                if cache is not None:
+                    cache.read_retries += 1
+                delay = min(pol.backoff_s * (2.0 ** (attempt - 1)),
+                            pol.backoff_cap_s)
+                if delay > 0.0:
+                    time.sleep(delay * (1.0 + pol.jitter * _coin(
+                        pol.seed, "backoff", i, attempt)))
+            try:
+                return self._read_block_attempt(i, entry, attempt)
+            except _DigestMismatch as e:
+                last = e
+                if cache is not None:
+                    cache.verify_failures += 1
+            except (OSError, ValueError) as e:
+                # OSError: real/injected I/O faults; ValueError: np.load on
+                # mangled bytes when verification is opted out
+                last = e
+                if cache is not None:
+                    cache.read_errors += 1
+        self.quarantined[i] = f"{type(last).__name__}: {last}"
+        if cache is not None:
+            cache.quarantined += 1
+        if isinstance(last, _DigestMismatch):
+            raise BlockCorrupt(self.path, i, str(last)) from last
+        raise BlockUnavailable(
+            self.path, i,
+            f"read failed after {pol.max_retries + 1} attempts: {last}",
+        ) from last
 
     def read_block(self, i: int) -> Dict[str, np.ndarray]:
         """Block ``i``'s arrays through the LRU cache (padded to
@@ -476,7 +681,7 @@ class CorpusStore:
         return lo, min(lo + self.block_docs, self.n_docs)
 
     def iter_blocks(
-        self, prefetch: int = 0
+        self, prefetch: int = 0, on_fault: str = "raise"
     ) -> Iterator[Tuple[int, int, Dict[str, np.ndarray]]]:
         """Yield ``(lo, hi, arrays)`` per block in row order — the streaming
         scan pattern (arrays still padded; slice ``[:hi-lo]``).
@@ -484,17 +689,35 @@ class CorpusStore:
         ``prefetch ≥ 1`` moves the block reads onto a :class:`Prefetcher`
         reader thread of that depth, so the next block's disk decode overlaps
         the consumer's work on the current one; the yielded arrays are the
-        same cache entries the synchronous scan returns."""
+        same cache entries the synchronous scan returns.
+
+        ``on_fault="degrade"`` silently skips blocks whose hardened read
+        raises a :class:`BlockError` (quarantined/excised/corrupt) instead of
+        failing the whole scan — the degraded ground-truth/streaming mode."""
+        check_on_fault(on_fault)
+
+        def _read(i: int):
+            if on_fault == "degrade":
+                try:
+                    return self.read_block(i)
+                except BlockError:
+                    return None
+            return self.read_block(i)
+
         if prefetch:
-            with Prefetcher(range(self.n_blocks), self.read_block,
-                            depth=prefetch) as pf:
+            with Prefetcher(range(self.n_blocks), _read, depth=prefetch) as pf:
                 for i, arrays in pf:
+                    if arrays is None:
+                        continue
                     lo, hi = self.block_rows(i)
                     yield lo, hi, arrays
             return
         for i in range(self.n_blocks):
+            arrays = _read(i)
+            if arrays is None:
+                continue
             lo, hi = self.block_rows(i)
-            yield lo, hi, self.read_block(i)
+            yield lo, hi, arrays
 
     def take_rows(self, rows: np.ndarray) -> Dict[str, np.ndarray]:
         """Gather arbitrary global rows as host arrays.
@@ -525,6 +748,45 @@ class CorpusStore:
             for name in names:
                 out[name][sel] = arrays[name][local]
         return out
+
+    def take_rows_masked(
+        self, rows: np.ndarray
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Gather rows like :meth:`take_rows`, surviving unreadable blocks.
+
+        Returns ``(arrays, ok)`` where ``ok[j]`` is False for rows whose
+        block raised a :class:`BlockError` after the read policy's retries
+        (those rows are zero-filled in ``arrays``). The degrade-mode fetch
+        primitive (DESIGN.md §10): callers drop the masked rows instead of
+        failing the whole gather. Out-of-range ids still raise — only
+        *fault* outcomes are maskable."""
+        rows = np.asarray(rows)
+        if rows.size and (rows.min() < 0 or rows.max() >= self.n_docs):
+            raise IndexError(
+                f"row ids outside [0, {self.n_docs}): "
+                f"[{rows.min()}, {rows.max()}]"
+            )
+        names = ("x",) if self.kind == "dense" else ("values", "cols")
+        out = {
+            name: np.zeros(
+                (rows.size,) + self._field_shape(name),
+                self._field_dtype(name),
+            )
+            for name in names
+        }
+        ok = np.ones(rows.size, dtype=bool)
+        blk = rows // self.block_docs
+        for b in np.unique(blk):
+            sel = np.nonzero(blk == b)[0]
+            try:
+                arrays = self.read_block(int(b))
+            except BlockError:
+                ok[sel] = False
+                continue
+            local = rows[sel] - int(b) * self.block_docs
+            for name in names:
+                out[name][sel] = arrays[name][local]
+        return out, ok
 
     def _field_shape(self, name: str) -> Tuple[int, ...]:
         """Per-row trailing shape of a stored field."""
@@ -563,7 +825,13 @@ class CorpusStore:
         ext = -(-self.n_docs // n_shards)
         parts = []
         for s in range(n_shards):
-            h = CorpusStore(path=self.path, manifest=self.manifest, cache=None)  # type: ignore[arg-type]
+            # partitions share the read policy, fault plan, and the
+            # *quarantine dict* (same underlying disk: a block one shard's
+            # reads exhausted is bad for every shard), but not cache state
+            h = CorpusStore(path=self.path, manifest=self.manifest, cache=None,  # type: ignore[arg-type]
+                            read_policy=self.read_policy,
+                            fault_plan=self.fault_plan,
+                            quarantined=self.quarantined)
             h.cache = BlockCache(budget, h._load_block)
             parts.append(h.view(min(s * ext, self.n_docs),
                                 min((s + 1) * ext, self.n_docs)))
@@ -613,6 +881,13 @@ class CorpusStore:
         valid_in_last = n0 - last * bd
         blocks = [dict(e) for e in self.manifest["blocks"]]
 
+        def _step(label: str) -> None:
+            # kill-point seam: a FaultPlan(kill_after_writes=k) "crashes" the
+            # append before its (k+1)-th write step — the crash-safety sweep
+            # in tests exercises every step boundary
+            if self.fault_plan is not None:
+                self.fault_plan.on_write(label)
+
         def _write(i: int, rows: Dict[str, np.ndarray], gen: str = "") -> dict:
             # per-field digest layout must match save_store exactly; ``gen``
             # suffixes the rewritten tail block's file names so the file the
@@ -620,12 +895,15 @@ class CorpusStore:
             # grows, so generation names are unique per append)
             if self.kind == "dense":
                 fx = f"dense_{i:05d}{gen}.npy"
+                _step(f"block:{i}:x")
                 return {"i": i, "files": {"x": fx},
                         "digest": _replace_block(self.path, fx,
                                                  _pad_rows(rows["x"], bd))}
             fv = f"ell_values_{i:05d}{gen}.npy"
             fc = f"ell_cols_{i:05d}{gen}.npy"
+            _step(f"block:{i}:values")
             dv = _replace_block(self.path, fv, _pad_rows(rows["values"], bd))
+            _step(f"block:{i}:cols")
             dc = _replace_block(self.path, fc, _pad_rows(rows["cols"], bd))
             return {"i": i, "files": {"values": fv, "cols": fc},
                     "digest": dc + dv}
@@ -663,9 +941,12 @@ class CorpusStore:
         manifest["n_docs"] = n0 + b_new
         manifest["n_blocks"] = len(manifest["blocks"])
         mtmp = os.path.join(self.path, MANIFEST_NAME + ".tmp")
+        _step("manifest:tmp")
         with open(mtmp, "w") as f:
             json.dump(manifest, f, indent=1, sort_keys=True)
+        _step("manifest:replace")
         os.replace(mtmp, os.path.join(self.path, MANIFEST_NAME))
+        _step("post-commit")
 
         self.manifest = manifest  # rebind: stale handles keep the old dict
         self.__dict__.pop("_manifest_hash", None)  # rotate the content token
@@ -736,28 +1017,79 @@ class StoreSlice:
             )
         return self.store.take_rows(rows + self.lo)
 
+    def take_rows_masked(
+        self, rows: np.ndarray
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Masked gather of view-local rows (see
+        :meth:`CorpusStore.take_rows_masked`); the same view-bounds check as
+        :meth:`take_rows` applies."""
+        rows = np.asarray(rows)
+        if rows.size and (rows.min() < 0 or rows.max() >= self.n_docs):
+            raise IndexError(
+                f"row ids outside the view's [0, {self.n_docs}): "
+                f"[{rows.min()}, {rows.max()}]"
+            )
+        return self.store.take_rows_masked(rows + self.lo)
+
+    @property
+    def quarantined(self) -> Dict[int, str]:
+        """Parent store's quarantine map (block id → reason) — shared across
+        every view/partition of the same disk."""
+        return self.store.quarantined
+
+
+def load_manifest(mpath: str) -> dict:
+    """Parse a JSON manifest/sidecar, surfacing :class:`ManifestError` (which
+    names the offending path) instead of a raw ``json.JSONDecodeError`` on
+    corrupt or truncated files."""
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise ManifestError(
+            mpath, f"corrupt or truncated manifest — not valid JSON ({e})"
+        ) from e
+    if not isinstance(manifest, dict):
+        raise ManifestError(
+            mpath,
+            f"expected a JSON object, got {type(manifest).__name__}",
+        )
+    return manifest
+
 
 def open_store(
-    path: str, budget_bytes: int = DEFAULT_BUDGET_BYTES, verify: bool = False
+    path: str,
+    budget_bytes: int = DEFAULT_BUDGET_BYTES,
+    verify: bool = False,
+    fault_plan: Optional[object] = None,
+    read_policy: Optional[ReadPolicy] = None,
 ) -> CorpusStore:
     """Open an on-disk corpus store with an LRU residency budget.
 
     ``budget_bytes`` bounds decoded-block residency (the out-of-core dial —
     benchmarks/oocore.py sweeps it). ``verify=True`` re-hashes every block
     file against the manifest digests before returning (slow; integrity
-    check after a copy)."""
+    check after a copy) — independent of the per-read verification that
+    ``read_policy`` (default :class:`ReadPolicy`: verify on, 3 retries)
+    applies to every block decode. ``fault_plan`` threads a
+    :class:`repro.core.faults.FaultPlan` behind all reads/appends for
+    reproducible fault injection. Blocks excised by ``store_fsck`` open
+    pre-quarantined: reads raise :class:`BlockUnavailable`, degrade-mode
+    searches drop their rows."""
     mpath = os.path.join(path, MANIFEST_NAME)
     if not os.path.exists(mpath):
         raise FileNotFoundError(f"no corpus store at {path} (missing {MANIFEST_NAME})")
-    with open(mpath) as f:
-        manifest = json.load(f)
+    manifest = load_manifest(mpath)
     if manifest.get("format") != FORMAT_TAG:
-        raise ValueError(
-            f"{path}: unknown store format {manifest.get('format')!r} "
-            f"(expected {FORMAT_TAG!r})"
+        raise ManifestError(
+            mpath,
+            f"unknown store format {manifest.get('format')!r} "
+            f"(expected {FORMAT_TAG!r})",
         )
     if verify:
         for entry in manifest["blocks"]:
+            if entry.get("excised"):
+                continue  # fsck tombstone: no files to verify
             # field-name-sorted order, matching save_store's concatenation
             # (manifest JSON round-trips with sort_keys, so .values() order
             # is already sorted — sorting explicitly keeps it load-order-proof)
@@ -766,10 +1098,18 @@ def open_store(
                 for name in sorted(entry["files"])
             )
             if dig != entry["digest"]:
-                raise ValueError(
-                    f"{path}: block {entry['i']} content does not match its "
-                    "manifest digest (corrupt or partially rewritten store)"
+                raise BlockCorrupt(
+                    path, entry["i"],
+                    "content does not match its manifest digest "
+                    "(corrupt or partially rewritten store)",
                 )
-    store = CorpusStore(path=path, manifest=manifest, cache=None)  # type: ignore[arg-type]
+    store = CorpusStore(path=path, manifest=manifest, cache=None,  # type: ignore[arg-type]
+                        read_policy=read_policy or ReadPolicy(),
+                        fault_plan=fault_plan)
+    for entry in manifest["blocks"]:
+        if entry.get("excised"):
+            store.quarantined[entry["i"]] = (
+                "excised by store_fsck: " + str(entry.get("reason", ""))
+            )
     store.cache = BlockCache(budget_bytes, store._load_block)
     return store

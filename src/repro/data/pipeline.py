@@ -108,7 +108,9 @@ def corpus_store(
     import json
     import os
 
-    from repro.core.store import MANIFEST_NAME, open_store, save_store
+    from repro.core.store import (
+        MANIFEST_NAME, load_manifest, open_store, save_store,
+    )
 
     request = {
         "spec": dataclasses.asdict(spec), "representation": representation,
@@ -118,8 +120,9 @@ def corpus_store(
     if reuse and os.path.exists(os.path.join(path, MANIFEST_NAME)):
         recorded = None
         if os.path.exists(sidecar):
-            with open(sidecar) as f:
-                recorded = json.load(f)
+            # a corrupt/truncated sidecar raises a typed ManifestError
+            # naming the file, not a bare JSONDecodeError
+            recorded = load_manifest(sidecar)
         recorded_req = {
             k: v for k, v in (recorded or {}).items() if k != "manifest_hash"
         } or None
@@ -132,16 +135,20 @@ def corpus_store(
         # content check: a store grown in place (CorpusStore.append /
         # insert_into_store) or otherwise mutated since generation is NOT the
         # prepared corpus this request describes, even though the generation
-        # request still matches
+        # request still matches. Exception: a store *repaired* by store_fsck
+        # records its pre-repair hash in the manifest's fsck_lineage chain —
+        # that is this corpus minus its damaged blocks (doc ids unchanged),
+        # so serving it degraded is exactly the point of the repair
         rec_hash = (recorded or {}).get("manifest_hash")
-        cur_hash = open_store(path).manifest_hash
-        if rec_hash is not None and rec_hash != cur_hash:
+        cur = open_store(path)
+        if (rec_hash is not None and rec_hash != cur.manifest_hash
+                and rec_hash not in cur.manifest.get("fsck_lineage", ())):
             raise ValueError(
                 f"existing store at {path} matches this generation request "
                 "but its content changed since it was written (appended to "
                 "or regenerated — manifest hash "
-                f"{cur_hash} != recorded {rec_hash}); point --store at a "
-                "fresh directory or delete the old one"
+                f"{cur.manifest_hash} != recorded {rec_hash}); point --store "
+                "at a fresh directory or delete the old one"
             )
         return path
     backend, _ = corpus_backend(spec, representation=representation, seed=seed)

@@ -53,17 +53,23 @@ def run_load(
     in order at :func:`open_loop_arrivals` instants (monotonic ``clock``;
     ``sleep`` is a seam for tests). Sheds (:class:`EngineSaturated`) are
     counted and skipped — open loop means the next arrival stays on
-    schedule. Returns the engine's :meth:`ServingEngine.stats` snapshot plus
-    load-side fields: ``offered_qps`` (requests / offered span),
-    ``target_qps``, ``completed`` handles' answers are *not* retained — use
-    :func:`submit_all` when the caller needs them."""
+    schedule. Failed handles (``EngineTimeout``/``EngineFault``/typed store
+    errors) are drained, not re-raised — the engine's ``failed``/``timeouts``
+    counters already report them, and a chaos run's load report must survive
+    its injected faults. Returns the engine's :meth:`ServingEngine.stats`
+    snapshot plus load-side fields: ``offered_qps`` (requests / offered
+    span), ``target_qps``; ``completed`` handles' answers are *not* retained
+    — use :func:`submit_all` when the caller needs them."""
     handles, stats = submit_all(
         engine, requests, rate_qps, deadline_s=deadline_s, seed=seed,
         clock=clock, sleep=sleep,
     )
     for h in handles:
         if h is not None:
-            h.result()
+            try:
+                h.result()
+            except Exception:
+                pass  # resolved-with-error: counted in the engine's stats
     out = engine.stats()
     out.update(stats)
     return out
@@ -144,6 +150,14 @@ def report_lines(stats: dict, label: str = "engine") -> List[str]:
         f"occupancy={stats['batch_occupancy']:.2f}, "
         f"max_queue_depth={stats['max_queue_depth']}",
     ]
+    if (stats.get("failed") or stats.get("timeouts")
+            or stats.get("watchdog_restarts") or stats.get("degraded")):
+        lines.append(
+            f"{label} robustness: failed={stats.get('failed', 0)} "
+            f"timeouts={stats.get('timeouts', 0)} "
+            f"watchdog_restarts={stats.get('watchdog_restarts', 0)} "
+            f"degraded={stats.get('degraded', 0)}"
+        )
     if stats.get("peak_batch_store_bytes"):
         lines.append(
             f"{label} store: peak per-batch residency "

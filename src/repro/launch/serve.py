@@ -157,7 +157,15 @@ def serve_paper_store(args):
 
     nq = min(args.queries, store.n_docs)
     q_view = store.view(0, nq)
-    x_q = make_dense_rows(store, nq)  # cache keys + ground truth share these
+    on_fault = None if args.on_fault == "raise" else args.on_fault
+    # cache keys + ground truth share these query rows; degrade mode
+    # zero-fills rows whose block is quarantined instead of failing
+    x_q = make_dense_rows(store, nq, on_fault=on_fault or "raise")
+    if on_fault and args.cache:
+        raise SystemExit(
+            "--on-fault degrade does not compose with --cache (degraded "
+            "answers must not be cached); drop one of the two"
+        )
     if args.mesh > 1:
         # store-backed sharded serving: the corpus stays on disk — each mesh
         # shard fetches only the candidates it owns through its own block
@@ -170,12 +178,16 @@ def serve_paper_store(args):
             mesh, store, budget_bytes=max(budget // args.mesh, 1)
         )
         mode = f"sharded×{args.mesh}"
-        search_fn = make_search_fn(tree, mesh=mesh, corpus=sshards)
+        search_fn = make_search_fn(
+            tree, mesh=mesh, corpus=sshards, on_fault=on_fault
+        )
         block_caches = [p.store.cache for p in sshards.parts]
     else:
         sshards = None
         mode = "single-device"
-        search_fn = make_search_fn(tree, prefetch=args.prefetch)
+        search_fn = make_search_fn(
+            tree, prefetch=args.prefetch, on_fault=on_fault
+        )
         block_caches = [store.cache]
     run = lambda src: search_fn(src, args.k, args.beam)
     run(q_view)  # warm the jit cache
@@ -202,13 +214,24 @@ def serve_paper_store(args):
               f"hit_rate={s['hit_rate']:.2f} size={s['size']}/{s['capacity']}")
     else:
         t0 = time.perf_counter()
-        docs, _ = run(q_view)
+        out = run(q_view)
         qps = nq / max(time.perf_counter() - t0, 1e-9)
+        docs = out[0]
+        if len(out) == 3 and out[2].degraded:
+            rep = out[2]
+            print(f"DEGRADED answers: quarantined blocks "
+                  f"{list(rep.quarantined_blocks)}, "
+                  f"{len(rep.dropped_query_rows)} query rows dropped")
 
     cs = store.cache.stats
     print(f"store cache: hit_rate={cs['hit_rate']:.2f} "
           f"evictions={cs['evictions']} resident={cs['resident_bytes']/1e6:.1f}"
           f"/{cs['budget_bytes']/1e6:.1f}MB")
+    if cs["read_retries"] or cs["verify_failures"] or cs["quarantined"]:
+        print(f"store robustness: read_retries={cs['read_retries']} "
+              f"read_errors={cs['read_errors']} "
+              f"verify_failures={cs['verify_failures']} "
+              f"quarantined={cs['quarantined']}")
     if sshards is not None:
         for s, st in enumerate(sshards.cache_stats):
             print(f"shard {s} cache: hit_rate={st['hit_rate']:.2f} "
@@ -219,9 +242,14 @@ def serve_paper_store(args):
               f"{sshards.peak_resident_bytes/1e6:.2f}MB "
               f"(bound {args.mesh}×{max(budget // args.mesh, 1)/1e6:.2f}MB "
               f"+ one-block floors)")
-    # ground truth streams block-by-block off the store (never fully resident)
+    # ground truth streams block-by-block off the store (never fully
+    # resident); degrade mode skips quarantined/excised blocks, so the
+    # reference covers exactly the corpus the degraded index can answer from
     true = brute_force_topk_stream(
-        x_q, _dense_store_blocks(store, prefetch=args.prefetch), args.k
+        x_q,
+        _dense_store_blocks(store, prefetch=args.prefetch,
+                            on_fault=on_fault or "raise"),
+        args.k,
     )
     recall = recall_at_k(docs, true)
     print(f"{nq} queries: beam={args.beam} k={args.k} "
@@ -286,16 +314,20 @@ def serve_engine_mode(args, search_fn, x_q, tree, mode,
           f"row_budget={args.row_budget} max_queue={args.max_queue} "
           f"max_wait={args.max_wait_ms}ms"
           + (f" deadline={args.deadline_ms}ms" if deadline else ""))
+    timeout = (args.request_timeout_ms / 1e3
+               if args.request_timeout_ms else None)
     with ServingEngine(
         search_fn, row_budget=args.row_budget, max_queue=args.max_queue,
-        max_wait_s=args.max_wait_ms / 1e3, cache=cache, tree=tree,
+        max_wait_s=args.max_wait_ms / 1e3, request_timeout_s=timeout,
+        cache=cache, tree=tree,
         corpus_token=corpus_token, block_caches=block_caches,
     ) as eng:
         stats = run_load(eng, pool, rate_qps=args.rate, deadline_s=deadline)
         rows, k, beam = pool[0]
         d_eng, s_eng = eng.submit(rows, k=k, beam=beam).result(timeout=120)
     if cache is None:
-        d_off, s_off = search_fn(rows, k, beam)
+        out_off = search_fn(rows, k, beam)
+        d_off, s_off = out_off[0], out_off[1]
     else:
         # cache entries are per-row answers (computed at single-row
         # chunking), so the offline reference is the per-row standalone calls
@@ -313,22 +345,37 @@ def serve_engine_mode(args, search_fn, x_q, tree, mode,
         raise SystemExit("engine answers diverged from the offline engine")
 
 
-def make_dense_rows(store, nq: int) -> np.ndarray:
+def make_dense_rows(store, nq: int, on_fault: str = "raise") -> np.ndarray:
     """Densify the first ``nq`` store rows host-side (cache keys hash dense
-    row bytes; ground truth needs dense queries)."""
+    row bytes; ground truth needs dense queries). ``on_fault="degrade"``
+    gathers through ``take_rows_masked`` — rows whose block is
+    quarantined/excised come back as zero vectors instead of failing the
+    whole serve run (DESIGN.md §10)."""
     from repro.core.backend import backend_from_store
 
-    be = backend_from_store(store, np.arange(nq))
-    return np.asarray(be.take(jnp.arange(nq, dtype=jnp.int32)))
+    if on_fault != "degrade":
+        be = backend_from_store(store, np.arange(nq))
+        return np.asarray(be.take(jnp.arange(nq, dtype=jnp.int32)))
+    got, _ = store.take_rows_masked(np.arange(nq))
+    if store.kind == "dense":
+        return np.asarray(got["x"], np.float32)
+    v, c = got["values"], got["cols"]
+    x = np.zeros((nq, store.dim), np.float32)
+    # masked rows are zero-filled (values 0 → the scatter adds nothing)
+    np.add.at(x, (np.arange(nq)[:, None], c), v)
+    return x
 
 
-def _dense_store_blocks(store, prefetch: int = 0):
+def _dense_store_blocks(store, prefetch: int = 0, on_fault: str = "raise"):
     """Yield ``(row_offset, dense rows)`` per store block for
     ``brute_force_topk_stream`` — dense blocks as-is, ELL blocks densified by
     a host-side numpy scatter-add (padding slots are value 0, so they add
     nothing). One block resident at a time; ``prefetch ≥ 1`` reads the next
-    block on an async reader thread while the current one is scored."""
-    for lo, hi, arrays in store.iter_blocks(prefetch=prefetch):
+    block on an async reader thread while the current one is scored.
+    ``on_fault="degrade"`` skips quarantined/excised blocks (the degraded
+    ground-truth scan)."""
+    for lo, hi, arrays in store.iter_blocks(prefetch=prefetch,
+                                            on_fault=on_fault):
         if store.kind == "dense":
             yield lo, arrays["x"][: hi - lo].astype(np.float32)
         else:
@@ -521,7 +568,37 @@ def main():
                     help="per-request completion deadline, ms; 0 = none. "
                     "The batcher dispatches no later than the oldest "
                     "request's deadline forcing point (--engine)")
+    # --- robustness (DESIGN.md §10) ---
+    ap.add_argument("--fsck", action="store_true",
+                    help="verify the --store directory offline (digest-check "
+                    "every block against the manifest) and exit: status 0 "
+                    "clean, 1 damaged. With --fsck-repair, excise damaged "
+                    "blocks and rewrite the manifest first")
+    ap.add_argument("--fsck-repair", action="store_true",
+                    help="with --fsck: excise damaged blocks (tombstone the "
+                    "manifest entries, move files aside as <name>.damaged) "
+                    "so the surviving rows serve degraded")
+    ap.add_argument("--on-fault", choices=("raise", "degrade"),
+                    default="raise",
+                    help="store-read fault policy for --store serving: "
+                    "'raise' fails the batch with a typed store error; "
+                    "'degrade' drops only the quarantined blocks' rows and "
+                    "flags the answers (DESIGN.md §10)")
+    ap.add_argument("--request-timeout-ms", type=float, default=0.0,
+                    help="engine-wide per-request time budget, ms; 0 = none. "
+                    "The engine watchdog fails overdue requests with "
+                    "EngineTimeout so no caller can hang (--engine)")
     args = ap.parse_args()
+    if args.fsck:
+        from repro.core.fsck import fsck_store, repair_store
+
+        if not args.store:
+            raise SystemExit("--fsck needs --store DIR")
+        report = (repair_store(args.store) if args.fsck_repair
+                  else fsck_store(args.store))
+        for line in report.lines():
+            print(line)
+        raise SystemExit(0 if (report.clean or report.repaired) else 1)
     spec = registry.get(args.arch)
     if spec.family == "lm":
         serve_lm(args)

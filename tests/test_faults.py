@@ -1,0 +1,832 @@
+"""Fault-injection suite (DESIGN.md §10): the hardened serving path.
+
+Every failure mode of the out-of-core stack is driven through the seeded
+:class:`repro.core.faults.FaultPlan` seam (plus real on-disk damage for the
+fsck tests) and pinned against the acceptance contract: a faulted query
+either returns a bit-identical answer (transient faults outlasted by
+retries), a correctly-flagged degraded answer (persistent damage), or a
+typed error — never a hang, never a silently wrong answer.
+
+The kill-point sweep over ``CorpusStore.append`` / ``insert_into_store`` is
+*exhaustive* (every write step of every layout), with an extra
+randomised `hypothesis` pass when that package is installed — the sweep is
+the stronger check, so the property test is gated, not required.
+"""
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from fixtures import assert_trees_equal, random_corpus, store_case, corpus_data
+
+from repro.core import ktree as kt
+from repro.core.engine import (
+    EngineClosed,
+    EngineFault,
+    EngineTimeout,
+    ServingEngine,
+)
+from repro.core.faults import (
+    FaultPlan,
+    FaultReport,
+    InjectedCrash,
+    InjectedReadError,
+)
+from repro.core.fsck import fsck_store, repair_store
+from repro.core.query import topk_search
+from repro.core.store import (
+    BlockCorrupt,
+    BlockError,
+    BlockUnavailable,
+    MANIFEST_NAME,
+    ManifestError,
+    Prefetcher,
+    ReadPolicy,
+    open_store,
+    save_store,
+)
+
+try:
+    import hypothesis  # noqa: F401
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+# fast backoff so retry-heavy tests don't sleep their way through CI
+_FAST = ReadPolicy(backoff_s=1e-4, backoff_cap_s=1e-3)
+
+
+def _damage_block_file(store, block, byte=200):
+    """Flip one payload byte of ``block``'s first file on disk."""
+    entry = store.manifest["blocks"][block]
+    fname = sorted(entry["files"].values())[0]
+    full = os.path.join(store.path, fname)
+    raw = bytearray(open(full, "rb").read())
+    raw[byte] ^= 0xFF
+    with open(full, "wb") as f:
+        f.write(bytes(raw))
+    return full
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded, deterministic, counted
+# ---------------------------------------------------------------------------
+
+def _schedule(plan, blocks=8, attempts=4):
+    out = []
+    for b in range(blocks):
+        for a in range(attempts):
+            try:
+                plan.on_read(b, a)
+            except InjectedReadError:
+                out.append((b, a))
+    return out
+
+
+def test_fault_plan_deterministic_and_counted():
+    s1 = _schedule(FaultPlan(seed=7, transient_rate=0.3))
+    s2 = _schedule(FaultPlan(seed=7, transient_rate=0.3))
+    assert s1 == s2 and s1, "same seed must replay the same fault schedule"
+    assert s1 != _schedule(FaultPlan(seed=8, transient_rate=0.3))
+    p = FaultPlan(seed=7, transient_rate=0.3)
+    assert _schedule(p) == s1
+    assert p.stats["transient_injected"] == len(s1)
+
+    # directed transient faults: exactly the first N attempts of the block
+    p = FaultPlan(transient_blocks=[2], transient_attempts=2)
+    assert _schedule(p) == [(2, 0), (2, 1)]
+
+    # persistent faults: every attempt, typed with persistent=True
+    p = FaultPlan(persistent_blocks=[1])
+    with pytest.raises(InjectedReadError) as ei:
+        p.on_read(1, 5)
+    assert ei.value.persistent and ei.value.retryable
+    p.on_read(0, 0)  # other blocks untouched
+
+
+def test_fault_plan_corrupt_bytes_deterministic():
+    raw = bytes(range(256)) * 4
+    p1 = FaultPlan(seed=3, corrupt_blocks=(0,))
+    p2 = FaultPlan(seed=3, corrupt_blocks=(0,))
+    out = p1.corrupt_bytes(0, "x", raw)
+    assert out == p2.corrupt_bytes(0, "x", raw) and out != raw
+    assert out[:129] == raw[:129], "flip must land past the .npy header"
+    assert p1.corrupt_bytes(1, "x", raw) == raw  # non-corrupt block untouched
+    assert p1.stats["corruptions_injected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# hardened reads: retry / quarantine / verify
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_retried_bit_identical(tmp_path):
+    case = store_case(tmp_path)
+    clean = open_store(case.path).read_block(1)
+    plan = FaultPlan(transient_blocks=[1], transient_attempts=2)
+    store = open_store(case.path, fault_plan=plan, read_policy=_FAST)
+    got = store.read_block(1)
+    for name in clean:
+        np.testing.assert_array_equal(got[name], clean[name])
+    cs = store.cache.stats
+    assert cs["read_retries"] == 2 and cs["read_errors"] == 2
+    assert cs["verify_failures"] == 0 and cs["quarantined"] == 0
+    assert plan.stats["transient_injected"] == 2
+    assert not store.quarantined
+
+
+def test_persistent_fault_quarantines_and_fails_fast(tmp_path):
+    case = store_case(tmp_path)
+    plan = FaultPlan(persistent_blocks=[1])
+    store = open_store(case.path, fault_plan=plan, read_policy=_FAST)
+    with pytest.raises(BlockUnavailable) as ei:
+        store.read_block(1)
+    assert "after 4 attempts" in str(ei.value)
+    cs = store.cache.stats
+    assert cs["read_errors"] == 4 and cs["read_retries"] == 3
+    assert cs["quarantined"] == 1
+    assert "InjectedReadError" in store.quarantined[1]
+    # second read fast-fails off the quarantine map: no new attempts
+    with pytest.raises(BlockUnavailable):
+        store.read_block(1)
+    assert store.cache.stats["read_errors"] == 4
+    assert plan.stats["persistent_injected"] == 4
+    # healthy blocks still serve
+    store.read_block(0)
+
+
+def test_corrupt_block_caught_by_digest_not_parser(tmp_path):
+    case = store_case(tmp_path)
+    clean = open_store(case.path).read_block(0)
+    plan = FaultPlan(corrupt_blocks=(0,))
+    store = open_store(case.path, fault_plan=plan, read_policy=_FAST)
+    with pytest.raises(BlockCorrupt):
+        store.read_block(0)
+    cs = store.cache.stats
+    assert cs["verify_failures"] == 4 and cs["quarantined"] == 1
+    # verify opt-out: the mangled payload still *parses* (flip is past the
+    # header) and silently returns different bytes — exactly the failure
+    # mode verification exists to catch
+    noverify = open_store(
+        case.path, fault_plan=FaultPlan(corrupt_blocks=(0,)),
+        read_policy=ReadPolicy(verify=False, backoff_s=1e-4),
+    )
+    got = noverify.read_block(0)
+    assert got["x"].shape == clean["x"].shape
+    assert got["x"].tobytes() != clean["x"].tobytes()
+
+
+def test_take_rows_masked_survives_unreadable_blocks(tmp_path):
+    case = store_case(tmp_path)
+    store = open_store(
+        case.path, fault_plan=FaultPlan(persistent_blocks=[1]),
+        read_policy=_FAST,
+    )
+    rows = np.arange(store.n_docs)
+    got, ok = store.take_rows_masked(rows)
+    lo, hi = store.block_rows(1)
+    expect_ok = np.ones(store.n_docs, bool)
+    expect_ok[lo:hi] = False
+    np.testing.assert_array_equal(ok, expect_ok)
+    assert not got["x"][lo:hi].any(), "masked rows are zero-filled"
+    clean = open_store(case.path).take_rows(rows)
+    np.testing.assert_array_equal(got["x"][ok], clean["x"][ok])
+    # out-of-range ids still raise — only fault outcomes are maskable
+    with pytest.raises(IndexError):
+        store.take_rows_masked(np.array([store.n_docs]))
+
+
+def test_iter_blocks_degrade_skips_unreadable(tmp_path):
+    case = store_case(tmp_path)
+    clean = {
+        lo: arrays["x"].copy()
+        for lo, hi, arrays in open_store(case.path).iter_blocks()
+    }
+    for prefetch in (0, 2):
+        store = open_store(
+            case.path, fault_plan=FaultPlan(persistent_blocks=[2]),
+            read_policy=_FAST,
+        )
+        seen = list(store.iter_blocks(prefetch=prefetch, on_fault="degrade"))
+        lo2, _ = store.block_rows(2)
+        assert [lo for lo, _, _ in seen] == sorted(set(clean) - {lo2})
+        for lo, _, arrays in seen:
+            np.testing.assert_array_equal(arrays["x"], clean[lo])
+        # default raise mode propagates the typed error
+        store2 = open_store(
+            case.path, fault_plan=FaultPlan(persistent_blocks=[2]),
+            read_policy=_FAST,
+        )
+        with pytest.raises(BlockUnavailable):
+            list(store2.iter_blocks(prefetch=prefetch))
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher: reader-thread restart
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_restarts_on_transient_reader_fault():
+    calls = []
+
+    def fetch(i):
+        calls.append(i)
+        if i == 2 and calls.count(2) == 1:
+            raise RuntimeError("transient reader fault")
+        return i * 10
+
+    with Prefetcher(range(5), fetch, depth=2) as pf:
+        got = list(pf)
+    assert got == [(i, i * 10) for i in range(5)], "order preserved"
+    assert pf.restarts == 1
+
+
+def test_prefetcher_propagates_typed_verdicts_and_exhausted_budget():
+    # BlockError verdicts carry retryable=False: no restart, immediate raise
+    def fetch_verdict(i):
+        raise BlockUnavailable("p", i, "quarantined")
+
+    with Prefetcher(range(3), fetch_verdict) as pf:
+        with pytest.raises(BlockUnavailable):
+            list(pf)
+    assert pf.restarts == 0
+
+    # a fault on every incarnation exhausts max_restarts, then propagates
+    def fetch_always(i):
+        raise RuntimeError("reader keeps dying")
+
+    with Prefetcher(range(3), fetch_always, max_restarts=2) as pf:
+        with pytest.raises(RuntimeError):
+            list(pf)
+    assert pf.restarts == 2
+
+
+# ---------------------------------------------------------------------------
+# degraded answers: drop exactly the damage, keep everything else bit-exact
+# ---------------------------------------------------------------------------
+
+def test_topk_search_degrade_drops_only_faulted_query_rows(tmp_path):
+    case = store_case(tmp_path)
+    clean = open_store(case.path)
+    d_ref, s_ref = topk_search(case.tree, clean, k=6, beam=3)
+    store = open_store(
+        case.path, fault_plan=FaultPlan(persistent_blocks=[1]),
+        read_policy=_FAST,
+    )
+    docs, dist, rep = topk_search(case.tree, store, k=6, beam=3,
+                                  on_fault="degrade")
+    assert isinstance(rep, FaultReport) and rep.degraded
+    lo, hi = store.block_rows(1)
+    assert set(rep.dropped_query_rows) == set(range(lo, hi))
+    assert rep.quarantined_blocks == (1,)
+    mask = np.ones(store.n_docs, bool)
+    mask[lo:hi] = False
+    np.testing.assert_array_equal(docs[mask], d_ref[mask])
+    np.testing.assert_array_equal(dist[mask], s_ref[mask])
+    assert (docs[~mask] == -1).all() and np.isinf(dist[~mask]).all()
+
+    # fault-free degrade mode: bit-identical + un-degraded report
+    docs2, dist2, rep2 = topk_search(case.tree, clean, k=6, beam=3,
+                                     on_fault="degrade")
+    assert not rep2.degraded
+    np.testing.assert_array_equal(docs2, d_ref)
+    np.testing.assert_array_equal(dist2, s_ref)
+
+
+def test_acceptance_chaos_sweep_store_backed(tmp_path):
+    """ISSUE acceptance criterion: 10% transient read faults + 1 persistently
+    corrupt block → surviving answers bit-identical, damage correctly
+    flagged, zero silent wrong answers."""
+    case = store_case(tmp_path, seed=9)
+    clean = open_store(case.path)
+    d_ref, s_ref = topk_search(case.tree, clean, k=6, beam=3)
+    bad = clean.n_blocks - 1
+    plan = FaultPlan(seed=42, transient_rate=0.10, corrupt_blocks=(bad,))
+    store = open_store(case.path, fault_plan=plan, read_policy=_FAST)
+    docs, dist, rep = topk_search(case.tree, store, k=6, beam=3,
+                                  on_fault="degrade")
+    lo, hi = store.block_rows(bad)
+    assert rep.degraded
+    assert set(rep.dropped_query_rows) == set(range(lo, hi))
+    mask = np.ones(clean.n_docs, bool)
+    mask[lo:hi] = False
+    np.testing.assert_array_equal(docs[mask], d_ref[mask])
+    np.testing.assert_array_equal(dist[mask], s_ref[mask])
+    assert (docs[~mask] == -1).all()
+    cs = store.cache.stats
+    assert cs["verify_failures"] > 0, "corruption must be caught by digest"
+    assert cs["quarantined"] == 1
+    assert plan.stats["corruptions_injected"] > 0
+    # the transient layer actually fired and was outlasted by retries
+    assert plan.stats["transient_injected"] > 0
+    assert cs["read_retries"] >= plan.stats["transient_injected"] - 4
+
+
+# ---------------------------------------------------------------------------
+# fsck: detect, repair, lineage
+# ---------------------------------------------------------------------------
+
+def test_fsck_detect_repair_idempotent_lineage(tmp_path):
+    case = store_case(tmp_path, seed=5)
+    clean = open_store(case.path)
+    h0 = clean.manifest_hash
+    rows = np.arange(clean.n_docs)
+    ref = clean.take_rows(rows)
+    d_ref, s_ref = topk_search(case.tree, clean, k=6, beam=3)
+    assert fsck_store(case.path).clean
+
+    damaged_file = _damage_block_file(clean, 1)
+    rep = fsck_store(case.path)
+    assert not rep.clean
+    assert [i for i, _ in rep.damaged] == [1]
+    assert "digest mismatch" in rep.damaged[0][1]
+    assert any("DAMAGED" in line for line in rep.lines())
+    # scan-only: nothing moved, nothing rewritten
+    assert os.path.exists(damaged_file)
+    assert rep.manifest_hash_before == rep.manifest_hash_after == h0
+
+    rep2 = repair_store(case.path)
+    assert rep2.repaired == (1,)
+    assert rep2.manifest_hash_before == h0
+    assert rep2.manifest_hash_after != h0
+    assert not os.path.exists(damaged_file), "damaged file moved aside"
+    assert os.path.exists(damaged_file + ".damaged"), "evidence kept"
+
+    # repaired store: verify=True passes (tombstones carry no files),
+    # excised block pre-quarantined, lineage names the pre-repair hash
+    post = open_store(case.path, verify=True)
+    assert post.manifest["fsck_lineage"] == [h0]
+    assert post.manifest_hash == rep2.manifest_hash_after
+    assert 1 in post.quarantined and "excised by store_fsck" in post.quarantined[1]
+    with pytest.raises(BlockUnavailable):
+        post.read_block(1)
+    assert fsck_store(case.path).clean
+
+    # idempotent: a second repair pass finds nothing to do
+    rep3 = repair_store(case.path)
+    assert rep3.clean and rep3.repaired == ()
+    assert rep3.manifest_hash_before == rep3.manifest_hash_after
+
+    # degraded serving off the repaired store: survivors bit-identical
+    docs, dist, drep = topk_search(case.tree, post, k=6, beam=3,
+                                   on_fault="degrade")
+    lo, hi = post.block_rows(1)
+    assert set(drep.dropped_query_rows) == set(range(lo, hi))
+    mask = np.ones(post.n_docs, bool)
+    mask[lo:hi] = False
+    np.testing.assert_array_equal(docs[mask], d_ref[mask])
+    np.testing.assert_array_equal(dist[mask], s_ref[mask])
+    got, ok = post.take_rows_masked(rows)
+    np.testing.assert_array_equal(got["x"][ok], ref["x"][ok])
+
+
+def test_fsck_detects_missing_file(tmp_path):
+    case = store_case(tmp_path)
+    store = open_store(case.path)
+    fname = sorted(store.manifest["blocks"][0]["files"].values())[0]
+    os.remove(os.path.join(case.path, fname))
+    rep = fsck_store(case.path)
+    assert [i for i, _ in rep.damaged] == [0]
+    assert "missing file" in rep.damaged[0][1]
+    assert repair_store(case.path).repaired == (0,)
+    assert fsck_store(case.path).clean
+
+
+def test_restore_index_accepts_repaired_refuses_regenerated(tmp_path):
+    from repro.ckpt.checkpoint import restore_index, save_index
+
+    case = store_case(tmp_path, seed=6)
+    store = open_store(case.path)
+    ck = str(tmp_path / "idx")
+    save_index(ck, case.tree, store)
+
+    _damage_block_file(store, 0)
+    repair_store(case.path)
+    tree2, store2 = restore_index(ck)  # lineage: repaired != regenerated
+    assert_trees_equal(case.tree, tree2)
+    assert 0 in store2.quarantined
+
+    # a store regenerated in place shares no lineage — still refused
+    save_store(case.path,
+               corpus_data(random_corpus(np.random.default_rng(99)), False))
+    with pytest.raises(ValueError, match="rewritten in place"):
+        restore_index(ck)
+
+
+# ---------------------------------------------------------------------------
+# typed manifest/sidecar errors — corrupt metadata always names its file
+# ---------------------------------------------------------------------------
+
+def test_corrupt_store_manifest_is_typed(tmp_path):
+    case = store_case(tmp_path)
+    mpath = os.path.join(case.path, MANIFEST_NAME)
+    with open(mpath, "w") as f:
+        f.write('{"format": "ktree-store-v1", "n_docs": ')  # truncated
+    for op in (open_store, fsck_store):
+        with pytest.raises(ManifestError) as ei:
+            op(case.path)
+        assert ei.value.path == mpath
+        assert MANIFEST_NAME in str(ei.value)
+    # a parseable manifest of the wrong format is typed too
+    with open(mpath, "w") as f:
+        f.write('{"format": "something-else"}')
+    with pytest.raises(ManifestError, match="unknown store format"):
+        open_store(case.path)
+
+
+def test_corrupt_index_json_is_typed(tmp_path):
+    from repro.ckpt.checkpoint import INDEX_META_NAME, restore_index, save_index
+
+    case = store_case(tmp_path)
+    ck = str(tmp_path / "idx")
+    save_index(ck, case.tree, open_store(case.path))
+    meta = os.path.join(ck, INDEX_META_NAME)
+    with open(meta, "w") as f:
+        f.write("{broken")
+    with pytest.raises(ManifestError) as ei:
+        restore_index(ck)
+    assert ei.value.path == meta
+    # parseable but missing required fields is typed as well
+    with open(meta, "w") as f:
+        f.write('{"store_path": "somewhere"}')
+    with pytest.raises(ManifestError):
+        restore_index(ck)
+
+
+def test_corrupt_ckpt_msgpack_is_typed(tmp_path):
+    from repro.ckpt import checkpoint as ckpt
+
+    state = {"w": np.arange(6, dtype=np.float32)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, state, step=0)
+    mpath = os.path.join(d, "step_000000000", "MANIFEST.msgpack")
+    with open(mpath, "wb") as f:
+        f.write(b"\xc1\xc1\xc1")  # 0xc1 is never valid msgpack
+    with pytest.raises(ManifestError) as ei:
+        ckpt.restore(d, state)
+    assert ei.value.path == mpath
+
+
+def test_corpus_store_sidecar_lineage_and_typed_error(tmp_path):
+    from repro.data.pipeline import corpus_store
+    from repro.data.synth_corpus import INEX_LIKE, scaled
+
+    spec = scaled(INEX_LIKE, n_docs=80, culled=40)
+    path = str(tmp_path / "corpus")
+    corpus_store(spec, path, representation="dense", block_docs=32)
+    # clean reuse
+    assert corpus_store(spec, path, representation="dense",
+                        block_docs=32) == path
+    # fsck-repaired store is the same corpus minus damage: reuse via lineage
+    store = open_store(path)
+    _damage_block_file(store, 0)
+    repair_store(path)
+    assert corpus_store(spec, path, representation="dense",
+                        block_docs=32) == path
+    # corrupt sidecar → typed error naming PIPELINE.json, not a JSONDecodeError
+    sidecar = os.path.join(path, "PIPELINE.json")
+    with open(sidecar, "w") as f:
+        f.write("{truncated")
+    with pytest.raises(ManifestError) as ei:
+        corpus_store(spec, path, representation="dense", block_docs=32)
+    assert ei.value.path == sidecar
+
+
+# ---------------------------------------------------------------------------
+# crash-safety: exhaustive kill-point sweep over append / insert_into_store
+# ---------------------------------------------------------------------------
+
+def _grow(store, case, sparse, op):
+    new_rows = corpus_data(case.x[:30], sparse)  # layout-compatible rows
+    if op == "append":
+        store.append(new_rows)
+    else:
+        kt.insert_into_store(case.tree, store, new_rows)
+
+
+@pytest.mark.parametrize("sparse,op", [
+    (False, "append"), (True, "append"), (False, "insert"),
+])
+def test_kill_point_sweep_append_and_insert(tmp_path, sparse, op):
+    """Crash the writer before *every* write step: the pre-growth store must
+    stay openable, verifiable, fsck-clean, and bit-identical over the old
+    rows — the atomic-commit contract of DESIGN.md §9/§10."""
+    case = store_case(tmp_path, sparse=sparse, seed=3 if sparse else 4)
+    n0 = open_store(case.path).n_docs
+    pristine = open_store(case.path).take_rows(np.arange(n0))
+
+    # probe run: count the write steps + build the completed-growth reference
+    probe = str(tmp_path / "probe")
+    shutil.copytree(case.path, probe)
+    probe_plan = FaultPlan()
+    _grow(open_store(probe, fault_plan=probe_plan), case, sparse, op)
+    n_steps = probe_plan.stats["writes_seen"]
+    assert n_steps >= 4, "expect tail merge + manifest tmp/replace + commit"
+    ref_store = open_store(probe)
+    n1 = ref_store.n_docs
+    assert n1 == n0 + 30
+    ref_rows = ref_store.take_rows(np.arange(n1))
+
+    for kill in range(n_steps):
+        work = str(tmp_path / f"kill{kill}")
+        shutil.copytree(case.path, work)
+        store = open_store(work, fault_plan=FaultPlan(kill_after_writes=kill))
+        with pytest.raises(InjectedCrash):
+            _grow(store, case, sparse, op)
+        post = open_store(work, verify=True)  # every surviving block verifies
+        assert post.n_docs in (n0, n1), \
+            f"kill point {kill} left a half-committed doc count"
+        assert fsck_store(work).clean
+        old = post.take_rows(np.arange(n0))
+        for name in pristine:
+            np.testing.assert_array_equal(
+                old[name], pristine[name],
+                err_msg=f"kill point {kill} corrupted pre-growth rows",
+            )
+        if post.n_docs == n1:  # crash after commit: full growth visible
+            grown = post.take_rows(np.arange(n1))
+            for name in ref_rows:
+                np.testing.assert_array_equal(grown[name], ref_rows[name])
+    # and with no kill point the same plan machinery stays out of the way
+    final = str(tmp_path / "nokill")
+    shutil.copytree(case.path, final)
+    _grow(open_store(final, fault_plan=FaultPlan(kill_after_writes=n_steps)),
+          case, sparse, op)
+    assert open_store(final).n_docs == n1
+
+
+@pytest.mark.skipif(
+    not _HAVE_HYPOTHESIS,
+    reason="hypothesis not installed; the exhaustive sweep above covers "
+           "every kill point deterministically",
+)
+def test_kill_point_property_randomised():
+    import tempfile
+
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(kill=st.integers(min_value=0, max_value=40),
+           sparse=st.booleans())
+    def run(kill, sparse):
+        with tempfile.TemporaryDirectory() as td:
+            case = store_case(td, sparse=sparse, seed=3 if sparse else 4)
+            n0 = open_store(case.path).n_docs
+            pristine = open_store(case.path).take_rows(np.arange(n0))
+            store = open_store(
+                case.path, fault_plan=FaultPlan(kill_after_writes=kill)
+            )
+            try:
+                _grow(store, case, sparse, "append")
+            except InjectedCrash:
+                pass
+            post = open_store(case.path, verify=True)
+            assert post.n_docs in (n0, n0 + 30)
+            assert fsck_store(case.path).clean
+            old = post.take_rows(np.arange(n0))
+            for name in pristine:
+                np.testing.assert_array_equal(old[name], pristine[name])
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# serving engine: timeouts, watchdog, closed-engine semantics
+# ---------------------------------------------------------------------------
+
+def _fake_answer(x, k):
+    return (np.zeros((x.shape[0], k), np.int32),
+            np.zeros((x.shape[0], k), np.float32))
+
+
+def test_result_timeout_is_typed_and_non_destructive():
+    release = threading.Event()
+
+    def wedged(x, k, beam):
+        release.wait(30)
+        return _fake_answer(x, k)
+
+    eng = ServingEngine(wedged, row_budget=4, max_queue=8, max_wait_s=0.0)
+    try:
+        h = eng.submit(np.zeros((1, 3), np.float32), k=2, beam=1)
+        with pytest.raises(EngineTimeout):
+            h.result(timeout=0.05)
+        assert isinstance(EngineTimeout("x"), TimeoutError)
+        # the caller-side timeout did not consume the request
+        release.set()
+        docs, dist = h.result(timeout=10)
+        assert docs.shape == (1, 2)
+        st = eng.stats()
+        assert st["completed"] == 1 and st["timeouts"] == 0
+    finally:
+        release.set()
+        eng.close()
+
+
+def test_watchdog_expires_wedged_inflight_request():
+    release = threading.Event()
+
+    def wedged(x, k, beam):
+        release.wait(30)
+        return _fake_answer(x, k)
+
+    eng = ServingEngine(wedged, row_budget=4, max_queue=8, max_wait_s=0.0,
+                        request_timeout_s=0.05)
+    try:
+        h = eng.submit(np.zeros((1, 3), np.float32), k=2, beam=1)
+        with pytest.raises(EngineTimeout, match="watchdog"):
+            h.result(timeout=5)
+        st = eng.stats()
+        assert st["timeouts"] == 1 and st["failed"] == 1
+        # set-once resolution: the late answer after release is discarded
+        release.set()
+        time.sleep(0.1)
+        assert eng.stats()["completed"] == 0
+    finally:
+        release.set()
+        eng.close()
+
+
+def test_close_drain_false_fails_queued_and_inflight():
+    release = threading.Event()
+
+    def wedged(x, k, beam):
+        release.wait(30)
+        return _fake_answer(x, k)
+
+    eng = ServingEngine(wedged, row_budget=1, max_queue=8, max_wait_s=0.0)
+    h1 = eng.submit(np.zeros((1, 3), np.float32), k=2, beam=1)
+    time.sleep(0.05)  # let h1 become the in-flight batch
+    h2 = eng.submit(np.zeros((1, 3), np.float32), k=2, beam=1)
+    eng.close(drain=False)
+    for h in (h1, h2):
+        with pytest.raises(EngineClosed):
+            h.result(timeout=5)
+    assert eng.stats()["failed"] == 2
+    with pytest.raises(EngineClosed):
+        eng.submit(np.zeros((1, 3), np.float32))
+    release.set()
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning"
+)  # the injected SystemExit below is the point of the test
+def test_watchdog_restarts_dead_dispatcher():
+    def ok_fn(x, k, beam):
+        return _fake_answer(x, k)
+
+    eng = ServingEngine(ok_fn, row_budget=4, max_queue=8, max_wait_s=0.0)
+    # _execute survives any search-fn exception (it resolves the batch with
+    # the typed error), so a dispatcher *death* has to be injected above it
+    orig = eng._execute
+    armed = [True]
+
+    def dying_execute(batch):
+        if armed[0]:
+            armed[0] = False
+            raise SystemExit("injected dispatcher death")
+        return orig(batch)
+
+    eng._execute = dying_execute
+    try:
+        h = eng.submit(np.zeros((1, 3), np.float32), k=2, beam=1)
+        with pytest.raises(EngineFault, match="dispatcher thread died"):
+            h.result(timeout=5)
+        # the replacement dispatcher keeps serving
+        h2 = eng.submit(np.zeros((1, 3), np.float32), k=2, beam=1)
+        docs, dist = h2.result(timeout=5)
+        assert docs.shape == (1, 2)
+        st = eng.stats()
+        assert st["watchdog_restarts"] == 1
+        assert st["failed"] == 1 and st["completed"] == 1
+    finally:
+        eng.close()
+
+
+def test_search_fn_exception_fails_batch_without_killing_dispatcher(tmp_path):
+    case = store_case(tmp_path)
+    store = open_store(
+        case.path, fault_plan=FaultPlan(persistent_blocks=[0]),
+        read_policy=_FAST,
+    )
+
+    def faulting_fn(x, k, beam):
+        store.read_block(0)  # typed BlockUnavailable after retries
+        return _fake_answer(x, k)
+
+    eng = ServingEngine(faulting_fn, row_budget=4, max_queue=8, max_wait_s=0.0)
+    try:
+        h = eng.submit(np.zeros((1, 3), np.float32), k=2, beam=1)
+        with pytest.raises(BlockUnavailable):
+            h.result(timeout=5)
+        st = eng.stats()
+        assert st["failed"] == 1 and st["watchdog_restarts"] == 0
+    finally:
+        eng.close()
+
+
+def test_degraded_answers_flagged_on_handle():
+    rep = FaultReport(degraded=True, quarantined_blocks=(2,))
+
+    def degfn(x, k, beam):
+        return _fake_answer(x, k) + (rep,)
+
+    degfn.on_fault = "degrade"
+    with ServingEngine(degfn, row_budget=4, max_queue=8,
+                       max_wait_s=0.0) as eng:
+        h = eng.submit(np.zeros((2, 3), np.float32), k=3, beam=1)
+        docs, dist = h.result(timeout=5)
+        assert docs.shape == (2, 3)
+        assert h.degraded and h.report is rep
+        assert eng.stats()["degraded"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sharded corpus degrade (forced multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+_TESTS = os.path.dirname(os.path.abspath(__file__))
+
+_SHARDED_DEGRADE_SCRIPT = textwrap.dedent("""
+    import json, os, shutil, sys, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(0, {src!r})
+    sys.path.insert(0, {tests!r})
+    import numpy as np
+    import jax
+    from fixtures import store_case
+    from repro.core.faults import FaultPlan
+    from repro.core.fsck import repair_store
+    from repro.core.query import topk_search_sharded
+    from repro.core.store import ReadPolicy, open_store
+
+    out = {{}}
+    mesh = jax.make_mesh((8,), ("data",))
+    fast = ReadPolicy(backoff_s=1e-4, backoff_cap_s=1e-3)
+    with tempfile.TemporaryDirectory() as td:
+        case = store_case(td)
+        q = case.x[32:96].astype(np.float32)  # rows spanning blocks 0 and 1
+        clean = open_store(case.path)
+        d_ref, s_ref = topk_search_sharded(
+            mesh, case.tree, q, corpus=clean, k=6, beam=3)
+        lo, hi = clean.block_rows(1)
+
+        # leg A: block 1 quarantined at runtime by injected persistent faults
+        fa = open_store(case.path, fault_plan=FaultPlan(persistent_blocks=[1]),
+                        read_policy=fast)
+        d_a, s_a, rep_a = topk_search_sharded(
+            mesh, case.tree, q, corpus=fa, k=6, beam=3, on_fault="degrade")
+
+        # leg B: the same block excised on disk by store_fsck
+        dst = os.path.join(td, "copy")
+        shutil.copytree(case.path, dst)
+        fname = sorted(clean.manifest["blocks"][1]["files"].values())[0]
+        full = os.path.join(dst, fname)
+        raw = bytearray(open(full, "rb").read())
+        raw[200] ^= 0xFF
+        open(full, "wb").write(bytes(raw))
+        repair_store(dst)
+        d_b, s_b, rep_b = topk_search_sharded(
+            mesh, case.tree, q, corpus=open_store(dst, read_policy=fast),
+            k=6, beam=3, on_fault="degrade")
+
+        out["degraded"] = bool(rep_a.degraded and rep_b.degraded)
+        out["quarantined"] = [sorted(rep_a.quarantined_blocks),
+                              sorted(rep_b.quarantined_blocks)]
+        out["cross_pin"] = bool((d_a == d_b).all()
+                                and (np.asarray(s_a) == np.asarray(s_b)).all())
+        out["no_quarantined_ids"] = bool(not ((d_a >= lo) & (d_a < hi)).any())
+        out["answers_differ_from_clean"] = bool((d_a != d_ref).any())
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_degrade_cross_pins_quarantine_and_fsck_excision():
+    """A runtime-quarantined block and the same block fsck-excised on disk
+    must produce bit-identical degraded sharded answers (same surviving
+    subset → same reference search)."""
+    import json
+
+    script = _SHARDED_DEGRADE_SCRIPT.format(src=_SRC, tests=_TESTS)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["degraded"], "block 1 candidates must have been dropped"
+    assert out["quarantined"] == [[1], [1]]
+    assert out["cross_pin"], "quarantine vs fsck excision must answer alike"
+    assert out["no_quarantined_ids"]
+    assert out["answers_differ_from_clean"], (
+        "queries from block 1 must lose their exact-match doc"
+    )

@@ -6,8 +6,9 @@ Two checks, both importable and runnable as a script:
    method/property of a public class) in the covered modules must carry a
    docstring. Covered modules: ``repro.core.query``, ``repro.core.backend``,
    ``repro.ckpt.checkpoint`` (the public query/persistence API surface),
-   ``repro.core.store`` (out-of-core PR), plus ``repro.core.engine`` and
-   ``repro.launch.engine`` (serving-engine PR).
+   ``repro.core.store`` (out-of-core PR), ``repro.core.engine`` and
+   ``repro.launch.engine`` (serving-engine PR), plus ``repro.core.faults``
+   and ``repro.core.fsck`` (fault-injection/robustness PR).
 2. :func:`broken_links` — every relative markdown link/image in the repo's
    top-level docs must point at an existing file (http(s)/mailto links and
    pure #anchors are skipped).
@@ -31,6 +32,8 @@ COVERED_MODULES = (
     "repro.core.backend",
     "repro.core.store",
     "repro.core.engine",
+    "repro.core.faults",
+    "repro.core.fsck",
     "repro.launch.engine",
     "repro.ckpt.checkpoint",
 )

@@ -1,0 +1,55 @@
+"""Offline corpus-store verify/repair CLI (DESIGN.md §10).
+
+Usage::
+
+    python tools/store_fsck.py PATH             # scan-only: verify digests
+    python tools/store_fsck.py PATH --repair    # excise damaged blocks
+    python tools/store_fsck.py PATH --json      # machine-readable report
+
+Exit status: 0 when the store is clean (or a repair left it clean), 1 when
+damage was found and ``--repair`` was not given. The heavy lifting lives in
+:mod:`repro.core.fsck` (importable for tests and ``serve.py --fsck``); this
+file is the thin argv wrapper.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(_ROOT, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.core.fsck import fsck_store, repair_store  # noqa: E402
+
+
+def main(argv=None) -> int:
+    """Parse args, run the fsck pass, print the report; returns exit status."""
+    ap = argparse.ArgumentParser(
+        description="Verify (and optionally repair) an on-disk corpus store."
+    )
+    ap.add_argument("path", help="store directory (contains manifest.json)")
+    ap.add_argument(
+        "--repair", action="store_true",
+        help="excise damaged blocks (tombstone manifest entries, move the "
+             "files aside as <name>.damaged) and rewrite the manifest",
+    )
+    ap.add_argument(
+        "--json", action="store_true",
+        help="print the report as one JSON object instead of text lines",
+    )
+    args = ap.parse_args(argv)
+    report = repair_store(args.path) if args.repair else fsck_store(args.path)
+    if args.json:
+        print(json.dumps(dataclasses.asdict(report)))
+    else:
+        for line in report.lines():
+            print(line)
+    return 0 if (report.clean or report.repaired) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
