@@ -1,0 +1,144 @@
+"""Random Indexing bench: recall@k vs projection dim (DESIGN.md §5.1).
+
+The Random Indexing K-tree (PAPERS.md, arxiv 1001.0833) routes in an rp_dim-
+dimensional seeded random projection and exact-rescores the leaf candidate
+pool from the original rows, so recall@k is governed entirely by *routing*
+quality — it must grow with rp_dim (Johnson–Lindenstrauss: higher dims
+preserve more of the distance ordering) and reach the exact path at the
+identity-scale anchor rp_dim = d (kind="identity"), which reproduces the
+plain dense tree bit-for-bit. The sweep pins both trends, plus build time
+and per-query latency per dim.
+
+Results land in ``BENCH_ri.json`` (``--json``) so CI archives the recall
+trajectory per commit.
+
+Run:  PYTHONPATH=src python benchmarks/ri_recall.py [--smoke] \
+          [--json BENCH_ri.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def main(
+    n_docs: int = 3000,
+    culled: int = 800,
+    order: int = 16,
+    k: int = 10,
+    rp_dims=(32, 64, 128, 256),
+    beam: int = 4,
+    n_queries: int = 256,
+    seed: int = 0,
+    json_path: str | None = None,
+):
+    """Run the rp_dim sweep; returns ``(name, us_per_call, derived)`` rows."""
+    from repro.core import ktree as kt
+    from repro.core.backend import (
+        RandomProjBackend, make_backend, make_projection,
+    )
+    from repro.core.query import brute_force_topk, recall_at_k, topk_search
+    from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
+    from repro.sparse.csr import csr_to_dense
+
+    spec = scaled(INEX_LIKE, n_docs=n_docs, culled=culled)
+    m, _ = prepared_corpus(spec, seed=seed)
+    x_all = np.asarray(csr_to_dense(m))
+    d = x_all.shape[1]
+    base = make_backend(m, "sparse")
+    nq = min(n_queries, n_docs)
+    x_q = x_all[:nq]
+    true_k = brute_force_topk(x_q, x_all, k)
+
+    # exact-path reference: plain dense routing, no projection
+    dense_tree = kt.build(make_backend(m, "dense"), order=order,
+                          key=jax.random.PRNGKey(seed))
+    docs_exact, _ = topk_search(dense_tree, jnp.asarray(x_q), k=k, beam=beam)
+    recall_exact = recall_at_k(docs_exact, true_k)
+    rows = [(
+        "ri_exact_path", 0.0,
+        f"docs={n_docs} d={d} order={order} recall@{k}={recall_exact:.3f}",
+    )]
+    blob = {
+        "n_docs": n_docs, "d": d, "order": order, "k": k, "beam": beam,
+        "recall_exact": recall_exact, "dims": {},
+    }
+
+    # identity-scale anchor + the rp_dim sweep; dims > d carry no extra
+    # information on this corpus and are skipped with a note (no silent caps)
+    sweep = [("identity", d)] + [("gaussian", rd) for rd in rp_dims if rd < d]
+    for rd in rp_dims:
+        if rd >= d:
+            rows.append((f"ri_dim{rd}_skipped", 0.0,
+                         f"rp_dim={rd} >= corpus d={d}; identity anchor "
+                         "covers the exact-scale point"))
+    prev = -1.0
+    for kind, rd in sweep:
+        proj = make_projection(d, rd, seed=seed, kind=kind)
+        rpb = RandomProjBackend.wrap(base, proj)
+        t0 = time.perf_counter()
+        tree = kt.build(rpb, order=order, key=jax.random.PRNGKey(seed))
+        t_build = time.perf_counter() - t0
+        topk_search(tree, x_q, k=k, beam=beam, rp=rpb)  # warm the jit cache
+        t0 = time.perf_counter()
+        docs, _ = topk_search(tree, x_q, k=k, beam=beam, rp=rpb)
+        dt = time.perf_counter() - t0
+        rec = recall_at_k(docs, true_k)
+        tag = f"ri_{kind}" if kind == "identity" else f"ri_dim{rd}"
+        extra = (
+            f"rp_dim={rd} recall@{k}={rec:.3f} qps={nq/max(dt,1e-9):.0f} "
+            f"build_s={t_build:.2f}"
+        )
+        if kind == "identity":
+            # the equivalence anchor: identity projection must reproduce the
+            # exact path's answers, not just its recall
+            ids_match = bool((np.asarray(docs) == np.asarray(docs_exact)).all())
+            extra += f" ids_match_exact={ids_match}"
+            if not ids_match:
+                extra += " REGRESSION"
+        else:
+            trend = "+" if rec >= prev - 0.02 else "REGRESSION"
+            prev = rec
+            extra += f" trend={trend}"
+        rows.append((tag, dt / nq * 1e6, extra))
+        blob["dims"][str(rd)] = {
+            "kind": kind, "recall": rec, "qps": nq / max(dt, 1e-9),
+            "build_s": t_build,
+        }
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+        rows.append(("ri_bench_json", 0.0, f"wrote {json_path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=3000)
+    ap.add_argument("--culled", type=int, default=800)
+    ap.add_argument("--order", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=4)
+    ap.add_argument("--dims", type=int, nargs="+", default=[32, 64, 128, 256])
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--json", default="", help="write BENCH_ri.json here")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run: tiny corpus, two projection dims",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.docs, args.culled, args.order = 400, 200, 8
+        args.dims, args.queries = [16, 64], 96
+    for name, us, extra in main(
+        n_docs=args.docs, culled=args.culled, order=args.order, k=args.k,
+        rp_dims=tuple(args.dims), beam=args.beam, n_queries=args.queries,
+        json_path=args.json or None,
+    ):
+        print(f"{name},{us:.1f},{extra}")

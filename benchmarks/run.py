@@ -6,6 +6,7 @@ One section per paper table/figure + the system benches:
   sparse_dense  — §1 storage/speed observation
   scaling       — complexity claim (build time vs n)
   query_recall  — beam-search recall@k vs brute force + QPS (DESIGN.md §7)
+  ri_recall     — Random Indexing routing: recall@k vs projection dim (§5.1)
   query_throughput — serving QPS/latency: chunk × pipeline × shards + cache
   serving       — continuous-batching engine: open-loop arrival-rate sweep
   oocore        — out-of-core store: build/query under a residency budget
@@ -74,6 +75,16 @@ def main() -> None:
             if args.smoke else {}
         )
         for name, us, extra in query_recall.main(**qr_kwargs):
+            print(f"{name},{us:.1f},{extra}", flush=True)
+
+    if "ri" not in args.skip:
+        print("\n== ri_recall (Random Indexing routing, DESIGN.md §5.1) ==", flush=True)
+        from benchmarks import ri_recall
+        ri_kwargs = (
+            dict(n_docs=400, culled=200, order=8, rp_dims=(16, 64), n_queries=96)
+            if args.smoke else {}
+        )
+        for name, us, extra in ri_recall.main(**ri_kwargs):
             print(f"{name},{us:.1f},{extra}", flush=True)
 
     if "throughput" not in args.skip:

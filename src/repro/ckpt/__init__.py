@@ -15,10 +15,10 @@
 """
 from repro.ckpt.checkpoint import (
     save, restore, latest_step, save_ktree, restore_ktree,
-    save_index, restore_index,
+    load_ktree_projection, save_index, restore_index,
 )
 
 __all__ = [
     "save", "restore", "latest_step", "save_ktree", "restore_ktree",
-    "save_index", "restore_index",
+    "load_ktree_projection", "save_index", "restore_index",
 ]

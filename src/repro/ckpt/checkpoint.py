@@ -99,14 +99,20 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None, shardings: Any
 
 # --- K-tree persistence (paper: "efficient disk based implementations") -----
 
-def save_ktree(path: str, tree) -> str:
+def save_ktree(path: str, tree, projection=None) -> str:
     """Atomic single-file K-tree snapshot (tmp + rename, like :func:`save`).
 
     Extended dtypes (bfloat16 & friends) are not understood by the .npy
     format's descr — ``np.save`` silently writes them as opaque void bytes
     that ``jnp.asarray`` then rejects on load. Each field's true dtype is
     recorded in the meta blob and non-native float dtypes are stored upcast
-    to float32 (lossless); :func:`restore_ktree` casts back."""
+    to float32 (lossless); :func:`restore_ktree` casts back.
+
+    ``projection`` (a ``repro.core.backend.RandomProjection``) records the
+    random-projection *spec* — seed, dims, kind, dtype — in the meta blob.
+    The matrix itself is never written: jax's threefry PRNG is deterministic,
+    so the spec replays it bit-exactly (DESIGN.md §5.1). Read it back with
+    :func:`load_ktree_projection`."""
     import dataclasses
 
     final = path if path.endswith(".npz") else path + ".npz"
@@ -121,6 +127,8 @@ def save_ktree(path: str, tree) -> str:
             arr = arr.astype(np.float32)
         arrays[f.name] = arr
     meta = {"order": tree.order, "medoid": tree.medoid, "dtypes": dtypes}
+    if projection is not None:
+        meta["projection"] = projection.spec()
     tmp = final + ".tmp.npz"
     np.savez(tmp, **arrays, _meta=np.frombuffer(msgpack.packb(meta), dtype=np.uint8))
     os.replace(tmp, final)
@@ -144,12 +152,25 @@ def restore_ktree(path: str):
     return KTree(order=int(meta["order"]), medoid=bool(meta["medoid"]), **kwargs)
 
 
+def load_ktree_projection(path: str):
+    """Replay the ``RandomProjection`` recorded by
+    ``save_ktree(..., projection=...)`` (None when the snapshot was saved
+    without one). The matrix is rebuilt from the stored spec via
+    ``projection_from_spec`` — bit-identical to the one used at save time."""
+    from repro.core.backend import projection_from_spec
+
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    meta = msgpack.unpackb(data["_meta"].tobytes())
+    spec = meta.get("projection")
+    return None if spec is None else projection_from_spec(spec)
+
+
 # --- store-backed index persistence (DESIGN.md §9) ---------------------------
 
 INDEX_META_NAME = "INDEX.json"
 
 
-def save_index(path: str, tree, store) -> str:
+def save_index(path: str, tree, store, projection=None) -> str:
     """Checkpoint a store-backed index **by manifest reference**: the tree's
     array pages are snapshotted (``tree.npz``, via :func:`save_ktree`) next to
     a small JSON that records the corpus store's path and
@@ -165,7 +186,14 @@ def save_index(path: str, tree, store) -> str:
     stale doc ids). A store grown by ``ktree.insert_into_store`` rotates its
     ``manifest_hash`` the same way: re-checkpoint the grown (tree, store)
     pair afterwards — the pre-insert checkpoint correctly refuses to restore
-    against the extended corpus."""
+    against the extended corpus.
+
+    ``projection`` (a ``RandomProjection``) records the random-projection
+    spec in both the tree snapshot and ``INDEX.json`` for an RP-routed index
+    (tree built over ``RandomProjBackend.from_store``). Restore rebuilds the
+    matrix bit-exactly from the spec and refuses a caller-expected projection
+    that differs (``ProjectionMismatch``), the same contract as a rewritten
+    store."""
     import json
 
     from repro.core.store import _install_dir
@@ -174,21 +202,30 @@ def save_index(path: str, tree, store) -> str:
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    save_ktree(os.path.join(tmp, "tree"), tree)
+    save_ktree(os.path.join(tmp, "tree"), tree, projection=projection)
     ref = {
         "store_path": os.path.abspath(store.path),
         "manifest_hash": store.manifest_hash,
         "kind": store.kind,
         "n_docs": store.n_docs,
     }
+    if projection is not None:
+        ref["projection"] = projection.spec()
     with open(os.path.join(tmp, INDEX_META_NAME), "w") as f:
         json.dump(ref, f, indent=1, sort_keys=True)
     _install_dir(tmp, path)
     return path
 
 
-def restore_index(path: str, budget_bytes: Optional[int] = None, check: bool = True):
-    """Restore a :func:`save_index` checkpoint → ``(tree, store)``.
+def restore_index(
+    path: str,
+    budget_bytes: Optional[int] = None,
+    check: bool = True,
+    projection=None,
+):
+    """Restore a :func:`save_index` checkpoint → ``(tree, store)``, or
+    ``(tree, store, projection)`` when the checkpoint recorded a
+    random-projection spec (``save_index(..., projection=...)``).
 
     The store is re-opened from the recorded path with ``budget_bytes`` of
     block-cache residency (default: the store module's default budget).
@@ -203,7 +240,19 @@ def restore_index(path: str, budget_bytes: Optional[int] = None, check: bool = T
     doc ids still address the same rows and the pair restores (reads of the
     excised blocks fail typed / degrade, DESIGN.md §10). A corrupt or
     truncated ``INDEX.json`` raises a typed
-    ``repro.core.store.ManifestError`` naming the file."""
+    ``repro.core.store.ManifestError`` naming the file.
+
+    ``projection`` states the projection the caller *expects* (a
+    ``RandomProjection`` or a spec dict). A recorded projection that differs
+    from the expectation in any field — seed, dims, kind, dtype — raises
+    ``repro.core.backend.ProjectionMismatch``: routing a tree built under one
+    projection with a different matrix silently degrades every query, the
+    exact analogue of pairing a tree with a rewritten corpus. Expecting a
+    projection when none was recorded (or vice versa when the checkpoint
+    carries one and dims disagree with the tree/store) is refused the same
+    way. The returned projection's matrix is replayed bit-exactly from the
+    stored seed."""
+    from repro.core.backend import ProjectionMismatch, projection_from_spec
     from repro.core.store import (
         DEFAULT_BUDGET_BYTES, ManifestError, load_manifest, open_store,
     )
@@ -235,4 +284,28 @@ def restore_index(path: str, budget_bytes: Optional[int] = None, check: bool = T
                 "rewritten in place; rebuild the index (or pass check=False "
                 "to pair anyway)"
             )
-    return tree, store
+    expected = projection.spec() if hasattr(projection, "spec") else projection
+    recorded = ref.get("projection")
+    if recorded is None:
+        if expected is not None:
+            raise ProjectionMismatch(
+                f"index {path} records no random projection but the caller "
+                f"expects one ({expected}) — this checkpoint was built on the "
+                "exact (unprojected) path"
+            )
+        return tree, store
+    if expected is not None and dict(expected) != dict(recorded):
+        raise ProjectionMismatch(
+            f"index {path} records projection {recorded} but the caller "
+            f"expects {expected} — routing this tree under a different "
+            "projection silently degrades every query; rebuild the index"
+        )
+    proj = projection_from_spec(recorded)
+    if proj.out_dim != tree.dim or proj.in_dim != store.dim:
+        raise ProjectionMismatch(
+            f"index {path} records projection "
+            f"{proj.in_dim}→{proj.out_dim} but the restored tree has dim "
+            f"{tree.dim} and the store has dim {store.dim} — checkpoint and "
+            "corpus disagree; rebuild the index"
+        )
+    return tree, store, proj

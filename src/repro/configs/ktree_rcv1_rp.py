@@ -1,0 +1,33 @@
+"""Random Indexing K-tree config (PAPERS.md, arxiv 1001.0833) on the RCV1
+subset: documents stay sparse, the tree is built and routed in a 128-dim
+seeded random projection, and answers are exact-rescored from the original
+rows (DESIGN.md §5.1)."""
+from repro.configs.registry import ArchSpec, register
+from repro.data.synth_corpus import RCV1_LIKE
+
+CFG = {
+    "corpus": RCV1_LIKE,
+    "orders": (20, 35, 50, 80, 120),
+    "sample_fraction": 0.1,
+    "cluto_iters": 10,
+    # Random Indexing representation (repro.data.pipeline.corpus_backend):
+    # ELL base corpus wrapped in a RandomProjBackend — build/descent run in
+    # the rp_dim-dim projection, queries exact-rescore from the base rows
+    "representation": "rp",
+    "rp_dim": 128,
+    "rp_seed": 0,
+    "rp_kind": "gaussian",
+}
+
+register(ArchSpec(
+    name="ktree-rcv1-rp", family="paper", cfg=CFG,
+    shapes={
+        # the cluster step runs entirely in the projected space, so the
+        # abstract workload is the *dense* step at d = rp_dim (the whole
+        # point of RI: descent FLOPs scale with 128, not 8000 terms);
+        # n_docs padded 193844 -> 194048 (512-divisible) as in ktree-rcv1
+        "cluster_assign": {"kind": "cluster", "n_docs": 194048,
+                           "n_terms": 128, "k": 1024},
+    },
+    notes="Random Indexing K-tree (benchmarks/ri_recall.py)",
+))

@@ -37,7 +37,7 @@ _REGISTRY: Dict[str, ArchSpec] = {}
 _CONFIG_MODULES = [
     "qwen2_5_14b", "granite_20b", "phi3_mini", "grok1_314b", "dbrx_132b",
     "dimenet", "dlrm_mlperf", "wide_deep", "bst", "dien",
-    "ktree_inex", "ktree_rcv1",
+    "ktree_inex", "ktree_rcv1", "ktree_rcv1_rp",
 ]
 
 

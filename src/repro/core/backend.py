@@ -14,8 +14,14 @@ appends / node splits. That seam is a backend:
   for exact-length dense row gathers. Scoring against a flat centre set goes
   through the ``ell_spmm`` Pallas kernel; scoring against per-query gathered
   node centres uses an ``nnz``-sized column gather (compute ∝ nnz, not d).
+- :class:`RandomProjBackend` — the Random Indexing K-tree (PAPERS.md,
+  arxiv 1001.0833): a base corpus (dense or ELL) plus a seeded random
+  projection. Build, descent, and insert run entirely in the projected
+  space (``dim == rp_dim`` — small dense centres, ~order-of-magnitude fewer
+  descent FLOPs); the query engine rescores final candidates from the
+  *original* representation at full precision (``query.topk_search(rp=...)``).
 
-Both are registered dataclass pytrees, so they cross jit boundaries and the
+All are registered dataclass pytrees, so they cross jit boundaries and the
 jitted tree ops (`route`, `_insert_wave`) specialise per backend type.
 
 Distances everywhere drop the ‖x‖² constant: ``‖c‖² − 2·x·c`` has the same
@@ -25,7 +31,9 @@ argmin. ``row_sq`` supplies the constant back when a true distance is needed
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
+import functools
+import math
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -327,7 +335,296 @@ class EllSparseBackend:
         )
 
 
-VectorBackend = Union[DenseBackend, EllSparseBackend]
+# ---------------------------------------------------------------------------
+# random-projection backend (DESIGN.md §5.1): the Random Indexing K-tree.
+# The tree is built and routed in a low-dimensional dense projection of the
+# corpus while documents keep their original (possibly sparse, possibly
+# on-disk) representation; the query engine's final rescore stage goes back
+# to the original rows at full precision.
+# ---------------------------------------------------------------------------
+
+
+class ProjectionMismatch(ValueError):
+    """A restored index's recorded random projection does not match what the
+    caller (or the paired tree/store) expects — seed, dims, kind, or dtype
+    differ, or one side has a projection and the other does not. Raised
+    instead of silently serving answers routed through the wrong projection,
+    the same refusal discipline as a rewritten store's ``manifest_hash``."""
+
+
+PROJECT_CHUNK = 1024  # fixed projection granularity — see project_corpus
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RandomProjection:
+    """A seeded random projection ``f32[in_dim] → f32[out_dim]`` — the part of
+    an RP index that must replay exactly.
+
+    The matrix is a pure function of ``(seed, in_dim, out_dim, kind)`` via
+    jax's counter-based PRNG (:func:`make_projection`), so checkpoints persist
+    only the spec (plus the dtype, verified on restore) and rebuild the
+    matrix bit-identically; :meth:`spec` / ``checkpoint.restore_index`` carry
+    it. Kinds: ``"gaussian"`` (dense N(0, 1/out_dim) — the JL default),
+    ``"ternary"`` (sparse ±1 index vectors, the Random Indexing construction
+    of arxiv 1001.0833, density 1/8, variance-normalised), ``"identity"``
+    (requires ``out_dim == in_dim``; makes the RP pipeline reproduce the
+    dense exact path — the equivalence anchor the tests pin)."""
+
+    matrix: jax.Array  # f32[in_dim, out_dim]
+    seed: int = dataclasses.field(metadata=dict(static=True))
+    kind: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def in_dim(self) -> int:
+        """Original (document) dimensionality."""
+        return self.matrix.shape[0]
+
+    @property
+    def out_dim(self) -> int:
+        """Projected (routing) dimensionality — the tree's ``dim``."""
+        return self.matrix.shape[1]
+
+    @property
+    def dtype(self):
+        """Projection matrix dtype (always float32 today; recorded in
+        checkpoints so a future widening can't silently alias)."""
+        return self.matrix.dtype
+
+    def spec(self) -> dict:
+        """The replayable description ``{seed, in_dim, out_dim, kind, dtype}``
+        — everything :func:`projection_from_spec` needs to rebuild
+        ``matrix`` bit-identically."""
+        return dict(
+            seed=int(self.seed), in_dim=int(self.in_dim),
+            out_dim=int(self.out_dim), kind=str(self.kind),
+            dtype=str(np.dtype(self.matrix.dtype)),
+        )
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """Project dense rows ``f[B, in_dim] → f32[B, out_dim]`` (jitted; one
+        compile per row-bucket shape, so equal-shaped calls are bit-stable)."""
+        return _apply_projection(self.matrix, jnp.asarray(x))
+
+
+@jax.jit
+def _apply_projection(matrix: jax.Array, x: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32) @ matrix
+
+
+def make_projection(
+    in_dim: int, out_dim: int, seed: int = 0, kind: str = "gaussian"
+) -> RandomProjection:
+    """Deterministically generate a :class:`RandomProjection` from its spec.
+
+    Same (seed, dims, kind) → bit-identical matrix on every call and every
+    process (jax threefry PRNG), which is what makes a checkpointed RP index
+    replayable from the stored seed alone."""
+    if in_dim < 1 or out_dim < 1:
+        raise ValueError(f"projection dims must be ≥ 1, got {in_dim}→{out_dim}")
+    key = jax.random.PRNGKey(seed)
+    if kind == "gaussian":
+        matrix = jax.random.normal(
+            key, (in_dim, out_dim), jnp.float32
+        ) * jnp.float32(1.0 / math.sqrt(out_dim))
+    elif kind == "ternary":
+        # Random Indexing index vectors (arxiv 1001.0833): sparse ±1 at
+        # density 1/8, scaled so E‖Px‖² ≈ ‖x‖²
+        density = 1.0 / 8.0
+        u = jax.random.uniform(key, (in_dim, out_dim), jnp.float32)
+        scale = jnp.float32(1.0 / math.sqrt(density * out_dim))
+        matrix = jnp.where(
+            u < density / 2, scale, jnp.where(u > 1.0 - density / 2, -scale, 0.0)
+        )
+    elif kind == "identity":
+        if out_dim != in_dim:
+            raise ValueError(
+                f"identity projection needs out_dim == in_dim, got "
+                f"{in_dim}→{out_dim}"
+            )
+        matrix = jnp.eye(in_dim, dtype=jnp.float32)
+    else:
+        raise ValueError(
+            f"unknown projection kind {kind!r}; use gaussian|ternary|identity"
+        )
+    return RandomProjection(matrix=matrix, seed=int(seed), kind=kind)
+
+
+def projection_from_spec(spec: dict) -> RandomProjection:
+    """Rebuild a projection from a :meth:`RandomProjection.spec` record,
+    verifying the recorded dtype still matches what :func:`make_projection`
+    produces (a silent dtype drift would un-replay every checkpoint)."""
+    try:
+        proj = make_projection(
+            int(spec["in_dim"]), int(spec["out_dim"]),
+            seed=int(spec["seed"]), kind=str(spec["kind"]),
+        )
+    except KeyError as e:
+        raise ProjectionMismatch(f"projection spec missing field {e}") from e
+    want = str(spec.get("dtype", "float32"))
+    if str(np.dtype(proj.matrix.dtype)) != want:
+        raise ProjectionMismatch(
+            f"projection dtype {np.dtype(proj.matrix.dtype)} != recorded {want}"
+        )
+    return proj
+
+
+def project_corpus(projection: RandomProjection, source, prefetch: int = 0):
+    """Project a whole corpus → ``f32[N, out_dim]`` (host array), in fixed
+    :data:`PROJECT_CHUNK`-row chunks.
+
+    ``source``: an in-memory corpus/backend or a ``CorpusStore``/``StoreSlice``
+    (rows stream through the block cache — only one densified chunk is ever
+    resident, so the sparse corpus is never materialised; ``prefetch ≥ 1``
+    moves store reads onto a ``store.Prefetcher`` thread). The chunk
+    granularity is deliberately *fixed* — independent of the caller's batch
+    size — so the in-memory and streaming constructions project every row at
+    the same jitted shape and the two resulting backends (and every tree
+    built over them) are bit-identical by construction."""
+    from repro.core.ktree import padded_chunk_rows
+
+    n = source.n_docs
+    out_dim = projection.out_dim
+    if n == 0:
+        return np.zeros((0, out_dim), np.float32)
+    if source.dim != projection.in_dim:
+        raise ProjectionMismatch(
+            f"corpus dim {source.dim} != projection in_dim {projection.in_dim}"
+        )
+    outs = []
+    if is_store(source):
+        def fetch(req):
+            _, padded = req
+            return source.take_rows(padded)
+
+        import contextlib
+
+        with contextlib.ExitStack() as stack:
+            if prefetch:
+                from repro.core.store import Prefetcher
+
+                fetched = stack.enter_context(Prefetcher(
+                    padded_chunk_rows(n, PROJECT_CHUNK), fetch, depth=prefetch,
+                ))
+            else:
+                fetched = (
+                    (req, fetch(req)) for req in padded_chunk_rows(n, PROJECT_CHUNK)
+                )
+            for (rows_np, padded), got in fetched:
+                be_c = backend_from_rows(source, got)
+                x = be_c.take(jnp.arange(padded.size, dtype=jnp.int32))
+                outs.append(np.asarray(projection.apply(x))[: rows_np.size])
+    else:
+        be = make_backend(source)
+        for rows_np, padded in padded_chunk_rows(n, PROJECT_CHUNK):
+            x = be.take(jnp.asarray(padded.astype(np.int32)))
+            outs.append(np.asarray(projection.apply(x))[: rows_np.size])
+    return np.concatenate(outs, axis=0)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RandomProjBackend:
+    """The Random Indexing K-tree's corpus side (arxiv 1001.0833): a base
+    corpus (dense or ELL — possibly left on disk) routed through a seeded
+    random projection.
+
+    Every tree-facing op (``take``/``cross_nodes``/``nn_flat``/…) delegates to
+    ``proj`` — a :class:`DenseBackend` over the projected rows — so build,
+    descent, and insert run entirely in the ``out_dim``-dimensional space
+    (``dim == projection.out_dim``; the tree's centres are small and dense and
+    bit-match a plain dense tree built over the same projected rows). What the
+    projection *costs* is exactness: projected distances only approximate
+    original-space distances, so the query engine treats the tree as a
+    candidate generator and rescores the leaf pool from ``base`` (or the
+    store) at full precision — ``query.topk_search(..., rp=...)``.
+
+    ``base`` keeps the original in-memory representation for that rescore;
+    it is ``None`` when the original rows live in a ``CorpusStore`` (the
+    out-of-core construction — pass the store as ``rp_corpus=`` at query
+    time)."""
+
+    proj: DenseBackend
+    projection: RandomProjection
+    base: Optional[Union[DenseBackend, EllSparseBackend]]
+
+    @classmethod
+    def wrap(cls, corpus, projection: RandomProjection) -> "RandomProjBackend":
+        """Wrap an in-memory corpus (dense array, Csr, Ell, or backend):
+        normalises it via :func:`make_backend`, projects it with
+        :func:`project_corpus`'s fixed chunking, and keeps the base for the
+        exact rescore."""
+        base = make_backend(corpus)
+        z = project_corpus(projection, base)
+        return cls(
+            proj=DenseBackend(jnp.asarray(z)), projection=projection, base=base
+        )
+
+    @classmethod
+    def from_store(
+        cls, source, projection: RandomProjection, prefetch: int = 0
+    ) -> "RandomProjBackend":
+        """Project an on-disk corpus without ever materialising it
+        (DESIGN.md §9): rows stream through the store's block cache in
+        :data:`PROJECT_CHUNK` chunks, and only the projected ``f32[N,
+        out_dim]`` matrix — the Random Indexing premise's *small*
+        representation — stays resident. ``base`` is ``None``; rescore
+        fetches original rows back through the store
+        (``query.topk_search(..., rp_corpus=store)``). Bit-identical to
+        :meth:`wrap` of the same corpus, by the shared fixed-chunk
+        projection."""
+        z = project_corpus(projection, source, prefetch=prefetch)
+        return cls(
+            proj=DenseBackend(jnp.asarray(z)), projection=projection, base=None
+        )
+
+    @property
+    def n_docs(self) -> int:
+        """Corpus row count N."""
+        return self.proj.n_docs
+
+    @property
+    def dim(self) -> int:
+        """Routing dimensionality — the *projected* dim (the tree's dim)."""
+        return self.proj.dim
+
+    @property
+    def base_dim(self) -> int:
+        """Original document dimensionality (the rescore space)."""
+        return self.projection.in_dim
+
+    @property
+    def dtype(self):
+        """Projected element dtype (f32)."""
+        return self.proj.dtype
+
+    def take(self, rows: jax.Array) -> jax.Array:
+        """Projected vectors for a batch of row ids — f32[B, out_dim] (what
+        leaf appends store: the tree holds projected rows)."""
+        return self.proj.take(rows)
+
+    def row_sq(self, rows: jax.Array) -> jax.Array:
+        """‖Px‖² per row — norms in the projected space."""
+        return self.proj.row_sq(rows)
+
+    def cross_nodes(self, rows: jax.Array, centers: jax.Array) -> jax.Array:
+        """Projected-space ``x·c`` against per-query gathered centres."""
+        return self.proj.cross_nodes(rows, centers)
+
+    def cross_flat(self, rows: jax.Array, centers: jax.Array) -> jax.Array:
+        """Projected-space ``x·c`` against a flat centre set."""
+        return self.proj.cross_flat(rows, centers)
+
+    def nn_flat(self, rows, centers, valid):
+        """Nearest flat centre per row, in the projected space."""
+        return self.proj.nn_flat(rows, centers, valid)
+
+    def topk_flat(self, rows, centers, valid, k):
+        """Top-k flat centres per row, in the projected space."""
+        return self.proj.topk_flat(rows, centers, valid, k)
+
+
+VectorBackend = Union[DenseBackend, EllSparseBackend, RandomProjBackend]
 
 
 # ---------------------------------------------------------------------------
@@ -694,7 +991,7 @@ def make_backend(x, backend: str = "auto") -> VectorBackend:
             x = DenseBackend(x.take(jnp.arange(x.n_docs)))
         elif backend == "sparse" and isinstance(x, DenseBackend):
             x = sparse_backend_from_csr(csr_from_dense(np.asarray(x.x)))
-    if isinstance(x, (DenseBackend, EllSparseBackend)):
+    if isinstance(x, (DenseBackend, EllSparseBackend, RandomProjBackend)):
         return x
     if isinstance(x, Csr):
         if backend == "dense":

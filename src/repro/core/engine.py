@@ -279,7 +279,7 @@ def pow2_pad_rows(x: np.ndarray, to: Optional[int] = None) -> Tuple[np.ndarray, 
 
 def make_search_fn(
     tree, *, mesh=None, corpus=None, chunk: int = 512, pipeline: int = 2,
-    prefetch: int = 0, on_fault: Optional[str] = None,
+    prefetch: int = 0, on_fault: Optional[str] = None, rp=None, rp_corpus=None,
 ) -> Callable[..., Tuple[np.ndarray, np.ndarray]]:
     """Adapt the offline engines to the ``search_fn(x, k, beam,
     chunk_rows=None)`` signature :class:`ServingEngine` dispatches through.
@@ -300,8 +300,16 @@ def make_search_fn(
     typed store error). ``"degrade"`` serves past quarantined blocks: calls
     return a third :class:`repro.core.faults.FaultReport` element, which the
     engine strips off the answer and surfaces as ``ResultHandle.degraded`` /
-    ``.report``."""
+    ``.report``.
+
+    ``rp``/``rp_corpus`` (DESIGN.md §5.1): a random-projection routing spec
+    forwarded verbatim to the offline engines — the tree descends in the
+    projected space, answers are exact-rescored from ``rp_corpus`` (or the
+    RP backend's base). Incompatible with ``on_fault="degrade"``."""
     kw = {} if on_fault is None else {"on_fault": on_fault}
+    if rp is not None:
+        kw["rp"] = rp
+        kw["rp_corpus"] = rp_corpus
     if mesh is None:
         def fn(x, k, beam, chunk_rows=None):
             return topk_search(

@@ -624,7 +624,10 @@ def build(
     prebuilt backend. ``backend``: "auto" follows the input layout; "sparse"
     builds the paper's sparse-document tree (§2 — typically with
     ``medoid=True``) even from a dense input; "dense" densifies a sparse
-    input. The pending set between waves is derived from the fetched
+    input. A prebuilt ``backend.RandomProjBackend`` passes through and builds
+    the Random Indexing tree (DESIGN.md §5.1): every wave routes, appends,
+    and splits in the projected space, so ``tree.dim`` is the projection's
+    ``out_dim``. The pending set between waves is derived from the fetched
     ``accepted`` mask — no extra device→host sync per wave."""
     be = make_backend(x, backend)
     n = be.n_docs
@@ -660,6 +663,7 @@ def build_from_store(
     medoid: bool = False,
     max_nodes: Optional[int] = None,
     prefetch: int = 0,
+    projection=None,
 ) -> KTree:
     """Streaming out-of-core build: insert an on-disk corpus batch-by-batch
     (paper §1: "this tree structure allows for efficient disk based
@@ -682,9 +686,24 @@ def build_from_store(
     ``prefetch ≥ 1`` moves each batch's disk read onto an async
     ``store.Prefetcher`` reader thread of that depth, so the next batch's
     block fetch overlaps the current batch's insert waves; the fetched rows
-    (and hence the tree) are identical to the synchronous path."""
-    from repro.core.backend import backend_from_rows
+    (and hence the tree) are identical to the synchronous path.
 
+    ``projection`` (a ``backend.RandomProjection``, DESIGN.md §5.1) builds
+    the Random Indexing tree instead: store blocks stream once through the
+    fixed-chunk ``project_corpus`` pass (the sparse corpus is never
+    materialised — only the small ``f32[N, out_dim]`` projected matrix stays
+    resident, which is the RI premise) and the build runs entirely in the
+    projected space. Bit-identical to ``build(RandomProjBackend.wrap(corpus,
+    projection), ...)`` over the same corpus, by the shared fixed projection
+    granularity."""
+    from repro.core.backend import RandomProjBackend, backend_from_rows
+
+    if projection is not None:
+        be = RandomProjBackend.from_store(store, projection, prefetch=prefetch)
+        return build(
+            be, order=order, key=key, batch_size=batch_size, medoid=medoid,
+            max_nodes=max_nodes,
+        )
     n = store.n_docs
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -757,7 +776,7 @@ def insert(
 
 
 def insert_into_store(
-    tree: KTree, store, x, key: Optional[jax.Array] = None
+    tree: KTree, store, x, key: Optional[jax.Array] = None, projection=None
 ) -> KTree:
     """Incremental insertion into a **store-backed** index (DESIGN.md §9):
     route the new documents into the tree *and* spill their vectors to the
@@ -777,13 +796,22 @@ def insert_into_store(
     Returns the new tree; ``store`` (an open ``CorpusStore``) is mutated in
     place and immediately serves the grown corpus. Equivalence contract: the
     returned tree bit-matches ``insert`` of the same normalised rows into an
-    in-memory shadow tree (property-tested for both layouts)."""
-    from repro.core.backend import backend_for_store_layout
+    in-memory shadow tree (property-tested for both layouts).
+
+    ``projection`` (a ``backend.RandomProjection``, DESIGN.md §5.1): the
+    store still appends the *original* normalised rows — the rescore
+    representation — while the tree inserts their projection (the routing
+    representation), keeping the RI index's two spaces in lockstep. The
+    inserted projected rows bit-match
+    ``RandomProjBackend.wrap(normalised_rows, projection)``'s, which is what
+    the shadow-tree property test pins."""
+    from repro.core.backend import RandomProjBackend, backend_for_store_layout
 
     be = backend_for_store_layout(store, x)
     n0 = store.n_docs
     doc_ids = np.arange(n0, n0 + be.n_docs, dtype=np.int32)
-    tree = insert(tree, be, doc_ids, key=key)
+    ins = be if projection is None else RandomProjBackend.wrap(be, projection)
+    tree = insert(tree, ins, doc_ids, key=key)
     store.append(be)
     return tree
 

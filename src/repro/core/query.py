@@ -44,6 +44,17 @@ current chunk's D2H as well). ``topk_search_sharded`` accepts a store (or a
 disk behind per-shard block caches and each shard fetches only the beam
 candidates it owns per chunk. Answers are bit-identical to the in-memory
 paths throughout.
+
+Random-projection routing (DESIGN.md §5.1): with ``rp=`` the tree was built
+in a seeded low-dimensional projection (``backend.RandomProjBackend``) —
+queries are projected per chunk, the beam descends in the projected space,
+and the leaf candidate pool is **rescored from the original representation**
+(in-memory base, ``CorpusStore.take_rows``, or per-shard partition caches)
+at full precision. The rescore literally calls :func:`brute_force_topk_dist`
+per query over its own candidate rows, so it is bit-identical to brute force
+restricted to that pool by construction; the single-device, cached, and
+sharded RP paths all extract pools through the same jitted
+``_chunk_candidates`` and therefore bit-match each other.
 """
 from __future__ import annotations
 
@@ -59,9 +70,13 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.backend import (
+    DenseBackend,
     DenseDocShards,
     DocShards,
     EllDocShards,
+    ProjectionMismatch,
+    RandomProjBackend,
+    RandomProjection,
     StoreDocShards,
     VectorBackend,
     backend_from_rows,
@@ -242,6 +257,7 @@ def _store_chunk_iter(store, n: int, chunk: int, prefetch: int, dropped=None):
 def topk_search(
     tree: KTree, q, k: int = 10, beam: int = 4, chunk: int = 512,
     pipeline: int = 2, prefetch: int = 0, on_fault: str = "raise",
+    rp=None, rp_corpus=None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k ANN document search with beam-width recall control.
 
@@ -266,10 +282,30 @@ def topk_search(
     drops only the unreadable blocks' query rows — their answers become
     (−1, +inf), surviving rows stay bit-identical to a fault-free run — and
     returns a third element, a :class:`repro.core.faults.FaultReport`
-    flagging ``degraded=True`` whenever anything was dropped."""
+    flagging ``degraded=True`` whenever anything was dropped.
+
+    Random projection (DESIGN.md §5.1): ``rp=`` (a ``RandomProjBackend`` or
+    bare ``RandomProjection``) switches to approximate-route, exact-rescore:
+    queries are projected per chunk, the descent runs in the projected space
+    the tree was built in, and the leaf candidate pool is rescored from the
+    original representation — ``rp_corpus=`` (defaulting to the rp backend's
+    in-memory base; pass the ``CorpusStore`` for an out-of-core base). The
+    rescore is bit-identical to :func:`brute_force_topk_dist` restricted to
+    each query's pool (it *is* that call); only the pool membership is
+    approximate. Not composable with ``on_fault="degrade"`` yet."""
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
     check_on_fault(on_fault)
+    if rp is not None:
+        if on_fault != "raise":
+            raise ValueError(
+                "rp= does not compose with on_fault='degrade' yet"
+            )
+        projection, src = _resolve_rp(rp, rp_corpus)
+        return _topk_search_rp(
+            tree, q, projection, src, k=k, beam=beam, chunk=chunk,
+            pipeline=pipeline, prefetch=prefetch,
+        )
     store = q if is_store(q) else None
     degrade = on_fault == "degrade"
     dropped: Optional[list] = [] if (degrade and store is not None) else None
@@ -623,6 +659,7 @@ def shard_corpus(mesh, corpus, axes=None) -> DocShards:
 def topk_search_sharded(
     mesh, tree: KTree, q, corpus=None, k: int = 10, beam: int = 4,
     chunk: int = 512, pipeline: int = 2, on_fault: str = "raise",
+    rp=None, rp_corpus=None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Shard-parallel top-k search: same answers as :func:`topk_search`, with
     the corpus row-sharded over ``mesh``'s data axes (DESIGN.md §8).
@@ -658,10 +695,33 @@ def topk_search_sharded(
     reference search over the surviving subset. Degrade mode returns a third
     :class:`repro.core.faults.FaultReport` element; the default ``"raise"``
     keeps the two-tuple API and surfaces typed block errors.
+
+    Random projection (DESIGN.md §5.1): with ``rp=``, descent is replicated
+    work anyway (it touches only the small projected tree) and the exact
+    rescore runs host-side against the original corpus — ``rp_corpus=``,
+    the ``corpus`` argument, or the rp backend's base, in that order. A
+    ``StoreDocShards`` corpus keeps the rescore fetches behind the
+    per-shard partition caches (residency stays bounded). The candidate
+    pools come from the same jitted descent as the single-device RP path,
+    and the rescore is the same per-query ``brute_force_topk_dist`` call —
+    so sharded RP answers are bit-identical to single-device RP answers by
+    construction. Not composable with ``on_fault="degrade"`` yet.
     """
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
     check_on_fault(on_fault)
+    if rp is not None:
+        if on_fault != "raise":
+            raise ValueError(
+                "rp= does not compose with on_fault='degrade' yet"
+            )
+        projection, src = _resolve_rp(
+            rp, rp_corpus if rp_corpus is not None else corpus
+        )
+        return _topk_search_rp(
+            tree, q, projection, src, k=k, beam=beam, chunk=chunk,
+            pipeline=pipeline, prefetch=0,
+        )
     degrade = on_fault == "degrade"
     store_q = q if is_store(q) else None
     qbe = None if store_q is not None else make_backend(q)
@@ -749,6 +809,308 @@ def topk_search_sharded(
             degraded=bool(rows_lost), quarantined_blocks=qset,
             dropped_query_rows=tuple(sorted(rows_lost)),
         )
+    return docs_out, dist_out
+
+
+# ---------------------------------------------------------------------------
+# random-projection routing (DESIGN.md §5.1): beam descent in the projected
+# space, exact rescore of the leaf candidate pool from the original
+# representation. Approximate-route, exact-rescore — the Random Indexing
+# K-tree's serving path.
+# ---------------------------------------------------------------------------
+
+
+def _resolve_rp(rp, src):
+    """Normalise the ``rp=``/``rp_corpus=`` pair into (projection, rescore
+    source) with typed validation. ``rp``: a ``RandomProjection`` or a
+    ``RandomProjBackend`` (whose in-memory ``base``, if any, is the default
+    source); ``src``: an explicit original-representation corpus — array,
+    Csr, backend, ``CorpusStore``/``StoreSlice``, ``*DocShards``, or a
+    ``StoreDocShards`` handle (rescore rows then fetch through the per-shard
+    partition caches)."""
+    if isinstance(rp, RandomProjBackend):
+        projection = rp.projection
+        if src is None:
+            src = rp.base
+    elif isinstance(rp, RandomProjection):
+        projection = rp
+    else:
+        raise TypeError(
+            f"rp must be a RandomProjection or RandomProjBackend, "
+            f"got {type(rp).__name__}"
+        )
+    if isinstance(src, RandomProjBackend):
+        src = src.base
+    if src is None:
+        raise ValueError(
+            "RP rescore needs the original corpus: pass rp_corpus= "
+            "(array/backend/CorpusStore/shards) or an RandomProjBackend "
+            "with an in-memory base"
+        )
+    return projection, src
+
+
+def _ell_densify_rows(values, cols, dim: int) -> np.ndarray:
+    """Densify fetched ELL rows host-side → f32[B, dim]. Value-0 slots are
+    padding (the repo-wide ELL convention), so the scatter-add contributes
+    exactly +0.0 for them — bit-identical to the device ``take`` densify."""
+    values = np.asarray(values)
+    cols = np.asarray(cols)
+    out = np.zeros((values.shape[0], dim), np.float32)
+    rows = np.repeat(np.arange(values.shape[0]), values.shape[1])
+    np.add.at(
+        out, (rows, cols.ravel().astype(np.intp)),
+        values.astype(np.float32, copy=False).ravel(),
+    )
+    return out
+
+
+def _rp_row_fetcher(src, in_dim: int):
+    """Build ``fetch(sorted unique global ids) → f32[U, in_dim]`` over the
+    original representation — the rescore stage's row source. The fetched
+    bytes are pinned bit-identical across source kinds (store round-trips
+    are exact; ELL densifies reproduce ``take``), which is what lets the
+    single-device, store-backed, and sharded rescores agree exactly."""
+    if isinstance(src, StoreDocShards):
+        if src.dim != in_dim:
+            raise ProjectionMismatch(
+                f"rescore corpus dim {src.dim} != projection in_dim {in_dim}"
+            )
+
+        def fetch(ids):
+            out = np.zeros((ids.size, in_dim), np.float32)
+            dps = src.docs_per_shard
+            for s, part in enumerate(src.parts):
+                lo = s * dps
+                m = np.logical_and(ids >= lo, ids < lo + part.n_docs)
+                if not m.any():
+                    continue
+                got = part.take_rows(ids[m] - lo)
+                if src.kind == "dense":
+                    out[m] = np.asarray(got["x"]).astype(np.float32, copy=False)
+                else:
+                    out[m] = _ell_densify_rows(got["values"], got["cols"], in_dim)
+            src.peak_resident_bytes = max(
+                src.peak_resident_bytes,
+                sum(p.store.cache.resident_bytes for p in src.parts),
+            )
+            return out
+
+        return fetch
+    if is_store(src):
+        if src.dim != in_dim:
+            raise ProjectionMismatch(
+                f"rescore corpus dim {src.dim} != projection in_dim {in_dim}"
+            )
+
+        def fetch(ids):
+            got = src.take_rows(ids)
+            if src.kind == "dense":
+                return np.asarray(got["x"]).astype(np.float32, copy=False)
+            return _ell_densify_rows(got["values"], got["cols"], in_dim)
+
+        return fetch
+    if isinstance(src, (DenseDocShards, EllDocShards)):
+        if src.dim != in_dim:
+            raise ProjectionMismatch(
+                f"rescore corpus dim {src.dim} != projection in_dim {in_dim}"
+            )
+        if isinstance(src, DenseDocShards):
+            x_np = np.asarray(src.x)
+            return lambda ids: x_np[ids].astype(np.float32, copy=False)
+        v_np, c_np = np.asarray(src.values), np.asarray(src.cols)
+        return lambda ids: _ell_densify_rows(v_np[ids], c_np[ids], in_dim)
+    be = make_backend(src)
+    if be.dim != in_dim:
+        raise ProjectionMismatch(
+            f"rescore corpus dim {be.dim} != projection in_dim {in_dim}"
+        )
+
+    def fetch(ids):
+        rows = be.take(jnp.asarray(ids, dtype=jnp.int32))
+        return np.asarray(rows).astype(np.float32, copy=False)
+
+    return fetch
+
+
+def _rescore_pool_chunk(
+    x_q: np.ndarray, cand: np.ndarray, valid: np.ndarray, fetch_rows, k: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact rescore of one chunk's leaf candidate pools.
+
+    Per query: its valid candidates, deduplicated and sorted ascending, are
+    gathered from the original representation and ranked by literally
+    calling :func:`brute_force_topk_dist` over them — so the result *is*
+    brute force restricted to the pool, bit for bit (the golden-equivalence
+    tests make the same call). The union of the chunk's candidates is
+    fetched once (one store round-trip per chunk); per-query rows are host
+    gathers from that union. Distances clamp at 0 like every exact-path
+    leaf distance."""
+    b = x_q.shape[0]
+    docs = np.full((b, k), -1, np.int32)
+    dist = np.full((b, k), np.inf, np.float32)
+    if not valid.any():
+        return docs, dist
+    union = np.unique(cand[valid]).astype(np.int64)
+    rows_u = fetch_rows(union)
+    for i in range(b):
+        ids_i = np.unique(cand[i][valid[i]]).astype(np.int64)
+        if not ids_i.size:
+            continue
+        rows_i = rows_u[np.searchsorted(union, ids_i)]
+        sel, d = brute_force_topk_dist(x_q[i : i + 1], rows_i, k)
+        kk = sel.shape[1]
+        docs[i, :kk] = ids_i[sel[0]]
+        dist[i, :kk] = np.maximum(d[0], 0.0).astype(np.float32)
+    return docs, dist
+
+
+def rp_candidate_pools(
+    tree: KTree, q, rp, beam: int = 4, chunk: int = 512,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The RP descent's leaf candidate pools, host-side: (cand i32[n,
+    beam·m1] global doc ids, valid bool[n, beam·m1], x_q f32[n, in_dim]
+    original query rows).
+
+    These are *exactly* the pools ``topk_search(..., rp=...)`` rescores for
+    the same ``(q, beam, chunk)`` — chunking affects which rows share a
+    projection call, so pass the same ``chunk`` — produced by the same
+    jitted ``_chunk_candidates`` descent. Exposed for the
+    golden-equivalence tests (restrict ``brute_force_topk_dist`` to a pool
+    and compare bit-for-bit) and for recall diagnostics."""
+    projection = rp.projection if isinstance(rp, RandomProjBackend) else rp
+    if not isinstance(projection, RandomProjection):
+        raise TypeError(
+            f"rp must be a RandomProjection or RandomProjBackend, "
+            f"got {type(rp).__name__}"
+        )
+    store_q = q if is_store(q) else None
+    qbe = None if store_q is not None else make_backend(q)
+    q_src = store_q if store_q is not None else qbe
+    if q_src.dim != projection.in_dim:
+        raise ProjectionMismatch(
+            f"query dim {q_src.dim} != projection in_dim {projection.in_dim}"
+        )
+    if tree.dim != projection.out_dim:
+        raise ProjectionMismatch(
+            f"tree dim {tree.dim} != projection out_dim {projection.out_dim} "
+            "(was the tree built under a different projection?)"
+        )
+    levels = int(tree.depth) - 1
+    max_levels = _levels_bucket(levels)
+    n = q_src.n_docs
+    cands, valids, xqs = [], [], []
+    for rows_np, padded in padded_chunk_rows(n, chunk):
+        if store_q is not None:
+            qbe_c = backend_from_store(store_q, padded)
+            rows = jnp.arange(padded.size, dtype=jnp.int32)
+        else:
+            qbe_c = qbe
+            rows = jnp.asarray(padded.astype(np.int32))
+        xq, cand, valid = _rp_chunk_candidates(
+            tree, projection, qbe_c, rows, levels, max_levels, beam
+        )
+        b = rows_np.size
+        cands.append(np.asarray(cand)[:b])
+        valids.append(np.asarray(valid)[:b])
+        xqs.append(np.asarray(xq)[:b].astype(np.float32, copy=False))
+    if not cands:
+        m1 = tree.slots
+        return (np.zeros((0, beam * m1), np.int32),
+                np.zeros((0, beam * m1), bool),
+                np.zeros((0, projection.in_dim), np.float32))
+    return (np.concatenate(cands), np.concatenate(valids), np.concatenate(xqs))
+
+
+def _rp_chunk_candidates(
+    tree: KTree, projection: RandomProjection, qbe_c, rows, levels: int,
+    max_levels: int, beam: int,
+):
+    """One chunk of the RP descent: densify the original query rows, project
+    them (one jitted matmul per row-bucket shape — replay-stable for equal
+    chunking), and run the shared jitted candidate extraction over a dense
+    backend of the projected rows. Returns device (x_q original, cand,
+    valid). Single source of the RP pools: the single-device search, the
+    sharded search, and :func:`rp_candidate_pools` all come through here."""
+    xq = qbe_c.take(rows)                                     # original rows
+    zq = projection.apply(xq)                                 # projected rows
+    qbe_p = DenseBackend(zq)
+    rows_p = jnp.arange(zq.shape[0], dtype=jnp.int32)
+    cand, valid, _, _ = _chunk_candidates_jit(
+        tree, qbe_p, rows_p, jnp.int32(levels),
+        max_levels=max_levels, beam=beam,
+    )
+    return xq, cand, valid
+
+
+def _topk_search_rp(
+    tree: KTree, q, projection: RandomProjection, src, k: int, beam: int,
+    chunk: int, pipeline: int, prefetch: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """The RP serving path: projected beam descent + exact host rescore.
+
+    Same dispatch-ahead chunk schedule as :func:`topk_search` — the drain
+    side runs the host rescore (a disk fetch + numpy ranking) instead of a
+    plain D2H copy-out, so device descent of chunk i+1 overlaps chunk i's
+    rescore. Every answer row depends only on its own query row and pool,
+    so engine batching/caching compose exactly as for the exact path."""
+    store_q = q if is_store(q) else None
+    qbe = None if store_q is not None else make_backend(q)
+    q_src = store_q if store_q is not None else qbe
+    if q_src.dim != projection.in_dim:
+        raise ProjectionMismatch(
+            f"query dim {q_src.dim} != projection in_dim {projection.in_dim}"
+        )
+    if tree.dim != projection.out_dim:
+        raise ProjectionMismatch(
+            f"tree dim {tree.dim} != projection out_dim {projection.out_dim} "
+            "(was the tree built under a different projection?)"
+        )
+    fetch_rows = _rp_row_fetcher(src, projection.in_dim)
+    levels = int(tree.depth) - 1
+    max_levels = _levels_bucket(levels)
+    n = q_src.n_docs
+    docs_out = np.full((n, k), -1, np.int32)
+    dist_out = np.full((n, k), np.inf, np.float32)
+    if n == 0:
+        return docs_out, dist_out
+
+    if store_q is not None:
+        def dispatch(got):
+            qbe_c = backend_from_rows(store_q, got)
+            rows = jnp.arange(qbe_c.n_docs, dtype=jnp.int32)
+            return _rp_chunk_candidates(
+                tree, projection, qbe_c, rows, levels, max_levels, beam
+            )
+
+        chunks = _store_chunk_iter(store_q, n, chunk, prefetch)
+    else:
+        def dispatch(rows):
+            return _rp_chunk_candidates(
+                tree, projection, qbe, rows, levels, max_levels, beam
+            )
+
+        chunks = chunked_query_rows(n, chunk)
+
+    depth = max(int(pipeline), 1)
+    pending = collections.deque()
+
+    def drain_one():
+        rows_np, (xq, cand, valid) = pending.popleft()
+        b = rows_np.size
+        d, s = _rescore_pool_chunk(
+            np.asarray(xq)[:b].astype(np.float32, copy=False),
+            np.asarray(cand)[:b], np.asarray(valid)[:b], fetch_rows, k,
+        )
+        docs_out[rows_np] = d
+        dist_out[rows_np] = s
+
+    for rows_np, payload in chunks:
+        pending.append((rows_np, dispatch(payload)))
+        while len(pending) >= depth:
+            drain_one()
+    while pending:
+        drain_one()
     return docs_out, dist_out
 
 
@@ -938,6 +1300,7 @@ def topk_search_cached(
     chunk: int = 512,
     search_fn: Optional[Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]]] = None,
     corpus_token: Optional[str] = None,
+    rp=None, rp_corpus=None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """:func:`topk_search` through an :class:`AnswerCache`: hit rows are served
     from the cache, miss rows (deduplicated within the batch) go through one
@@ -947,14 +1310,20 @@ def topk_search_cached(
     (it must answer over the *same* ``tree``: the cache binds to it).
     ``corpus_token``: pass the corpus store's ``manifest_hash`` when the
     served corpus lives on disk — answers then invalidate if the store is
-    regenerated in place under an unchanged tree object (DESIGN.md §9)."""
+    regenerated in place under an unchanged tree object (DESIGN.md §9).
+    ``rp``/``rp_corpus`` route the miss batch through the RP
+    approximate-route, exact-rescore path (DESIGN.md §5.1) — hashing still
+    addresses the *original* query bytes, so cache keys are unchanged."""
     cache.bind(tree, corpus_token)
     x_q = np.asarray(q)
     docs, dist, miss_rows = cache_stage(cache, x_q, k, beam)
     if miss_rows:
         rep = np.asarray([rows[0] for rows in miss_rows.values()])
         if search_fn is None:
-            d_new, s_new = topk_search(tree, x_q[rep], k=k, beam=beam, chunk=chunk)
+            d_new, s_new = topk_search(
+                tree, x_q[rep], k=k, beam=beam, chunk=chunk,
+                rp=rp, rp_corpus=rp_corpus,
+            )
         else:
             d_new, s_new = search_fn(x_q[rep])
         cache_fill(cache, miss_rows, d_new, s_new, docs, dist)
@@ -980,10 +1349,28 @@ def brute_force_topk(
     ascending doc-id order, and the running merge (stable argsort over
     [running | new-tile], where running ids always precede the tile's) keeps
     it — bit-identical to a stable argsort of the full matrix."""
+    ids, _ = brute_force_topk_dist(
+        x_q, x_all, k, doc_block=doc_block, q_block=q_block
+    )
+    return ids
+
+
+def brute_force_topk_dist(
+    x_q: np.ndarray, x_all: np.ndarray, k: int,
+    doc_block: int = 16384, q_block: int = 1024,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """:func:`brute_force_topk` with the squared distances alongside —
+    (ids [nq, min(k, n)], sqdist [nq, min(k, n)], same tiles, same running
+    merge, so the two can never diverge). This is also the RP rescore
+    primitive: ``topk_search(rp=...)`` calls it per query over the candidate
+    pool's original-representation rows, which is what makes the rescore
+    stage bit-identical to brute force restricted to that pool *by
+    construction*."""
     x_q = np.asarray(x_q)
     x_all = np.asarray(x_all)
     nq, n = x_q.shape[0], x_all.shape[0]
     out = np.empty((nq, min(k, n)), dtype=np.intp)
+    out_d = np.empty((nq, min(k, n)), dtype=x_q.dtype)
     q_sq = (x_q ** 2).sum(1)
     for qs in range(0, nq, q_block):
         qe = min(qs + q_block, nq)
@@ -996,7 +1383,8 @@ def brute_force_topk(
             d = q_sq[qs:qe, None] - 2.0 * qb @ xb.T + (xb ** 2).sum(1)[None, :]
             run_ids, run_d = _merge_topk(run_ids, run_d, d, ds, k)
         out[qs:qe] = run_ids
-    return out
+        out_d[qs:qe] = run_d
+    return out, out_d
 
 
 def _merge_topk(run_ids, run_d, d, offset, k):

@@ -61,7 +61,10 @@ def shard_bounds(n: int, shard_id: int, n_shards: int) -> tuple[int, int]:
 # corpus → K-tree backend path (paper preprocessing, both representations)
 # ---------------------------------------------------------------------------
 
-def corpus_backend(spec, representation: str = "sparse_medoid", seed: int = 0):
+def corpus_backend(
+    spec, representation: str = "sparse_medoid", seed: int = 0,
+    rp_dim: int = 128, rp_seed: int = 0, rp_kind: str = "gaussian",
+):
     """Full paper corpus path in one call: term counts → TF-IDF → cull top
     terms → unit rows, then lay the culled matrix out for the requested
     K-tree representation.
@@ -69,17 +72,27 @@ def corpus_backend(spec, representation: str = "sparse_medoid", seed: int = 0):
     ``representation``:
     - ``"dense"``         — densify (the seed/paper-§4 dense K-tree path);
     - ``"sparse_medoid"`` — keep documents sparse in ELL(+CSR) layout (paper
-      §2's medoid K-tree; the ``ell_spmm`` scoring path).
+      §2's medoid K-tree; the ``ell_spmm`` scoring path);
+    - ``"rp"``            — Random Indexing K-tree (DESIGN.md §5.1): documents
+      stay sparse (ELL base), tree build/descent runs in an ``rp_dim``-dim
+      seeded random projection (``rp_seed``/``rp_kind`` → ``make_projection``).
+      Query with ``topk_search(..., rp=backend)`` for exact rescore.
 
     Returns (backend, labels i32[n_docs]). The backend plugs straight into
     ``repro.core.ktree.build(backend, ...)``.
     """
-    from repro.core.backend import make_backend
+    from repro.core.backend import (
+        RandomProjBackend, make_backend, make_projection,
+    )
     from repro.data.synth_corpus import prepared_corpus
 
-    if representation not in ("dense", "sparse_medoid"):
+    if representation not in ("dense", "sparse_medoid", "rp"):
         raise ValueError(f"unknown representation {representation!r}")
     culled, labels = prepared_corpus(spec, seed=seed)
+    if representation == "rp":
+        base = make_backend(culled, "sparse")
+        proj = make_projection(base.dim, rp_dim, seed=rp_seed, kind=rp_kind)
+        return RandomProjBackend.wrap(base, proj), labels
     kind = "dense" if representation == "dense" else "sparse"
     return make_backend(culled, kind), labels
 
@@ -93,7 +106,10 @@ def corpus_store(
     Runs :func:`corpus_backend` (term counts → TF-IDF → cull → unit rows →
     backend layout) and writes the result with
     ``repro.core.store.save_store`` — dense representation lands as dense
-    blocks, ``sparse_medoid`` as ELL blocks. A sidecar ``PIPELINE.json``
+    blocks, ``sparse_medoid`` *and* ``rp`` as ELL blocks (the store always
+    holds the **original** rows; an RP projection is never materialised on
+    disk, it replays from its seed — build with
+    ``build_from_store(..., projection=...)``). A sidecar ``PIPELINE.json``
     records the full generation request (every spec field, representation,
     seed, block_docs) plus the written store's ``manifest_hash``. With
     ``reuse=True`` (default) an existing store at ``path`` is kept as-is
@@ -152,6 +168,8 @@ def corpus_store(
             )
         return path
     backend, _ = corpus_backend(spec, representation=representation, seed=seed)
+    if representation == "rp":
+        backend = backend.base  # original rows; the projection replays from seed
     save_store(path, backend, block_docs=block_docs)
     request["manifest_hash"] = open_store(path).manifest_hash
     with open(sidecar, "w") as f:

@@ -119,20 +119,37 @@ def serve_paper_store(args):
 
     spec = registry.get(args.arch)
     rep = spec.cfg.get("representation", "dense")
+    rp_dim = _rp_dim_for(args, spec)
     corpus_spec = scaled(spec.cfg["corpus"], n_docs=args.n_docs, culled=args.culled)
     budget = max(int(args.budget_mb * 1024 * 1024), 1)
+    projection = None
 
     if args.ckpt and os.path.isdir(args.ckpt):
         # restore by manifest reference: the checkpoint names the store it
         # was built over (and its content hash) — serve that one, don't
-        # touch/describe the --store path it may or may not equal
+        # touch/describe the --store path it may or may not equal. An RP
+        # index also records its projection spec; restore_index replays the
+        # matrix bit-exactly from the stored seed (3-tuple return)
         t0 = time.perf_counter()
-        tree, store = restore_index(args.ckpt, budget_bytes=budget)
+        out = restore_index(args.ckpt, budget_bytes=budget)
+        tree, store = out[0], out[1]
+        projection = out[2] if len(out) == 3 else None
+        if rp_dim and (projection is None or projection.out_dim != rp_dim
+                       or projection.seed != args.rp_seed):
+            rec = projection.spec() if projection is not None else None
+            raise SystemExit(
+                f"index {args.ckpt} records projection {rec} but this serve "
+                f"run expects rp_dim={rp_dim} seed={args.rp_seed}; match "
+                "--rp-dim/--rp-seed to the checkpoint or rebuild"
+            )
         print(f"restored store-backed index from {args.ckpt} in "
               f"{time.perf_counter()-t0:.2f}s (depth={int(tree.depth)}, "
               f"nodes={int(tree.n_nodes)}, store {store.path}: "
               f"{store.n_docs} docs, {store.n_blocks} blocks × "
-              f"{store.block_docs}, budget {budget/1e6:.1f}MB)")
+              f"{store.block_docs}, budget {budget/1e6:.1f}MB"
+              + (f", projection seed={projection.seed} "
+                 f"{projection.in_dim}→{projection.out_dim}"
+                 if projection is not None else "") + ")")
     else:
         t0 = time.perf_counter()
         corpus_store(corpus_spec, args.store, representation=rep,
@@ -141,10 +158,15 @@ def serve_paper_store(args):
         print(f"store {args.store}: {store.n_docs} docs, {store.n_blocks} "
               f"blocks × {store.block_docs} docs ({store.nbytes/1e6:.1f}MB "
               f"on disk, budget {budget/1e6:.1f}MB) in {time.perf_counter()-t0:.2f}s")
+        if rp_dim:
+            from repro.core.backend import make_projection
+
+            projection = make_projection(store.dim, rp_dim, seed=args.rp_seed)
         t0 = time.perf_counter()
         tree = kt.build_from_store(
-            store, order=args.order, medoid=rep == "sparse_medoid",
-            batch_size=256, prefetch=args.prefetch,
+            store, order=args.order,
+            medoid=rep == "sparse_medoid" and projection is None,
+            batch_size=256, prefetch=args.prefetch, projection=projection,
         )
         print(f"streaming-built K-tree over {store.n_docs} docs in "
               f"{time.perf_counter()-t0:.2f}s (depth={int(tree.depth)}, "
@@ -153,7 +175,7 @@ def serve_paper_store(args):
               f"resident {store.cache.resident_bytes/1e6:.1f}MB)")
         if args.ckpt:
             print(f"saved index by manifest reference to "
-                  f"{save_index(args.ckpt, tree, store)}")
+                  f"{save_index(args.ckpt, tree, store, projection=projection)}")
 
     nq = min(args.queries, store.n_docs)
     q_view = store.view(0, nq)
@@ -165,6 +187,12 @@ def serve_paper_store(args):
         raise SystemExit(
             "--on-fault degrade does not compose with --cache (degraded "
             "answers must not be cached); drop one of the two"
+        )
+    if on_fault and projection is not None:
+        raise SystemExit(
+            "--on-fault degrade does not compose with random-projection "
+            "routing (--rp-dim): the exact-rescore stage needs every "
+            "candidate row readable; drop one of the two"
         )
     if args.mesh > 1:
         # store-backed sharded serving: the corpus stays on disk — each mesh
@@ -179,16 +207,19 @@ def serve_paper_store(args):
         )
         mode = f"sharded×{args.mesh}"
         search_fn = make_search_fn(
-            tree, mesh=mesh, corpus=sshards, on_fault=on_fault
+            tree, mesh=mesh, corpus=sshards, on_fault=on_fault, rp=projection
         )
         block_caches = [p.store.cache for p in sshards.parts]
     else:
         sshards = None
         mode = "single-device"
         search_fn = make_search_fn(
-            tree, prefetch=args.prefetch, on_fault=on_fault
+            tree, prefetch=args.prefetch, on_fault=on_fault,
+            rp=projection, rp_corpus=store,
         )
         block_caches = [store.cache]
+    if projection is not None:
+        mode += f", rp{projection.out_dim}"
     run = lambda src: search_fn(src, args.k, args.beam)
     run(q_view)  # warm the jit cache
     if args.engine:
@@ -345,6 +376,17 @@ def serve_engine_mode(args, search_fn, x_q, tree, mode,
         raise SystemExit("engine answers diverged from the offline engine")
 
 
+def _rp_dim_for(args, spec) -> int:
+    """Effective random-projection dim for this serve run: ``--rp-dim`` wins,
+    else an arch whose representation is ``"rp"`` supplies its cfg default
+    (``ktree-rcv1-rp``); 0 = exact routing (no projection)."""
+    if args.rp_dim:
+        return int(args.rp_dim)
+    if spec.cfg.get("representation") == "rp":
+        return int(spec.cfg.get("rp_dim", 128))
+    return 0
+
+
 def make_dense_rows(store, nq: int, on_fault: str = "raise") -> np.ndarray:
     """Densify the first ``nq`` store rows host-side (cache keys hash dense
     row bytes; ground truth needs dense queries). ``on_fault="degrade"``
@@ -419,39 +461,78 @@ def serve_paper(args):
 
     spec = registry.get(args.arch)
     rep = spec.cfg.get("representation", "dense")
+    rp_dim = _rp_dim_for(args, spec)
     corpus_spec = scaled(spec.cfg["corpus"], n_docs=args.n_docs, culled=args.culled)
-    backend, _ = corpus_backend(corpus_spec, representation=rep)
-    medoid = rep == "sparse_medoid"
+    base_rep = "sparse_medoid" if rep == "rp" else rep
+    backend, _ = corpus_backend(corpus_spec, representation=base_rep)
+    projection = None
+    if rp_dim:
+        # Random Indexing routing (DESIGN.md §5.1): build/route in the
+        # projection, exact-rescore answers from the original backend rows
+        from repro.core.backend import make_projection
+
+        projection = make_projection(backend.dim, rp_dim, seed=args.rp_seed)
+        rep = f"rp{rp_dim}/{base_rep}"
+    medoid = base_rep == "sparse_medoid" and projection is None
 
     ckpt_file = (
         args.ckpt if not args.ckpt or args.ckpt.endswith(".npz")
         else args.ckpt + ".npz"
     )
     if ckpt_file and os.path.exists(ckpt_file):
+        from repro.ckpt import load_ktree_projection
+
         t0 = time.perf_counter()
         tree = restore_ktree(args.ckpt)
+        recorded = load_ktree_projection(args.ckpt)
+        if not args.rp_dim and projection is None and recorded is not None:
+            projection = recorded  # serve with the checkpointed projection
+        if projection is not None or recorded is not None:
+            # projection is part of the index identity: routing a tree built
+            # under one projection with a different matrix (or none) silently
+            # degrades every query — refuse, like a rewritten corpus
+            exp = projection.spec() if projection is not None else None
+            rec = recorded.spec() if recorded is not None else None
+            if exp != rec:
+                raise SystemExit(
+                    f"checkpoint {ckpt_file} records projection {rec} but "
+                    f"this serve run expects {exp}; match --rp-dim/--rp-seed "
+                    "to the checkpoint or rebuild with a fresh --ckpt path"
+                )
+            projection = recorded  # replayed bit-exactly from the stored seed
         # guard against serving an index built over a different corpus: doc
         # ids in the tree must address rows of *this* corpus
         max_doc = max(
             (int(np.asarray(tree.child[leaf, : int(tree.n_entries[leaf])]).max())
              for leaf in kt.leaf_nodes(tree)), default=-1,
         )
-        if tree.dim != backend.dim or max_doc >= corpus_spec.n_docs:
+        want_dim = projection.out_dim if projection is not None else backend.dim
+        if tree.dim != want_dim or max_doc >= corpus_spec.n_docs:
             raise SystemExit(
                 f"checkpoint {ckpt_file} does not match this corpus "
-                f"(tree dim={tree.dim} max doc id={max_doc} vs corpus "
-                f"dim={backend.dim} n_docs={corpus_spec.n_docs}); "
+                f"(tree dim={tree.dim} max doc id={max_doc} vs expected "
+                f"dim={want_dim} n_docs={corpus_spec.n_docs}); "
                 "rebuild with a fresh --ckpt path or matching --n-docs/--culled"
             )
         print(f"restored K-tree from {ckpt_file} in {time.perf_counter()-t0:.2f}s "
-              f"(depth={int(tree.depth)}, nodes={int(tree.n_nodes)})")
+              f"(depth={int(tree.depth)}, nodes={int(tree.n_nodes)}"
+              + (f", projection seed={projection.seed} "
+                 f"{projection.in_dim}→{projection.out_dim}"
+                 if projection is not None else "") + ")")
     else:
+        from repro.core.backend import RandomProjBackend
+
+        build_be = (
+            backend if projection is None
+            else RandomProjBackend.wrap(backend, projection)
+        )
         t0 = time.perf_counter()
-        tree = kt.build(backend, order=args.order, medoid=medoid, batch_size=256)
+        tree = kt.build(build_be, order=args.order, medoid=medoid, batch_size=256)
         print(f"built K-tree over {args.n_docs} docs in {time.perf_counter()-t0:.2f}s "
               f"(depth={int(tree.depth)}, nodes={int(tree.n_nodes)})")
         if args.ckpt:
-            print(f"saved index to {save_ktree(args.ckpt, tree)}")
+            print(f"saved index to "
+                  f"{save_ktree(args.ckpt, tree, projection=projection)}")
 
     # batched queries: corpus documents queried back against the index
     nq = min(args.queries, corpus_spec.n_docs)
@@ -464,10 +545,11 @@ def serve_paper(args):
         mesh = make_serving_mesh(args.mesh)
         shards = backend.shard(mesh)  # rows placed across shards once
         mode = f"sharded×{args.mesh}"
-        search_fn = make_search_fn(tree, mesh=mesh, corpus=shards)
+        search_fn = make_search_fn(tree, mesh=mesh, corpus=shards,
+                                   rp=projection)
     else:
         mode = "single-device"
-        search_fn = make_search_fn(tree)
+        search_fn = make_search_fn(tree, rp=projection, rp_corpus=backend)
 
     def run(xq):
         return search_fn(xq, args.k, args.beam)
@@ -519,6 +601,16 @@ def main():
     ap.add_argument("--n-docs", type=int, default=2000)
     ap.add_argument("--culled", type=int, default=800)
     ap.add_argument("--order", type=int, default=16)
+    ap.add_argument("--rp-dim", type=int, default=0,
+                    help="Random Indexing routing (DESIGN.md §5.1): build and "
+                    "descend the K-tree in an N-dim seeded random projection, "
+                    "exact-rescoring answers from the original rows; 0 = "
+                    "exact routing (default; archs with representation='rp' "
+                    "fall back to their cfg rp_dim). Composes with --mesh/"
+                    "--store/--cache/--engine; not with --on-fault degrade")
+    ap.add_argument("--rp-seed", type=int, default=0,
+                    help="projection seed for --rp-dim — the whole index "
+                    "replays from it (checkpoints persist spec, not matrix)")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--beam", type=int, default=4)
     ap.add_argument("--queries", type=int, default=256)

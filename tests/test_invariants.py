@@ -205,3 +205,77 @@ def test_property_insertion_order_independence_of_legality(order, seed):
     kt.check_invariants(tree, n_docs=60)
     assign, nc = kt.extract_assignment(tree, 60)
     assert (assign >= 0).all() and nc >= 1
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(50, 110),    # initial corpus
+    st.integers(4, 9),       # order m
+    st.integers(1, 3),       # number of insert-into-store waves
+    st.booleans(),           # sparse (ELL) base?
+    st.sampled_from([3, 4, 6]),   # projection out_dim
+    st.integers(0, 9999),
+)
+def test_property_rp_store_interleavings_bitmatch_projected_shadow(
+        n, order, waves, sparse, rp_dim, seed):
+    """Random build/insert-into-store/query interleavings under a random
+    projection (DESIGN.md §5.1): after every wave the invariants must hold
+    over the RP tree, the tree must bit-match a shadow dense tree fed the
+    *projected rows themselves* (the RP tree is exactly the dense K-tree in
+    projected space — for streaming builds and inserts alike), and the
+    store-rescored answers must bit-match rescoring from an in-memory
+    materialisation of the identical store layout."""
+    import os
+    import tempfile
+
+    from repro.core.backend import (
+        backend_for_store_layout, backend_from_store, make_projection,
+        project_corpus,
+    )
+    from repro.core.query import topk_search
+    from repro.core.store import open_store, save_store
+
+    rng = np.random.default_rng(seed)
+    d = 7
+    x0 = _random_docs(rng, n, d, sparse)
+    data = csr_from_dense(x0) if sparse else jnp.asarray(x0)
+    path = os.path.join(tempfile.mkdtemp(prefix="ktree-rp-prop"), "corpus")
+    save_store(path, data, block_docs=32)
+    store = open_store(path, budget_bytes=1)
+    proj = make_projection(d, rp_dim, seed=seed % 100)
+    tree = kt.build_from_store(store, order=order, batch_size=32,
+                               key=jax.random.PRNGKey(seed),
+                               max_nodes=kt.suggested_max_nodes(n * 3, order),
+                               projection=proj)
+    shadow = kt.build(jnp.asarray(project_corpus(proj, store)),
+                      order=order, batch_size=32, key=jax.random.PRNGKey(seed),
+                      max_nodes=kt.suggested_max_nodes(n * 3, order))
+    assert tree.dim == rp_dim
+    assert_trees_equal(tree, shadow)
+    total = n
+    for w in range(waves):
+        b = int(rng.integers(5, 40))
+        xw = _random_docs(rng, b, d, sparse)
+        new = csr_from_dense(xw) if sparse else jnp.asarray(xw)
+        # normalise once into the store layout, then project — the exact
+        # projected rows both trees must see
+        be = backend_for_store_layout(store, new)
+        zw = jnp.asarray(project_corpus(proj, be))
+        key = jax.random.PRNGKey(seed + 100 + w)
+        tree = kt.insert_into_store(tree, store, new, key=key, projection=proj)
+        shadow = kt.insert(shadow, zw, np.arange(total, total + b), key=key)
+        total += b
+        kt.check_invariants(tree, n_docs=total)
+        assert_trees_equal(tree, shadow)
+        assert store.n_docs == total
+        # RP query rescored through the store == the same queries rescored
+        # from an in-memory backend of the identical grown layout
+        nq = min(16, total)
+        d_st, s_st = topk_search(tree, store.view(0, nq), k=3, beam=2,
+                                 rp=proj, rp_corpus=store)
+        mem = backend_from_store(store, np.arange(total))
+        d_mem, s_mem = topk_search(
+            shadow, backend_from_store(store, np.arange(nq)), k=3, beam=2,
+            rp=proj, rp_corpus=mem)
+        np.testing.assert_array_equal(d_st, d_mem)
+        np.testing.assert_array_equal(s_st, s_mem)

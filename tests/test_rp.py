@@ -1,0 +1,448 @@
+"""Random Indexing backend (DESIGN.md §5.1, arxiv 1001.0833): golden
+equivalence + replay battery.
+
+The RP pipeline is approximate-route, exact-rescore, so the suite pins
+exactly which stages are bit-exact:
+
+- the projection matrix replays bit-identically from its (seed, dims, kind)
+  spec — the whole index is reconstructible from the checkpointed spec;
+- an RP tree bit-matches the shadow dense tree built from the same projected
+  rows (build, streaming build, and insert);
+- the rescore stage IS ``brute_force_topk_dist`` restricted to each query's
+  leaf candidate pool — bit-exact, over dense and ELL bases, on the
+  single-device, store-backed, sharded, and cached serving paths;
+- the identity-kind projection at rp_dim = d recovers the exact path's
+  answers (the equivalence anchor);
+- only pool *membership* is approximate, and its recall@10 on the clustered
+  fixture corpus beats documented floors that grow with rp_dim.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from fixtures import assert_trees_equal, clustered_corpus, random_corpus
+from repro.core import ktree as kt
+from repro.core.backend import (
+    DenseBackend,
+    ProjectionMismatch,
+    RandomProjBackend,
+    RandomProjection,
+    make_backend,
+    make_projection,
+    project_corpus,
+    projection_from_spec,
+)
+from repro.core.query import (
+    AnswerCache,
+    brute_force_topk,
+    brute_force_topk_dist,
+    recall_at_k,
+    rp_candidate_pools,
+    topk_search,
+    topk_search_cached,
+)
+from repro.sparse.csr import csr_from_dense
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+_TESTS = os.path.abspath(os.path.dirname(__file__))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_jit_caches_after_module():
+    """This file compiles many one-off shapes (d=512 builds, per-dim RP
+    trees); drop them from the process-wide executable cache afterwards so
+    the rest of the suite runs against the same compiler state as before
+    this file existed."""
+    yield
+    jax.clear_caches()
+
+
+def _corpus(sparse, n=180, d=24, seed=0):
+    rng = np.random.default_rng(seed)
+    x = random_corpus(rng, n=n, d=d, sparse=sparse)
+    return x, (csr_from_dense(x) if sparse else jnp.asarray(x))
+
+
+def _rp_case(sparse, rp_dim=8, seed=3, n=180, d=24, order=6):
+    x, data = _corpus(sparse, n=n, d=d)
+    proj = make_projection(d, rp_dim, seed=seed)
+    rpb = RandomProjBackend.wrap(data, proj)
+    tree = kt.build(rpb, order=order, batch_size=32, key=jax.random.PRNGKey(1))
+    return x, data, proj, rpb, tree
+
+
+# --------------------------------------------------------------- projection
+
+def test_projection_replays_bit_exact_from_spec():
+    """Same spec → bit-identical matrix, for every projection kind — the
+    property that lets checkpoints persist the spec instead of the matrix."""
+    for kind, out_dim in [("gaussian", 8), ("ternary", 16), ("identity", 24)]:
+        proj = make_projection(24, out_dim, seed=11, kind=kind)
+        re = projection_from_spec(proj.spec())
+        assert re.spec() == proj.spec()
+        np.testing.assert_array_equal(
+            np.asarray(proj.matrix), np.asarray(re.matrix), err_msg=kind
+        )
+
+
+def test_projection_typed_errors():
+    with pytest.raises(ValueError, match="identity"):
+        make_projection(24, 8, kind="identity")
+    with pytest.raises(ValueError):
+        make_projection(24, 8, kind="banana")
+    with pytest.raises(ValueError):
+        make_projection(0, 8)
+    spec = make_projection(24, 8).spec()
+    with pytest.raises(ProjectionMismatch):
+        projection_from_spec({k: v for k, v in spec.items() if k != "seed"})
+    with pytest.raises(ProjectionMismatch):
+        projection_from_spec({**spec, "dtype": "float64"})
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "ell"])
+def test_rp_tree_bit_matches_shadow_dense_tree(sparse):
+    """Build over a RandomProjBackend ≡ build over a plain dense backend of
+    the same projected rows — the RP tree is exactly the dense K-tree in
+    projected space."""
+    x, data, proj, rpb, tree = _rp_case(sparse)
+    z = np.asarray(rpb.proj.x)
+    shadow = kt.build(jnp.asarray(z), order=6, batch_size=32,
+                      key=jax.random.PRNGKey(1))
+    assert tree.dim == proj.out_dim
+    assert_trees_equal(tree, shadow)
+    kt.check_invariants(tree, n_docs=x.shape[0])
+
+
+# ------------------------------------------------- golden pool equivalence
+
+def _pool_reference(x_q, cand, valid, x_all, k):
+    """Brute force restricted to each query's candidate pool — the reference
+    the rescore stage must match bit-for-bit."""
+    n = x_q.shape[0]
+    docs = np.full((n, k), -1, np.int32)
+    dist = np.full((n, k), np.inf, np.float32)
+    for i in range(n):
+        ids = np.unique(cand[i][valid[i]]).astype(np.int64)
+        if not ids.size:
+            continue
+        sel, d = brute_force_topk_dist(x_q[i : i + 1], x_all[ids], k)
+        kk = sel.shape[1]
+        docs[i, :kk] = ids[sel[0]]
+        dist[i, :kk] = np.maximum(d[0], 0.0).astype(np.float32)
+    return docs, dist
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "ell"])
+@pytest.mark.parametrize("chunk", [16, 512], ids=["multichunk", "onechunk"])
+def test_golden_rescore_equals_pool_restricted_brute_force(sparse, chunk):
+    """The tentpole claim: ``topk_search(..., rp=...)`` ≡ brute force over
+    each query's leaf candidate pool, bit-exact (ids AND distances), however
+    the queries are chunked."""
+    x, data, proj, rpb, tree = _rp_case(sparse)
+    q = x[:70]
+    docs, dist = topk_search(tree, q, k=5, beam=4, chunk=chunk, rp=rpb)
+    cand, valid, x_q = rp_candidate_pools(tree, q, rpb, beam=4, chunk=chunk)
+    np.testing.assert_array_equal(x_q, q.astype(np.float32))
+    ref_docs, ref_dist = _pool_reference(x_q, cand, valid, x, k=5)
+    np.testing.assert_array_equal(np.asarray(docs), ref_docs)
+    np.testing.assert_array_equal(np.asarray(dist), ref_dist)
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "ell"])
+def test_rp_store_backed_matches_in_memory(sparse, tmp_path):
+    """Store-backed RP (projection streamed off disk, rescore through
+    ``CorpusStore.take_rows``) is bit-identical to the in-memory pipeline:
+    same projected rows, same tree, same answers — for dense and ELL
+    stores, dense and store-view queries."""
+    from repro.core.store import open_store, save_store
+
+    x, data, proj, rpb, tree = _rp_case(sparse)
+    path = os.path.join(str(tmp_path), "store")
+    save_store(path, data, block_docs=64)
+    store = open_store(path, budget_bytes=1)  # one-block budget → evictions
+
+    rpb_st = RandomProjBackend.from_store(store, proj)
+    np.testing.assert_array_equal(
+        np.asarray(rpb.proj.x), np.asarray(rpb_st.proj.x)
+    )
+    tree_st = kt.build_from_store(store, order=6, batch_size=32,
+                                  key=jax.random.PRNGKey(1), projection=proj)
+    assert_trees_equal(tree, tree_st)
+
+    q = x[:40]
+    d_mem, s_mem = topk_search(tree, q, k=5, beam=4, chunk=16, rp=rpb)
+    d_st, s_st = topk_search(tree_st, q, k=5, beam=4, chunk=16,
+                             rp=proj, rp_corpus=store)
+    np.testing.assert_array_equal(d_mem, d_st)
+    np.testing.assert_array_equal(s_mem, s_st)
+    # store-view queries (out-of-core q) answer identically too
+    d_sv, s_sv = topk_search(tree_st, store.view(0, 40), k=5, beam=4,
+                             chunk=16, rp=proj, rp_corpus=store)
+    np.testing.assert_array_equal(d_mem, d_sv)
+    np.testing.assert_array_equal(s_mem, s_sv)
+
+
+def test_rp_cached_path_bit_identical_and_hits():
+    """``topk_search_cached(..., rp=...)``: the miss path computes through
+    the RP engine, the second pass serves from the cache — both bit-equal
+    the uncached call."""
+    x, data, proj, rpb, tree = _rp_case(False)
+    q = x[:30]
+    ref_d, ref_s = topk_search(tree, q, k=5, beam=4, rp=rpb)
+    cache = AnswerCache(64)
+    for _ in range(2):
+        d, s = topk_search_cached(tree, q, cache, k=5, beam=4, rp=rpb)
+        np.testing.assert_array_equal(d, np.asarray(ref_d))
+        np.testing.assert_array_equal(s, np.asarray(ref_s))
+    assert cache.stats["hits"] >= 30
+
+
+def test_rp_degrade_mode_refused():
+    x, data, proj, rpb, tree = _rp_case(False)
+    with pytest.raises(ValueError, match="degrade"):
+        topk_search(tree, x[:4], k=3, rp=rpb, on_fault="degrade")
+
+
+def test_rp_typed_resolution_errors():
+    x, data, proj, rpb, tree = _rp_case(False)
+    with pytest.raises(TypeError, match="rp must be"):
+        topk_search(tree, x[:4], k=3, rp="nope")
+    with pytest.raises(ValueError, match="rp_corpus"):
+        # a store-projected backend has no in-memory base to rescore from
+        bare = RandomProjBackend(proj=rpb.proj, projection=proj, base=None)
+        topk_search(tree, x[:4], k=3, rp=bare)
+    with pytest.raises(ProjectionMismatch, match="in_dim"):
+        topk_search(tree, x[:4, :10], k=3, rp=rpb)
+    wrong_tree = kt.build(jnp.asarray(x), order=6, batch_size=32,
+                          key=jax.random.PRNGKey(1))
+    with pytest.raises(ProjectionMismatch, match="tree dim"):
+        topk_search(wrong_tree, x[:4], k=3, rp=rpb)
+
+
+# ------------------------------------------------------------ sharded path
+
+_SHARDED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json, tempfile
+    sys.path.insert(0, {src!r})
+    sys.path.insert(0, {tests!r})
+    import numpy as np, jax, jax.numpy as jnp
+    from fixtures import clustered_corpus, sparsify
+    from repro.core import ktree as kt
+    from repro.core.backend import (
+        RandomProjBackend, make_backend, make_projection, shard_from_store,
+    )
+    from repro.core.query import topk_search, topk_search_sharded
+    from repro.core.store import open_store, save_store
+    from repro.sparse.csr import csr_from_dense
+
+    out = {{}}
+    rng = np.random.default_rng(0)
+    x = clustered_corpus(rng, n_clusters=5, per_cluster=60, d=24)
+    q = (x[:70] + 0.05 * rng.normal(0, 1, (70, 24))).astype(np.float32)
+    mesh = jax.make_mesh((8,), ("data",))
+    proj = make_projection(24, 8, seed=3)
+
+    def bitmatch(a, b):
+        return dict(docs=bool((np.asarray(a[0]) == np.asarray(b[0])).all()),
+                    dists=bool((np.asarray(a[1]) == np.asarray(b[1])).all()))
+
+    # dense base: in-memory shards
+    rpb = RandomProjBackend.wrap(x, proj)
+    tree = kt.build(rpb, order=8, batch_size=32, key=jax.random.PRNGKey(1))
+    single = topk_search(tree, q, k=10, beam=4, chunk=32, rp=rpb)
+    out["dense"] = bitmatch(single, topk_search_sharded(
+        mesh, tree, q, corpus=x, k=10, beam=4, chunk=32, rp=proj))
+
+    # ELL base: in-memory sparse shards
+    xs = sparsify(rng, x)
+    rpb_s = RandomProjBackend.wrap(csr_from_dense(xs), proj)
+    tree_s = kt.build(rpb_s, order=8, batch_size=32, key=jax.random.PRNGKey(1))
+    single_s = topk_search(tree_s, q, k=10, beam=4, chunk=32, rp=rpb_s)
+    out["ell"] = bitmatch(single_s, topk_search_sharded(
+        mesh, tree_s, q, corpus=csr_from_dense(xs), k=10, beam=4, chunk=32,
+        rp=proj))
+
+    # store-backed shards: rescore rows fetched through per-shard partition
+    # caches must still bit-match the in-memory answers
+    path = os.path.join(tempfile.mkdtemp(prefix="rp-shard"), "store")
+    save_store(path, csr_from_dense(xs), block_docs=64)
+    store = open_store(path, budget_bytes=1)
+    sshards = shard_from_store(mesh, store, budget_bytes=1)
+    out["store"] = bitmatch(single_s, topk_search_sharded(
+        mesh, tree_s, q, corpus=sshards, k=10, beam=4, chunk=32, rp=proj))
+    print("RESULT:" + json.dumps(out))
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def rp_sharded_results():
+    script = _SHARDED_SCRIPT.format(src=_SRC, tests=_TESTS)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+@pytest.mark.parametrize("case", ["dense", "ell", "store"])
+def test_rp_sharded_bit_identical_to_single_device(rp_sharded_results, case):
+    """Sharded RP answers are bit-identical to single-device RP — candidate
+    pools come from the same jitted descent and the rescore is the same
+    per-query brute-force call, wherever the rows are fetched from."""
+    r = rp_sharded_results[case]
+    assert r["docs"] and r["dists"], r
+
+
+# ------------------------------------------------------------- checkpoints
+
+def test_save_ktree_carries_projection(tmp_path):
+    from repro.ckpt import load_ktree_projection, restore_ktree, save_ktree
+
+    x, data, proj, rpb, tree = _rp_case(False)
+    path = os.path.join(str(tmp_path), "tree")
+    save_ktree(path, tree, projection=proj)
+    re_tree = restore_ktree(path)
+    re_proj = load_ktree_projection(path)
+    assert_trees_equal(tree, re_tree)
+    assert re_proj.spec() == proj.spec()
+    np.testing.assert_array_equal(
+        np.asarray(re_proj.matrix), np.asarray(proj.matrix)
+    )
+    # a snapshot without a projection reports none
+    plain = os.path.join(str(tmp_path), "plain")
+    save_ktree(plain, tree)
+    assert load_ktree_projection(plain) is None
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "ell"])
+def test_index_checkpoint_replay_cycle(sparse, tmp_path):
+    """The acceptance-criteria cycle: build → save_index → restore_index →
+    query replays bit-identically from the stored projection seed — the
+    restored projection is rebuilt from the spec, never copied."""
+    from repro.ckpt import restore_index, save_index
+    from repro.core.store import open_store, save_store
+
+    x, data, proj, rpb, tree0 = _rp_case(sparse)
+    spath = os.path.join(str(tmp_path), "store")
+    save_store(spath, data, block_docs=64)
+    store = open_store(spath)
+    tree = kt.build_from_store(store, order=6, batch_size=32,
+                               key=jax.random.PRNGKey(1), projection=proj)
+    q = x[:40]
+    ref = topk_search(tree, q, k=5, beam=4, chunk=16, rp=proj, rp_corpus=store)
+
+    ipath = os.path.join(str(tmp_path), "index")
+    save_index(ipath, tree, store, projection=proj)
+    re_tree, re_store, re_proj = restore_index(ipath, budget_bytes=1 << 20)
+    assert_trees_equal(tree, re_tree)
+    assert re_proj.spec() == proj.spec()
+    got = topk_search(re_tree, q, k=5, beam=4, chunk=16,
+                      rp=re_proj, rp_corpus=re_store)
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(got[1]))
+    # stating the matching expectation also restores
+    out = restore_index(ipath, projection=proj)
+    assert len(out) == 3 and out[2].spec() == proj.spec()
+
+
+def test_index_checkpoint_projection_mismatch_refused(tmp_path):
+    """Restoring against a different seed/dim — or expecting a projection a
+    plain checkpoint never recorded — raises the typed ``ProjectionMismatch``
+    instead of silently serving through the wrong matrix."""
+    from repro.ckpt import restore_index, save_index
+    from repro.core.store import open_store, save_store
+
+    x, data, proj, rpb, _ = _rp_case(False)
+    spath = os.path.join(str(tmp_path), "store")
+    save_store(spath, data, block_docs=64)
+    store = open_store(spath)
+    tree = kt.build_from_store(store, order=6, batch_size=32,
+                               key=jax.random.PRNGKey(1), projection=proj)
+    ipath = os.path.join(str(tmp_path), "index")
+    save_index(ipath, tree, store, projection=proj)
+
+    other_seed = make_projection(proj.in_dim, proj.out_dim, seed=proj.seed + 1)
+    with pytest.raises(ProjectionMismatch, match="expects"):
+        restore_index(ipath, projection=other_seed)
+    other_dim = make_projection(proj.in_dim, proj.out_dim * 2, seed=proj.seed)
+    with pytest.raises(ProjectionMismatch, match="expects"):
+        restore_index(ipath, projection=other_dim)
+
+    # exact-path checkpoint + RP expectation → refused, and vice versa the
+    # RP checkpoint restores only as a 3-tuple (never silently exact)
+    plain_tree = kt.build_from_store(store, order=6, batch_size=32,
+                                     key=jax.random.PRNGKey(1))
+    ppath = os.path.join(str(tmp_path), "plain_index")
+    save_index(ppath, plain_tree, store)
+    with pytest.raises(ProjectionMismatch, match="records no"):
+        restore_index(ppath, projection=proj)
+    assert len(restore_index(ppath)) == 2
+
+
+# ------------------------------------------------------ recall acceptance
+
+def test_recall_floors_and_identity_anchor():
+    """Documented recall floors on the clustered fixture corpus (d=512,
+    normalised rows, 64 perturbed queries, k=10, beam=4, seeds pinned —
+    deterministic on CPU):
+
+    - rp_dim=64  → recall@10 ≥ 0.40   (measured 0.50)
+    - rp_dim=256 → recall@10 ≥ 0.50   (measured 0.62)
+    - the exact dense path measures 0.64 here, so rp_dim=256 routes within
+      ~0.03 of exact while descending 2× narrower vectors;
+    - rp_dim=d with kind="identity" recovers the exact path: the tree
+      bit-matches the plain dense build and the answer ids are equal."""
+    rng = np.random.default_rng(0)
+    x = clustered_corpus(rng, n_clusters=6, per_cluster=50, d=512, spread=5.0)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    q = (x[:64] + 0.02 * rng.normal(0, 1, (64, 512))).astype(np.float32)
+    true = brute_force_topk(q, x, 10)
+
+    recalls = {}
+    for rd in (64, 256):
+        proj = make_projection(512, rd, seed=0)
+        rpb = RandomProjBackend.wrap(x, proj)
+        tree = kt.build(rpb, order=8, batch_size=32, key=jax.random.PRNGKey(1))
+        docs, _ = topk_search(tree, q, k=10, beam=4, rp=rpb)
+        recalls[rd] = recall_at_k(docs, true)
+    assert recalls[64] >= 0.40, recalls
+    assert recalls[256] >= 0.50, recalls
+    assert recalls[256] >= recalls[64], recalls
+
+    tree_exact = kt.build(jnp.asarray(x), order=8, batch_size=32,
+                          key=jax.random.PRNGKey(1))
+    docs_exact, _ = topk_search(tree_exact, jnp.asarray(q), k=10, beam=4)
+    ident = make_projection(512, 512, kind="identity")
+    rpb_i = RandomProjBackend.wrap(x, ident)
+    tree_i = kt.build(rpb_i, order=8, batch_size=32, key=jax.random.PRNGKey(1))
+    assert_trees_equal(tree_exact, tree_i)
+    docs_i, _ = topk_search(tree_i, q, k=10, beam=4, rp=rpb_i)
+    np.testing.assert_array_equal(np.asarray(docs_i), np.asarray(docs_exact))
+
+
+def test_project_corpus_streaming_matches_in_memory(tmp_path):
+    """The fixed PROJECT_CHUNK granularity makes the streamed (store) and
+    in-memory projections bit-identical — the invariant behind
+    ``from_store ≡ wrap``."""
+    from repro.core.store import open_store, save_store
+
+    x, data = _corpus(True, n=150, d=20)
+    proj = make_projection(20, 6, seed=9)
+    z_mem = project_corpus(proj, make_backend(data))
+    path = os.path.join(str(tmp_path), "store")
+    save_store(path, data, block_docs=32)
+    z_st = project_corpus(proj, open_store(path, budget_bytes=1), prefetch=2)
+    np.testing.assert_array_equal(z_mem, z_st)

@@ -36,6 +36,7 @@ COVERED_MODULES = (
     "repro.core.fsck",
     "repro.launch.engine",
     "repro.ckpt.checkpoint",
+    "repro.data.pipeline",
 )
 
 DOC_FILES = ("README.md", "DESIGN.md", "ROADMAP.md")
