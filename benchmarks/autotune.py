@@ -1,0 +1,198 @@
+"""Measured-overlap auto-tuner bench (DESIGN.md §11): sweep the three
+pipeline knobs per (block size, residency budget) cell and report what the
+tuner picks against the depth-1 synchronous baseline.
+
+For each (block_docs, budget fraction) cell the sweep:
+
+- writes the corpus to an on-disk block store and opens it under the budget;
+- runs ``core.autotune.autotune_store_search`` (``force=True`` — real
+  measurements, sidecar rewritten) over a small (pipeline, prefetch, chunk)
+  grid that always includes the synchronous baseline ``(1, 0, 512)``;
+- re-runs the probe queries under the **chosen** knobs with a
+  ``core.profile.Profiler`` attached and records the phase totals
+  (read / dispatch / compute seconds) plus the measured read∩compute
+  overlap fraction;
+- asserts the tuned answers are **bit-identical** to the in-memory answers
+  (the §9/§11 contract: knobs only reschedule work).
+
+The JSON blob (``--json BENCH_autotune.json``, archived by the ``autotune``
+CI job) carries per-cell ``{pipeline, prefetch, chunk, qps, baseline_qps,
+speedup, overlap_frac, phases}`` — the acceptance check is that at least one
+cell's chosen knobs beat the depth-1 sync baseline QPS.
+
+Run:  PYTHONPATH=src python benchmarks/autotune.py [--smoke] \
+          [--json BENCH_autotune.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def main(
+    n_docs: int = 4000,
+    culled: int = 800,
+    order: int = 16,
+    k: int = 10,
+    beam: int = 4,
+    block_sizes=(256, 1024),
+    budget_fractions=(0.1, 0.5),
+    pipelines=(1, 2, 4),
+    prefetches=(0, 2),
+    chunks=(256, 512),
+    n_queries: int = 512,
+    repeats: int = 2,
+    seed: int = 0,
+    store_dir: str | None = None,
+    json_path: str | None = None,
+):
+    """Run the sweep; returns ``(name, us_per_query, extra)`` CSV rows."""
+    from repro.core import ktree as kt
+    from repro.core.autotune import autotune_store_search, load_tuned
+    from repro.core.profile import Profiler
+    from repro.core.query import topk_search
+    from repro.core.store import open_store, save_store
+    from repro.data.synth_corpus import INEX_LIKE, scaled, prepared_corpus
+    from repro.sparse.csr import csr_to_dense
+
+    spec = scaled(INEX_LIKE, n_docs=n_docs, culled=culled)
+    m, _ = prepared_corpus(spec, seed=seed)
+    x_all = np.asarray(csr_to_dense(m))
+    nq = min(n_queries, n_docs)
+    base_dir = store_dir or tempfile.mkdtemp(prefix="autotune_")
+
+    key = jax.random.PRNGKey(seed)
+    tree = kt.build(jnp.asarray(x_all), order=order, batch_size=256, key=key)
+    x_q = jnp.asarray(x_all[:nq])
+    # in-memory reference answers: every tuned cell must reproduce them
+    d_ref, s_ref = topk_search(tree, x_q, k=k, beam=beam)
+
+    rows, blob = [], {
+        "n_docs": n_docs, "dim": x_all.shape[1], "k": k, "beam": beam,
+        "n_queries": nq, "grid": {
+            "pipelines": list(pipelines), "prefetches": list(prefetches),
+            "chunks": list(chunks),
+        },
+        "cells": {},
+    }
+
+    for block_docs in block_sizes:
+        path = os.path.join(base_dir, f"blk{block_docs}")
+        save_store(path, x_all, block_docs=block_docs)
+        corpus_bytes = open_store(path).nbytes
+
+        for frac in budget_fractions:
+            budget = max(int(corpus_bytes * frac), 1)
+            tag = f"blk{block_docs}_budget{int(frac * 100)}pct"
+            store = open_store(path, budget_bytes=budget)
+
+            t0 = time.perf_counter()
+            tuned = autotune_store_search(
+                tree, store, k=k, beam=beam, budget_bytes=budget,
+                pipelines=pipelines, prefetches=prefetches, chunks=chunks,
+                n_queries=nq, repeats=repeats, force=True,
+            )
+            sweep_s = time.perf_counter() - t0
+            # the decision round-trips through the sidecar it just wrote
+            # (float fields are rounded on disk; the knobs must be exact)
+            cached = load_tuned(store, budget_bytes=budget)
+            assert (cached.pipeline, cached.prefetch, cached.chunk) == (
+                tuned.pipeline, tuned.prefetch, tuned.chunk
+            )
+
+            # replay the probe under the chosen knobs with a profiler on:
+            # phase totals + the §9 bit-identity contract on real answers
+            store = open_store(path, budget_bytes=budget)
+            prof = Profiler()
+            store.cache.profiler = prof
+            q_view = store.view(0, nq)
+            t0 = time.perf_counter()
+            d_t, s_t = topk_search(
+                tree, q_view, k=k, beam=beam, tuned=tuned, profiler=prof,
+            )
+            tuned_wall = time.perf_counter() - t0
+            np.testing.assert_array_equal(np.asarray(d_ref), d_t)
+            np.testing.assert_array_equal(np.asarray(s_ref), s_t)
+
+            totals = prof.totals()
+            phases = {
+                name: round(agg["seconds"], 6)
+                for name, agg in sorted(totals.items())
+            }
+            speedup = tuned.qps / max(tuned.baseline_qps, 1e-9)
+            rows.append((
+                f"autotune_{tag}", tuned_wall / nq * 1e6,
+                f"pipeline={tuned.pipeline} prefetch={tuned.prefetch} "
+                f"chunk={tuned.chunk} qps={tuned.qps:.0f} "
+                f"vs_sync={speedup:.2f}x "
+                f"overlap={tuned.overlap_frac:.2f} exact=yes",
+            ))
+            blob["cells"][tag] = {
+                "pipeline": tuned.pipeline, "prefetch": tuned.prefetch,
+                "chunk": tuned.chunk, "qps": tuned.qps,
+                "baseline_qps": tuned.baseline_qps, "speedup": speedup,
+                "overlap_frac": tuned.overlap_frac,
+                "budget_bytes": budget, "corpus_bytes": corpus_bytes,
+                "sweep_seconds": sweep_s, "phases": phases,
+            }
+
+    beats = [t for t, c in blob["cells"].items() if c["speedup"] > 1.0]
+    rows.append((
+        "autotune_cells_beating_sync", float(len(beats)),
+        f"{len(beats)}/{len(blob['cells'])} cells beat the depth-1 "
+        f"sync baseline",
+    ))
+    blob["cells_beating_sync"] = beats
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+        rows.append(("autotune_bench_json", 0.0, f"wrote {json_path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=4000)
+    ap.add_argument("--culled", type=int, default=800)
+    ap.add_argument("--order", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--beam", type=int, default=4)
+    ap.add_argument("--blocks", type=int, nargs="+", default=[256, 1024])
+    ap.add_argument("--budgets", type=float, nargs="+", default=[0.1, 0.5])
+    ap.add_argument("--pipelines", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--prefetches", type=int, nargs="+", default=[0, 2])
+    ap.add_argument("--chunks", type=int, nargs="+", default=[256, 512])
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--store-dir", default="", help="keep stores here "
+                    "(default: a fresh temp dir)")
+    ap.add_argument("--json", default="", help="write BENCH_autotune.json here")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run: tiny corpus, tight budgets, short grid",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.docs, args.culled, args.order = 600, 250, 10
+        args.blocks, args.budgets = [64, 256], [0.05, 0.5]
+        args.pipelines, args.prefetches = [1, 2], [0, 2]
+        args.chunks = [128, 512]
+        args.queries, args.repeats = 256, 2
+    for name, us, extra in main(
+        n_docs=args.docs, culled=args.culled, order=args.order, k=args.k,
+        beam=args.beam, block_sizes=tuple(args.blocks),
+        budget_fractions=tuple(args.budgets),
+        pipelines=tuple(args.pipelines), prefetches=tuple(args.prefetches),
+        chunks=tuple(args.chunks), n_queries=args.queries,
+        repeats=args.repeats, store_dir=args.store_dir or None,
+        json_path=args.json or None,
+    ):
+        print(f"{name},{us:.1f},{extra}")

@@ -96,10 +96,13 @@ def run_corpus(name: str, spec, orders: List[int], seed: int = 0,
 
 def main(scale_docs: int = 4000, culled: int = 1000, orders=(8, 16, 32, 64)):
     print(HEADER)
+    out = [HEADER]
     for name, base in [("inex", INEX_LIKE), ("rcv1", RCV1_LIKE)]:
         spec = scaled(base, n_docs=scale_docs, culled=culled)
         for row in run_corpus(name, spec, list(orders)):
             print(row, flush=True)
+            out.append(row)
+    return out
 
 
 if __name__ == "__main__":

@@ -1,0 +1,336 @@
+"""Measured-overlap auto-tuner for the three pipeline knobs (DESIGN.md §11).
+
+The store-backed serving paths expose three overlap knobs that were always
+hand-tuned magic numbers: query ``pipeline=`` (dispatch-ahead depth),
+store ``prefetch=`` (async reader-thread depth), and the query ``chunk``
+size. This module replaces them with a measured decision, the way
+sglang-jax's ``profile_dma_compute.py`` sweeps DMA buffer depths:
+
+1. **sweep** — run a short probe workload (store-backed ``topk_search``
+   over the first rows of the corpus) for every candidate
+   ``(pipeline, prefetch, chunk)`` with a :class:`repro.core.profile.Profiler`
+   attached, recording wall time and the *measured* read∩compute overlap;
+2. **choose** — :func:`choose_knobs` picks the highest-QPS cell (ties
+   break toward more measured overlap, then shallower depths), and keeps
+   the depth-1 synchronous baseline when nothing beats it;
+3. **cache** — the winner lands in a ``TUNE.json`` sidecar next to the
+   store's blocks, keyed by the store's ``manifest_hash`` + layout +
+   residency budget + backend — any manifest rotation (append, repair,
+   regeneration) invalidates the whole sidecar.
+
+Consumption: ``topk_search`` / ``topk_search_sharded`` /
+``build_from_store`` / ``make_search_fn`` accept ``tuned=`` (a
+:class:`TunedKnobs`) and resolve their knob defaults through
+:func:`resolve_knobs` — **explicit knob values always win** over tuned
+ones, and tuned values only ever change scheduling, never numerics, so
+answers stay bit-identical (pinned in tests/test_autotune.py).
+``serve.py --store --autotune`` wires the whole loop end to end.
+
+Determinism: the sweep's measurement seam is injectable (``runner=``), so
+the same store + the same synthetic timings produce byte-identical
+``TUNE.json`` files — the sidecar carries no timestamps or host state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core.profile import Profiler
+
+TUNE_NAME = "TUNE.json"
+TUNE_VERSION = 1
+
+# repo-wide knob defaults (the values the un-tuned signatures used to
+# hardcode) — resolve_knobs falls back here when neither an explicit value
+# nor a tuned one is given
+DEFAULT_CHUNK = 512
+DEFAULT_PIPELINE = 2
+DEFAULT_PREFETCH = 0
+
+# default sweep grid: small on purpose — 12 cells of a short probe workload
+DEFAULT_PIPELINES = (1, 2, 4)
+DEFAULT_PREFETCHES = (0, 2)
+DEFAULT_CHUNKS = (256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedKnobs:
+    """One tuner decision: the three knob values plus the measurements that
+    justified them. ``qps``/``baseline_qps`` are the probe workload's
+    queries/s for the chosen cell and for the depth-1 synchronous baseline
+    ``(pipeline=1, prefetch=0, chunk=DEFAULT_CHUNK)``; ``overlap_frac`` is
+    measured read∩compute wall overlap as a fraction of the cell's total
+    read time (0 = fully serialised, →1 = reads fully hidden)."""
+
+    pipeline: int
+    prefetch: int
+    chunk: int
+    qps: float = 0.0
+    baseline_qps: float = 0.0
+    overlap_frac: float = 0.0
+
+    def to_dict(self) -> dict:
+        """JSON-ready form (rounded so sidecars are replay-stable)."""
+        return {
+            "pipeline": int(self.pipeline),
+            "prefetch": int(self.prefetch),
+            "chunk": int(self.chunk),
+            "qps": round(float(self.qps), 3),
+            "baseline_qps": round(float(self.baseline_qps), 3),
+            "overlap_frac": round(float(self.overlap_frac), 4),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedKnobs":
+        """Inverse of :meth:`to_dict` (sidecar load)."""
+        return cls(
+            pipeline=int(d["pipeline"]), prefetch=int(d["prefetch"]),
+            chunk=int(d["chunk"]), qps=float(d.get("qps", 0.0)),
+            baseline_qps=float(d.get("baseline_qps", 0.0)),
+            overlap_frac=float(d.get("overlap_frac", 0.0)),
+        )
+
+
+def resolve_knobs(
+    tuned: Optional[TunedKnobs],
+    chunk: Optional[int] = None,
+    pipeline: Optional[int] = None,
+    prefetch: Optional[int] = None,
+) -> Tuple[int, int, int]:
+    """Resolve the three knobs into concrete ints: an **explicitly passed
+    value always wins**; ``None`` falls back to the tuned value, and with no
+    tuner decision either, to the repo defaults (512 / 2 / 0) the untuned
+    signatures always used. Returns ``(chunk, pipeline, prefetch)``."""
+    if chunk is None:
+        chunk = tuned.chunk if tuned is not None else DEFAULT_CHUNK
+    if pipeline is None:
+        pipeline = tuned.pipeline if tuned is not None else DEFAULT_PIPELINE
+    if prefetch is None:
+        prefetch = tuned.prefetch if tuned is not None else DEFAULT_PREFETCH
+    return int(chunk), int(pipeline), int(prefetch)
+
+
+def _store_of(store):
+    """Unwrap a StoreSlice to its backing CorpusStore (sidecars live next
+    to the blocks)."""
+    return getattr(store, "store", store)
+
+
+def layout_tag(store) -> str:
+    """The store-layout half of a tune key: block kind + rows per block.
+
+    The residency budget and backend complete the key (:func:`tune_key`);
+    content identity rides the sidecar-level ``manifest_hash``, so a layout
+    tag never needs to hash rows itself."""
+    s = _store_of(store)
+    return f"{s.kind}-blk{int(s.block_docs)}"
+
+
+def tune_key(store, budget_bytes: Optional[int] = None,
+             backend: str = "exact") -> str:
+    """Sidecar entry key for one ``(store layout, budget, backend)`` tuple.
+
+    ``budget_bytes`` defaults to the store's current cache budget;
+    ``backend`` names the query route (``"exact"``, ``"rp<out_dim>"``, …) —
+    the RP route's extra rescore stage can want different depths than the
+    exact route over the same blocks."""
+    s = _store_of(store)
+    if budget_bytes is None:
+        budget_bytes = s.cache.budget_bytes
+    return f"{layout_tag(store)}:budget{int(budget_bytes)}:{backend}"
+
+
+def sidecar_path(store) -> str:
+    """Where the store's ``TUNE.json`` lives (inside the block directory)."""
+    return os.path.join(_store_of(store).path, TUNE_NAME)
+
+
+def save_tuned(store, knobs: TunedKnobs, budget_bytes: Optional[int] = None,
+               backend: str = "exact") -> str:
+    """Write (merge) one decision into the store's ``TUNE.json`` sidecar.
+
+    The sidecar records the store's ``manifest_hash`` at write time; a
+    sidecar whose recorded hash no longer matches is stale in its entirety
+    (the blocks changed under it) and is overwritten, not merged. Returns
+    the sidecar path. Output is byte-deterministic for identical inputs
+    (sorted keys, no timestamps) — the determinism test relies on it."""
+    s = _store_of(store)
+    path = sidecar_path(store)
+    blob = {"version": TUNE_VERSION, "manifest_hash": s.manifest_hash,
+            "entries": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if (prev.get("version") == TUNE_VERSION
+                    and prev.get("manifest_hash") == s.manifest_hash):
+                blob["entries"] = dict(prev.get("entries", {}))
+        except (OSError, ValueError):
+            pass  # unreadable sidecar: rewrite from scratch
+    blob["entries"][tune_key(store, budget_bytes, backend)] = knobs.to_dict()
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def load_tuned(store, budget_bytes: Optional[int] = None,
+               backend: str = "exact") -> Optional[TunedKnobs]:
+    """Read the cached decision for this ``(layout, budget, backend)`` key.
+
+    Returns ``None`` when there is no sidecar, no matching entry, the file
+    is unreadable, **or the store's ``manifest_hash`` has rotated** since
+    the sidecar was written (append / fsck-repair / in-place regeneration)
+    — a stale depth choice is harmless, but a stale *measurement* must
+    never look authoritative."""
+    path = sidecar_path(store)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if blob.get("version") != TUNE_VERSION:
+        return None
+    if blob.get("manifest_hash") != _store_of(store).manifest_hash:
+        return None
+    entry = blob.get("entries", {}).get(
+        tune_key(store, budget_bytes, backend)
+    )
+    if entry is None:
+        return None
+    try:
+        return TunedKnobs.from_dict(entry)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def choose_knobs(
+    cells: Dict[Tuple[int, int, int], Tuple[float, float]],
+    baseline: Tuple[int, int, int],
+    n_queries: int,
+) -> TunedKnobs:
+    """The tuner's decision rule, as a pure function of measurements.
+
+    ``cells`` maps ``(pipeline, prefetch, chunk)`` → ``(wall_s,
+    overlap_frac)`` for every swept cell (the baseline must be one of
+    them); ``n_queries`` converts wall time to QPS. Ranking: highest QPS
+    wins; ties (exact, after float division) break toward **more measured
+    overlap** — the knob setting that demonstrably hides its reads — then
+    toward the shallowest ``(pipeline, prefetch, chunk)`` so we never pay
+    queue depth that buys nothing. A cell that cannot beat the baseline's
+    QPS loses to it (the baseline participates on equal terms), so the
+    tuner degrades to the synchronous schedule rather than pessimising."""
+    if baseline not in cells:
+        raise ValueError(f"sweep must include the baseline cell {baseline}")
+
+    def rank(item):
+        (pipeline, prefetch, chunk), (wall_s, overlap) = item
+        qps = n_queries / max(wall_s, 1e-12)
+        return (-qps, -overlap, pipeline, prefetch, chunk)
+
+    (pipeline, prefetch, chunk), (wall_s, overlap) = min(
+        cells.items(), key=rank
+    )
+    base_wall, _ = cells[baseline]
+    return TunedKnobs(
+        pipeline=pipeline, prefetch=prefetch, chunk=chunk,
+        qps=n_queries / max(wall_s, 1e-12),
+        baseline_qps=n_queries / max(base_wall, 1e-12),
+        overlap_frac=overlap,
+    )
+
+
+def measure_cell(
+    tree, store, pipeline: int, prefetch: int, chunk: int,
+    k: int = 10, beam: int = 4, n_queries: int = 128, repeats: int = 1,
+    rp=None, rp_corpus=None,
+    clock: Callable[[], float] = time.perf_counter,
+) -> Tuple[float, float]:
+    """Measure one sweep cell: run the probe workload (store-backed
+    ``topk_search`` over the store's first ``n_queries`` rows) under a
+    profiler and return ``(best wall_s over repeats, overlap_frac)``.
+
+    ``overlap_frac`` is measured read∩compute wall overlap divided by total
+    read time (see :meth:`repro.core.profile.Profiler.overlap_seconds`);
+    best-of-``repeats`` wall time is the noise-robust choice for short
+    probes (the same convention as benchmarks/query_throughput.py)."""
+    from repro.core.query import topk_search
+
+    s = _store_of(store)
+    nq = min(int(n_queries), s.n_docs)
+    q_view = s.view(0, nq)
+    best_wall, overlap = float("inf"), 0.0
+    for _ in range(max(int(repeats), 1)):
+        prof = Profiler(clock=clock)
+        t0 = clock()
+        topk_search(
+            tree, q_view, k=k, beam=beam, chunk=chunk, pipeline=pipeline,
+            prefetch=prefetch, rp=rp, rp_corpus=rp_corpus, profiler=prof,
+        )
+        wall = clock() - t0
+        if wall < best_wall:
+            best_wall = wall
+            read_s = prof.totals().get("read", {}).get("seconds", 0.0)
+            overlap = (
+                prof.overlap_seconds("read", "compute") / read_s
+                if read_s > 0 else 0.0
+            )
+    return best_wall, overlap
+
+
+def autotune_store_search(
+    tree, store, *,
+    k: int = 10, beam: int = 4,
+    budget_bytes: Optional[int] = None, backend: str = "exact",
+    pipelines: Sequence[int] = DEFAULT_PIPELINES,
+    prefetches: Sequence[int] = DEFAULT_PREFETCHES,
+    chunks: Sequence[int] = DEFAULT_CHUNKS,
+    n_queries: int = 128, repeats: int = 2,
+    rp=None, rp_corpus=None,
+    runner: Optional[Callable[[int, int, int], Tuple[float, float]]] = None,
+    sidecar: bool = True, force: bool = False,
+    clock: Callable[[], float] = time.perf_counter,
+) -> TunedKnobs:
+    """Tune ``(pipeline, prefetch, chunk)`` for one (store layout, budget,
+    backend) tuple, consulting/maintaining the ``TUNE.json`` sidecar.
+
+    Flow: unless ``force``, a valid cached decision for :func:`tune_key` is
+    returned straight from the sidecar. Otherwise every grid cell — plus
+    the depth-1 synchronous baseline ``(1, 0, DEFAULT_CHUNK)`` — is
+    measured with :func:`measure_cell` (or the injectable ``runner(pipeline,
+    prefetch, chunk) → (wall_s, overlap_frac)``, the determinism-test /
+    synthetic-timing seam), :func:`choose_knobs` picks, and the winner is
+    written back (``sidecar=False`` skips persistence, e.g. for read-only
+    store dirs). Depths never change numerics, so tuning is always
+    answer-safe; only scheduling differs."""
+    if not force:
+        cached = load_tuned(store, budget_bytes, backend)
+        if cached is not None:
+            return cached
+    if runner is None:
+        def runner(pipeline, prefetch, chunk):
+            return measure_cell(
+                tree, store, pipeline, prefetch, chunk, k=k, beam=beam,
+                n_queries=n_queries, repeats=repeats, rp=rp,
+                rp_corpus=rp_corpus, clock=clock,
+            )
+    baseline = (1, 0, DEFAULT_CHUNK)
+    grid = {baseline}
+    for pipeline in pipelines:
+        for prefetch in prefetches:
+            for chunk in chunks:
+                grid.add((int(pipeline), int(prefetch), int(chunk)))
+    cells = {
+        cell: runner(*cell) for cell in sorted(grid)
+    }
+    nq = min(int(n_queries), _store_of(store).n_docs)
+    knobs = choose_knobs(cells, baseline, nq)
+    if sidecar:
+        save_tuned(store, knobs, budget_bytes, backend)
+    return knobs

@@ -76,6 +76,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.autotune import resolve_knobs
+from repro.core.profile import NULL_PROFILER
 from repro.core.query import (
     AnswerCache,
     cache_fill,
@@ -278,8 +280,10 @@ def pow2_pad_rows(x: np.ndarray, to: Optional[int] = None) -> Tuple[np.ndarray, 
 
 
 def make_search_fn(
-    tree, *, mesh=None, corpus=None, chunk: int = 512, pipeline: int = 2,
-    prefetch: int = 0, on_fault: Optional[str] = None, rp=None, rp_corpus=None,
+    tree, *, mesh=None, corpus=None, chunk: Optional[int] = None,
+    pipeline: Optional[int] = None, prefetch: Optional[int] = None,
+    on_fault: Optional[str] = None, rp=None, rp_corpus=None, tuned=None,
+    profiler=None,
 ) -> Callable[..., Tuple[np.ndarray, np.ndarray]]:
     """Adapt the offline engines to the ``search_fn(x, k, beam,
     chunk_rows=None)`` signature :class:`ServingEngine` dispatches through.
@@ -305,11 +309,23 @@ def make_search_fn(
     ``rp``/``rp_corpus`` (DESIGN.md §5.1): a random-projection routing spec
     forwarded verbatim to the offline engines — the tree descends in the
     projected space, answers are exact-rescored from ``rp_corpus`` (or the
-    RP backend's base). Incompatible with ``on_fault="degrade"``."""
+    RP backend's base). Incompatible with ``on_fault="degrade"``.
+
+    Knob resolution (DESIGN.md §11): ``chunk``/``pipeline``/``prefetch``
+    left ``None`` resolve through ``tuned=`` (a ``core.autotune.TunedKnobs``,
+    e.g. loaded from the store's ``TUNE.json`` sidecar) then the repo
+    defaults — resolved eagerly so ``fn.chunk`` is always a concrete int.
+    ``profiler=`` (a ``core.profile.Profiler``) is forwarded to every
+    offline-engine call; answers are unaffected."""
+    chunk, pipeline, prefetch = resolve_knobs(
+        tuned, chunk=chunk, pipeline=pipeline, prefetch=prefetch,
+    )
     kw = {} if on_fault is None else {"on_fault": on_fault}
     if rp is not None:
         kw["rp"] = rp
         kw["rp_corpus"] = rp_corpus
+    if profiler is not None:
+        kw["profiler"] = profiler
     if mesh is None:
         def fn(x, k, beam, chunk_rows=None):
             return topk_search(
@@ -320,9 +336,12 @@ def make_search_fn(
         def fn(x, k, beam, chunk_rows=None):
             return topk_search_sharded(
                 mesh, tree, x, corpus=corpus, k=k, beam=beam,
-                chunk=chunk_rows or chunk, **kw,
+                chunk=chunk_rows or chunk, pipeline=pipeline,
+                prefetch=prefetch, **kw,
             )
     fn.chunk = chunk
+    fn.pipeline = pipeline
+    fn.prefetch = prefetch
     fn.on_fault = on_fault
     return fn
 
@@ -354,6 +373,10 @@ class ServingEngine:
       largest per-batch disk working set.
     - ``clock`` — monotonic time source shared with the
       :class:`LatencyRecorder` (fake-clock seam for tests).
+    - ``profiler`` — optional ``repro.core.profile.Profiler`` (DESIGN.md
+      §11): records one ``"engine_batch"`` span per dispatched batch and one
+      ``"engine_call"`` span per offline-engine call inside it; the default
+      ``NULL_PROFILER`` is free.
     - ``request_timeout_s`` — engine-wide per-request time budget (admit →
       answer), enforced by the watchdog thread: an overdue request — still
       queued *or* in flight behind a wedged ``search_fn`` — is failed with
@@ -380,6 +403,7 @@ class ServingEngine:
         corpus_token: Optional[str] = None,
         block_caches: Sequence = (),
         clock: Callable[[], float] = time.perf_counter,
+        profiler=NULL_PROFILER,
     ):
         if row_budget < 1 or max_queue < 1:
             raise ValueError(
@@ -411,6 +435,7 @@ class ServingEngine:
             None if request_timeout_s is None else float(request_timeout_s)
         )
         self.cache = cache
+        self.profiler = profiler
         self.block_caches = tuple(block_caches)
         if cache is not None:
             cache.bind(tree, corpus_token)
@@ -634,10 +659,11 @@ class ServingEngine:
         engines (``on_fault="degrade"``) return a third
         :class:`repro.core.faults.FaultReport` element; plain engines get
         ``report=None``."""
-        if chunk_rows is not None and self._accepts_chunk:
-            out = self.search_fn(x, k, beam, chunk_rows=chunk_rows)
-        else:
-            out = self.search_fn(x, k, beam)
+        with self.profiler.span("engine_call"):
+            if chunk_rows is not None and self._accepts_chunk:
+                out = self.search_fn(x, k, beam, chunk_rows=chunk_rows)
+            else:
+                out = self.search_fn(x, k, beam)
         if len(out) == 3:
             docs, dist, report = out
         else:
@@ -715,6 +741,8 @@ class ServingEngine:
         for c in self.block_caches:
             c.reset_peak()
         n_frags = 0
+        batch_span = self.profiler.span("engine_batch")
+        batch_span.__enter__()
         try:
             for (k, beam, bucket), group in self._fragments(batch).items():
                 n_frags += 1
@@ -748,6 +776,7 @@ class ServingEngine:
                     with self._cv:
                         self._failed += 1
         finally:
+            batch_span.__exit__(None, None, None)
             store_peak = sum(
                 int(c.peak_resident_bytes) for c in self.block_caches
             )

@@ -41,8 +41,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autotune import resolve_knobs
 from repro.core.backend import VectorBackend, make_backend
 from repro.core.kmeans import kmeans
+from repro.core.profile import NULL_PROFILER
 
 
 @jax.tree_util.register_dataclass
@@ -662,8 +664,10 @@ def build_from_store(
     batch_size: int = 256,
     medoid: bool = False,
     max_nodes: Optional[int] = None,
-    prefetch: int = 0,
+    prefetch: Optional[int] = None,
     projection=None,
+    tuned=None,
+    profiler=NULL_PROFILER,
 ) -> KTree:
     """Streaming out-of-core build: insert an on-disk corpus batch-by-batch
     (paper §1: "this tree structure allows for efficient disk based
@@ -695,9 +699,16 @@ def build_from_store(
     resident, which is the RI premise) and the build runs entirely in the
     projected space. Bit-identical to ``build(RandomProjBackend.wrap(corpus,
     projection), ...)`` over the same corpus, by the shared fixed projection
-    granularity."""
+    granularity.
+
+    ``prefetch=None`` resolves through ``tuned=`` (a ``TunedKnobs`` from the
+    store's ``TUNE.json`` sidecar, DESIGN.md §11) and then the repo default
+    0 — explicit values win, and the knob never changes the tree.
+    ``profiler=`` records one ``"read"`` span per batch fetch and one
+    ``"insert"`` span per batch's insert waves."""
     from repro.core.backend import RandomProjBackend, backend_from_rows
 
+    _, _, prefetch = resolve_knobs(tuned, prefetch=prefetch)
     if projection is not None:
         be = RandomProjBackend.from_store(store, projection, prefetch=prefetch)
         return build(
@@ -719,7 +730,8 @@ def build_from_store(
 
     def fetch(ids_np):
         # padding rows fetch corpus row 0, exactly like build's safe gather
-        return store.take_rows(np.where(ids_np >= 0, ids_np, 0))
+        with profiler.span("read"):
+            return store.take_rows(np.where(ids_np >= 0, ids_np, 0))
 
     import contextlib
 
@@ -739,14 +751,15 @@ def build_from_store(
             rows = jnp.arange(batch_size, dtype=jnp.int32)
             doc_ids = jnp.asarray(ids_np)
             valid_np = ids_np >= 0
-            while valid_np.any():
-                levels = int(tree.depth) - 1
-                tree, accepted = _insert_wave(
-                    tree, be, rows, doc_ids, jnp.asarray(valid_np),
-                    jnp.int32(levels), max_levels=_levels_bucket(levels),
-                )
-                valid_np &= ~np.asarray(accepted)
-                tree, key = _split_all_overflowing(tree, key)
+            with profiler.span("insert"):
+                while valid_np.any():
+                    levels = int(tree.depth) - 1
+                    tree, accepted = _insert_wave(
+                        tree, be, rows, doc_ids, jnp.asarray(valid_np),
+                        jnp.int32(levels), max_levels=_levels_bucket(levels),
+                    )
+                    valid_np &= ~np.asarray(accepted)
+                    tree, key = _split_all_overflowing(tree, key)
     return tree
 
 

@@ -62,6 +62,7 @@ import collections
 import functools
 import hashlib
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -85,10 +86,12 @@ from repro.core.backend import (
     make_backend,
     shard_from_store,
 )
+from repro.core.autotune import resolve_knobs
 from repro.core.faults import FaultReport
 from repro.core.ktree import (
     KTree, _levels_bucket, chunked_query_rows, leaf_nodes, padded_chunk_rows,
 )
+from repro.core.profile import NULL_PROFILER
 from repro.core.store import check_on_fault
 from repro.kernels.ref import topk_from_dist, topk_merge_ref
 
@@ -188,7 +191,8 @@ def _beam_search(
     return docs.astype(jnp.int32), dist
 
 
-def _pipeline_chunks(chunks, pipeline: int, dispatch, docs_out, dist_out):
+def _pipeline_chunks(chunks, pipeline: int, dispatch, docs_out, dist_out,
+                     prof=NULL_PROFILER):
     """Dispatch-ahead chunk loop (DESIGN.md §8): keep up to ``pipeline`` chunks
     in flight, copying out the oldest only once newer chunks are already
     dispatched — device compute overlaps the host-blocking D2H fetch instead of
@@ -199,25 +203,34 @@ def _pipeline_chunks(chunks, pipeline: int, dispatch, docs_out, dist_out):
     returns the chunk's in-flight device result. For store-backed queries the
     payload carries the chunk's global row ids and ``dispatch`` starts with a
     disk read — the same schedule then overlaps chunk i+1's block fetch with
-    chunk i's device compute (DESIGN.md §9)."""
+    chunk i's device compute (DESIGN.md §9).
+
+    ``prof`` (a ``repro.core.profile.Profiler``, DESIGN.md §11) records one
+    ``"dispatch"`` span per chunk (H2D staging + jit dispatch) and one
+    ``"compute"`` span per drain (the blocking device_get: device compute +
+    D2H); the store iterator's ``"read"`` spans complete the picture."""
     depth = max(int(pipeline), 1)
     pending = collections.deque()
 
     def drain_one():
         rows_np, fut = pending.popleft()
-        docs, dist = jax.device_get(fut)
+        with prof.span("compute"):
+            docs, dist = jax.device_get(fut)
         docs_out[rows_np] = docs[: rows_np.size]
         dist_out[rows_np] = dist[: rows_np.size]
 
     for rows_np, payload in chunks:
-        pending.append((rows_np, dispatch(payload)))
+        with prof.span("dispatch"):
+            fut = dispatch(payload)
+        pending.append((rows_np, fut))
         while len(pending) >= depth:
             drain_one()
     while pending:
         drain_one()
 
 
-def _store_chunk_iter(store, n: int, chunk: int, prefetch: int, dropped=None):
+def _store_chunk_iter(store, n: int, chunk: int, prefetch: int, dropped=None,
+                      prof=NULL_PROFILER):
     """Yield ``(rows_np, fetched row arrays)`` per padded query chunk of a
     store source. ``prefetch=0``: the disk read happens inline, right before
     the chunk is dispatched (the §8 dispatch-ahead pipeline then overlaps it
@@ -229,13 +242,19 @@ def _store_chunk_iter(store, n: int, chunk: int, prefetch: int, dropped=None):
     ``dropped`` (degrade mode, DESIGN.md §10): a list that collects the
     global query-row ids whose store blocks were unreadable after retries —
     those rows are zero-filled in the yielded arrays and the caller must
-    flag their answers (−1, +inf)."""
+    flag their answers (−1, +inf).
+
+    ``prof`` records one ``"read"`` span per chunk fetch — on the consumer
+    thread when ``prefetch=0``, on the reader thread when ≥ 1, so
+    ``prof.overlap_seconds("read", "compute")`` measures whether the
+    prefetch depth actually bought overlap (DESIGN.md §11)."""
 
     def fetch(req):
         rows_np, padded = req
-        if dropped is None:
-            return store.take_rows(padded)
-        got, ok = store.take_rows_masked(padded)
+        with prof.span("read"):
+            if dropped is None:
+                return store.take_rows(padded)
+            got, ok = store.take_rows_masked(padded)
         if not ok.all():
             # padded[:rows_np.size] == rows_np (padding repeats the last row)
             dropped.extend(int(r) for r in rows_np[~ok[: rows_np.size]])
@@ -255,9 +274,10 @@ def _store_chunk_iter(store, n: int, chunk: int, prefetch: int, dropped=None):
 
 
 def topk_search(
-    tree: KTree, q, k: int = 10, beam: int = 4, chunk: int = 512,
-    pipeline: int = 2, prefetch: int = 0, on_fault: str = "raise",
-    rp=None, rp_corpus=None,
+    tree: KTree, q, k: int = 10, beam: int = 4, chunk: Optional[int] = None,
+    pipeline: Optional[int] = None, prefetch: Optional[int] = None,
+    on_fault: str = "raise", rp=None, rp_corpus=None, tuned=None,
+    profiler=NULL_PROFILER,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k ANN document search with beam-width recall control.
 
@@ -292,9 +312,21 @@ def topk_search(
     in-memory base; pass the ``CorpusStore`` for an out-of-core base). The
     rescore is bit-identical to :func:`brute_force_topk_dist` restricted to
     each query's pool (it *is* that call); only the pool membership is
-    approximate. Not composable with ``on_fault="degrade"`` yet."""
+    approximate. Not composable with ``on_fault="degrade"`` yet.
+
+    Knob resolution (DESIGN.md §11): ``chunk``/``pipeline``/``prefetch``
+    left as ``None`` fall back to ``tuned=`` (a ``TunedKnobs`` from
+    ``core/autotune.py``, typically loaded from the store's ``TUNE.json``
+    sidecar) and then to the repo defaults (512 / 2 / 0) — explicit values
+    always win, and since the knobs only reschedule work the answers are
+    bit-identical whichever way they resolve. ``profiler=`` (a
+    ``core.profile.Profiler``) records per-chunk "read"/"dispatch"/"compute"
+    spans; the default ``NULL_PROFILER`` is free."""
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
+    chunk, pipeline, prefetch = resolve_knobs(
+        tuned, chunk=chunk, pipeline=pipeline, prefetch=prefetch,
+    )
     check_on_fault(on_fault)
     if rp is not None:
         if on_fault != "raise":
@@ -304,7 +336,7 @@ def topk_search(
         projection, src = _resolve_rp(rp, rp_corpus)
         return _topk_search_rp(
             tree, q, projection, src, k=k, beam=beam, chunk=chunk,
-            pipeline=pipeline, prefetch=prefetch,
+            pipeline=pipeline, prefetch=prefetch, prof=profiler,
         )
     store = q if is_store(q) else None
     degrade = on_fault == "degrade"
@@ -339,7 +371,9 @@ def topk_search(
                 max_levels=max_levels, beam=beam, k=k,
             )
 
-        chunks = _store_chunk_iter(store, n, chunk, prefetch, dropped)
+        chunks = _store_chunk_iter(
+            store, n, chunk, prefetch, dropped, prof=profiler,
+        )
     else:
         def dispatch(rows):
             return _beam_search(
@@ -349,7 +383,8 @@ def topk_search(
 
         chunks = chunked_query_rows(n, chunk)
 
-    _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out)
+    _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out,
+                     prof=profiler)
     if degrade:
         rows_lost = tuple(sorted(set(dropped))) if dropped else ()
         if rows_lost:
@@ -573,7 +608,8 @@ def _get_store_merge_fn(mesh, kind: str, k: int):
 
 def _topk_search_sharded_store(
     mesh, tree: KTree, q, sshards: StoreDocShards, k: int, beam: int,
-    chunk: int, on_fault: str = "raise",
+    chunk: int, on_fault: str = "raise", prefetch: int = 0,
+    prof=NULL_PROFILER,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Shard-parallel top-k over a disk-backed corpus (DESIGN.md §9): per
     chunk, the jitted descent yields the beam candidate set, each shard's
@@ -586,7 +622,13 @@ def _topk_search_sharded_store(
     candidates (their docs score +inf, exactly as if no shard owned them) and
     unreadable *query* rows (flagged (−1, +inf)); surviving answers are
     bit-identical to a reference search over the surviving corpus subset.
-    Returns a third :class:`repro.core.faults.FaultReport` element."""
+    Returns a third :class:`repro.core.faults.FaultReport` element.
+
+    ``prefetch ≥ 1`` moves store *query*-row reads onto a Prefetcher reader
+    thread (the corpus-candidate fetches stay demand-driven — they depend on
+    each chunk's descent); ``prof`` records "read" spans per query-chunk
+    fetch, "dispatch" around the jitted descent, and "compute" around the
+    host-sync pool fetch + shard-map merge (DESIGN.md §11)."""
     degrade = on_fault == "degrade"
     store_q = q if is_store(q) else None
     qbe = None if store_q is not None else make_backend(q)
@@ -613,32 +655,42 @@ def _topk_search_sharded_store(
     if n == 0:
         return (docs_out, dist_out, _report()) if degrade \
             else (docs_out, dist_out)
-    for rows_np, padded in padded_chunk_rows(n, chunk):
-        if store_q is not None:
-            if degrade:
-                got, ok = store_q.take_rows_masked(padded)
-                if not ok.all():
-                    rows_lost.update(int(r) for r in padded[~ok])
+    if store_q is not None:
+        dropped_q: list = []
+
+        def chunk_backends():
+            for rows_np, got in _store_chunk_iter(
+                store_q, n, chunk, prefetch,
+                dropped_q if degrade else None, prof=prof,
+            ):
                 qbe_c = backend_from_rows(store_q, got)
-            else:
-                qbe_c = backend_from_store(store_q, padded)
-            rows = jnp.arange(padded.size, dtype=jnp.int32)
-        else:
-            qbe_c = qbe
-            rows = jnp.asarray(padded.astype(np.int32))
-        cand, valid, xq, q_sq = _chunk_candidates_jit(
-            tree, qbe_c, rows, jnp.int32(levels),
-            max_levels=max_levels, beam=beam,
-        )
-        # host sync: the candidate ids drive this chunk's disk fetches
-        pools, pool_idx, owned, dropped_ids = sshards.chunk_pools(
-            np.asarray(cand), np.asarray(valid), on_fault=on_fault
-        )
-        if dropped_ids.size:
-            docs_lost.update(int(i) for i in dropped_ids)
-        ids, dist = merge_fn(pools, pool_idx, owned, xq, q_sq, cand, valid)
-        docs_out[rows_np] = np.asarray(ids)[: rows_np.size]
-        dist_out[rows_np] = np.asarray(dist)[: rows_np.size]
+                rows = jnp.arange(qbe_c.n_docs, dtype=jnp.int32)
+                yield rows_np, qbe_c, rows
+    else:
+        def chunk_backends():
+            for rows_np, padded in padded_chunk_rows(n, chunk):
+                yield rows_np, qbe, jnp.asarray(padded.astype(np.int32))
+
+    for rows_np, qbe_c, rows in chunk_backends():
+        with prof.span("dispatch"):
+            cand, valid, xq, q_sq = _chunk_candidates_jit(
+                tree, qbe_c, rows, jnp.int32(levels),
+                max_levels=max_levels, beam=beam,
+            )
+        with prof.span("compute"):
+            # host sync: the candidate ids drive this chunk's disk fetches
+            pools, pool_idx, owned, dropped_ids = sshards.chunk_pools(
+                np.asarray(cand), np.asarray(valid), on_fault=on_fault
+            )
+            if dropped_ids.size:
+                docs_lost.update(int(i) for i in dropped_ids)
+            ids, dist = merge_fn(
+                pools, pool_idx, owned, xq, q_sq, cand, valid
+            )
+            docs_out[rows_np] = np.asarray(ids)[: rows_np.size]
+            dist_out[rows_np] = np.asarray(dist)[: rows_np.size]
+    if store_q is not None and dropped_q:
+        rows_lost.update(dropped_q)
     if degrade:
         if rows_lost:
             idx = np.asarray(sorted(rows_lost), np.int64)
@@ -658,8 +710,9 @@ def shard_corpus(mesh, corpus, axes=None) -> DocShards:
 
 def topk_search_sharded(
     mesh, tree: KTree, q, corpus=None, k: int = 10, beam: int = 4,
-    chunk: int = 512, pipeline: int = 2, on_fault: str = "raise",
-    rp=None, rp_corpus=None,
+    chunk: Optional[int] = None, pipeline: Optional[int] = None,
+    prefetch: Optional[int] = None, on_fault: str = "raise",
+    rp=None, rp_corpus=None, tuned=None, profiler=NULL_PROFILER,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Shard-parallel top-k search: same answers as :func:`topk_search`, with
     the corpus row-sharded over ``mesh``'s data axes (DESIGN.md §8).
@@ -706,9 +759,19 @@ def topk_search_sharded(
     and the rescore is the same per-query ``brute_force_topk_dist`` call —
     so sharded RP answers are bit-identical to single-device RP answers by
     construction. Not composable with ``on_fault="degrade"`` yet.
+
+    ``prefetch ≥ 1`` (store query sources and the RP route) moves the disk
+    reads onto a ``store.Prefetcher`` reader thread, exactly as in
+    :func:`topk_search` — answers unchanged. ``chunk``/``pipeline``/
+    ``prefetch`` left ``None`` resolve through ``tuned=`` then the repo
+    defaults (DESIGN.md §11); ``profiler=`` records the same
+    "read"/"dispatch"/"compute" spans as the single-device path.
     """
     if k < 1 or beam < 1:
         raise ValueError(f"k and beam must be ≥ 1, got k={k} beam={beam}")
+    chunk, pipeline, prefetch = resolve_knobs(
+        tuned, chunk=chunk, pipeline=pipeline, prefetch=prefetch,
+    )
     check_on_fault(on_fault)
     if rp is not None:
         if on_fault != "raise":
@@ -720,7 +783,7 @@ def topk_search_sharded(
         )
         return _topk_search_rp(
             tree, q, projection, src, k=k, beam=beam, chunk=chunk,
-            pipeline=pipeline, prefetch=0,
+            pipeline=pipeline, prefetch=prefetch, prof=profiler,
         )
     degrade = on_fault == "degrade"
     store_q = q if is_store(q) else None
@@ -742,7 +805,7 @@ def topk_search_sharded(
             )
         return _topk_search_sharded_store(
             mesh, tree, q, sshards, k=k, beam=beam, chunk=chunk,
-            on_fault=on_fault,
+            on_fault=on_fault, prefetch=prefetch, prof=profiler,
         )
     fresh = not isinstance(corpus, (DenseDocShards, EllDocShards))
     shards = shard_corpus(mesh, corpus_from_tree(tree) if corpus is None else corpus)
@@ -779,27 +842,29 @@ def topk_search_sharded(
 
     if store_q is not None:
         # store-sourced queries: fetch each chunk's rows from the block cache
-        # and descend a chunk-sized backend, exactly like topk_search's §9 path
-        def dispatch(padded_np):
-            if degrade:
-                got, ok = store_q.take_rows_masked(padded_np)
-                if not ok.all():
-                    rows_lost.update(int(r) for r in padded_np[~ok])
-                qbe_c = backend_from_rows(store_q, got)
-            else:
-                qbe_c = backend_from_store(store_q, padded_np)
-            rows = jnp.arange(padded_np.size, dtype=jnp.int32)
+        # (inline, or on a Prefetcher reader thread when prefetch ≥ 1) and
+        # descend a chunk-sized backend, exactly like topk_search's §9 path
+        dropped_q: Optional[list] = [] if degrade else None
+
+        def dispatch(got):
+            qbe_c = backend_from_rows(store_q, got)
+            rows = jnp.arange(qbe_c.n_docs, dtype=jnp.int32)
             return fn(tree, qbe_c, rows, jnp.int32(levels), shards)
 
-        chunks = padded_chunk_rows(n, chunk)
+        chunks = _store_chunk_iter(
+            store_q, n, chunk, prefetch, dropped_q, prof=profiler,
+        )
     else:
         def dispatch(rows):
             return fn(tree, qbe, rows, jnp.int32(levels), shards)
 
         chunks = chunked_query_rows(n, chunk)
 
-    _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out)
+    _pipeline_chunks(chunks, pipeline, dispatch, docs_out, dist_out,
+                     prof=profiler)
     if degrade:
+        if store_q is not None and dropped_q:
+            rows_lost.update(dropped_q)
         if rows_lost:
             idx = np.asarray(sorted(rows_lost), np.int64)
             docs_out[idx] = -1
@@ -935,6 +1000,7 @@ def _rp_row_fetcher(src, in_dim: int):
 
 def _rescore_pool_chunk(
     x_q: np.ndarray, cand: np.ndarray, valid: np.ndarray, fetch_rows, k: int,
+    prefetched=None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact rescore of one chunk's leaf candidate pools.
 
@@ -945,14 +1011,22 @@ def _rescore_pool_chunk(
     tests make the same call). The union of the chunk's candidates is
     fetched once (one store round-trip per chunk); per-query rows are host
     gathers from that union. Distances clamp at 0 like every exact-path
-    leaf distance."""
+    leaf distance.
+
+    ``prefetched=(union, rows_u)`` hands in that union fetch done ahead of
+    time (the ``prefetch ≥ 1`` rescore read-ahead in :func:`_topk_search_rp`)
+    — the caller computed ``union`` by the exact expression below, so the
+    ranking is bit-identical either way."""
     b = x_q.shape[0]
     docs = np.full((b, k), -1, np.int32)
     dist = np.full((b, k), np.inf, np.float32)
     if not valid.any():
         return docs, dist
-    union = np.unique(cand[valid]).astype(np.int64)
-    rows_u = fetch_rows(union)
+    if prefetched is not None:
+        union, rows_u = prefetched
+    else:
+        union = np.unique(cand[valid]).astype(np.int64)
+        rows_u = fetch_rows(union)
     for i in range(b):
         ids_i = np.unique(cand[i][valid[i]]).astype(np.int64)
         if not ids_i.size:
@@ -1045,7 +1119,7 @@ def _rp_chunk_candidates(
 
 def _topk_search_rp(
     tree: KTree, q, projection: RandomProjection, src, k: int, beam: int,
-    chunk: int, pipeline: int, prefetch: int,
+    chunk: int, pipeline: int, prefetch: int, prof=NULL_PROFILER,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """The RP serving path: projected beam descent + exact host rescore.
 
@@ -1053,7 +1127,15 @@ def _topk_search_rp(
     side runs the host rescore (a disk fetch + numpy ranking) instead of a
     plain D2H copy-out, so device descent of chunk i+1 overlaps chunk i's
     rescore. Every answer row depends only on its own query row and pool,
-    so engine batching/caching compose exactly as for the exact path."""
+    so engine batching/caching compose exactly as for the exact path.
+
+    ``prefetch ≥ 1`` applies at *both* disk seams: the store query-source
+    reads move onto a ``store.Prefetcher`` reader thread (descent source),
+    and the rescore's per-chunk candidate-union fetch moves onto a
+    single-worker read-ahead executor so chunk i+1's rescore rows load
+    while chunk i is still ranking. The union is computed by the same
+    expression :func:`_rescore_pool_chunk` would use, so answers stay
+    bit-identical (pinned in tests/test_rp.py)."""
     store_q = q if is_store(q) else None
     qbe = None if store_q is not None else make_backend(q)
     q_src = store_q if store_q is not None else qbe
@@ -1066,7 +1148,13 @@ def _topk_search_rp(
             f"tree dim {tree.dim} != projection out_dim {projection.out_dim} "
             "(was the tree built under a different projection?)"
         )
-    fetch_rows = _rp_row_fetcher(src, projection.in_dim)
+    fetch_raw = _rp_row_fetcher(src, projection.in_dim)
+    if prof.enabled:
+        def fetch_rows(ids):
+            with prof.span("read"):
+                return fetch_raw(ids)
+    else:
+        fetch_rows = fetch_raw
     levels = int(tree.depth) - 1
     max_levels = _levels_bucket(levels)
     n = q_src.n_docs
@@ -1083,7 +1171,7 @@ def _topk_search_rp(
                 tree, projection, qbe_c, rows, levels, max_levels, beam
             )
 
-        chunks = _store_chunk_iter(store_q, n, chunk, prefetch)
+        chunks = _store_chunk_iter(store_q, n, chunk, prefetch, prof=prof)
     else:
         def dispatch(rows):
             return _rp_chunk_candidates(
@@ -1094,23 +1182,60 @@ def _topk_search_rp(
 
     depth = max(int(pipeline), 1)
     pending = collections.deque()
+    ready = collections.deque()
+    # rescore read-ahead (prefetch ≥ 1): a single-worker executor fetches
+    # chunk i+1's candidate-union rows while chunk i's rescore is ranking
+    executor = (
+        ThreadPoolExecutor(max_workers=1) if int(prefetch or 0) >= 1
+        else None
+    )
 
-    def drain_one():
+    def harvest_one():
+        # device→host sync of the oldest in-flight descent; with the
+        # executor, also kick off its rescore union fetch in the background
         rows_np, (xq, cand, valid) = pending.popleft()
         b = rows_np.size
-        d, s = _rescore_pool_chunk(
-            np.asarray(xq)[:b].astype(np.float32, copy=False),
-            np.asarray(cand)[:b], np.asarray(valid)[:b], fetch_rows, k,
-        )
+        with prof.span("compute"):
+            xq_np = np.asarray(xq)[:b].astype(np.float32, copy=False)
+            cand_np = np.asarray(cand)[:b]
+            valid_np = np.asarray(valid)[:b]
+        pre = None
+        if executor is not None and valid_np.any():
+            # exact expression _rescore_pool_chunk would use → bit-identical
+            union = np.unique(cand_np[valid_np]).astype(np.int64)
+            pre = (union, executor.submit(fetch_rows, union))
+        ready.append((rows_np, xq_np, cand_np, valid_np, pre))
+
+    def rank_one():
+        rows_np, xq_np, cand_np, valid_np, pre = ready.popleft()
+        prefetched = None
+        if pre is not None:
+            union, fut = pre
+            prefetched = (union, fut.result())
+        with prof.span("compute"):
+            d, s = _rescore_pool_chunk(
+                xq_np, cand_np, valid_np, fetch_rows, k,
+                prefetched=prefetched,
+            )
         docs_out[rows_np] = d
         dist_out[rows_np] = s
 
-    for rows_np, payload in chunks:
-        pending.append((rows_np, dispatch(payload)))
-        while len(pending) >= depth:
-            drain_one()
-    while pending:
-        drain_one()
+    try:
+        for rows_np, payload in chunks:
+            with prof.span("dispatch"):
+                fut = dispatch(payload)
+            pending.append((rows_np, fut))
+            while len(pending) >= depth:
+                harvest_one()
+            while len(ready) >= 2:
+                rank_one()
+        while pending:
+            harvest_one()
+        while ready:
+            rank_one()
+    finally:
+        if executor is not None:
+            executor.shutdown(wait=True)
     return docs_out, dist_out
 
 

@@ -61,11 +61,13 @@ import queue
 import shutil
 import threading
 import time
+import weakref
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.faults import _coin
+from repro.core.profile import NULL_PROFILER
 
 MANIFEST_NAME = "manifest.json"
 FORMAT_TAG = "ktree-store-v1"
@@ -161,7 +163,14 @@ class BlockCache:
     one-block residency floor) stays exact under concurrency. Disk decode
     happens inside the lock: concurrent readers of one store serialise on I/O
     rather than double-loading a block and double-counting its bytes.
+
+    Profiling (DESIGN.md §11): set ``cache.profiler`` to a
+    ``repro.core.profile.Profiler`` and every cache-miss decode records a
+    ``"disk_read"`` span (on whichever thread missed). The default
+    ``NULL_PROFILER`` costs one truthiness check per miss.
     """
+
+    _instances: "weakref.WeakSet" = weakref.WeakSet()
 
     def __init__(self, budget_bytes: int, loader):
         if budget_bytes < 1:
@@ -173,6 +182,7 @@ class BlockCache:
         self._bytes = 0
         self._peak = 0
         self._lock = threading.Lock()
+        self.profiler = NULL_PROFILER
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -182,6 +192,7 @@ class BlockCache:
         self.read_errors = 0
         self.verify_failures = 0
         self.quarantined = 0
+        BlockCache._instances.add(self)
 
     @staticmethod
     def _block_bytes(arrays: Dict[str, np.ndarray]) -> int:
@@ -197,7 +208,11 @@ class BlockCache:
                 self._lru.append(block_id)
                 return self._blocks[block_id]
             self.misses += 1
-            arrays = self._loader(block_id)
+            if self.profiler.enabled:
+                with self.profiler.span("disk_read"):
+                    arrays = self._loader(block_id)
+            else:
+                arrays = self._loader(block_id)
             self._bytes += self._block_bytes(arrays)
             self._peak = max(self._peak, self._bytes)
             self._blocks[block_id] = arrays
@@ -238,6 +253,32 @@ class BlockCache:
             self._peak = self._bytes
             return prev
 
+    def reset_stats(self) -> None:
+        """Zero every counter (hits/misses/evictions + hardened-read) and
+        restart peak tracking at current residency — resident blocks stay.
+        Benchmark legs call this between sweeps so hit-rate/residency
+        numbers don't bleed across cells (benchmarks/run.py)."""
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+            self.read_retries = 0
+            self.read_errors = 0
+            self.verify_failures = 0
+            self.quarantined = 0
+            self._peak = self._bytes
+
+    @classmethod
+    def reset_all_stats(cls) -> int:
+        """Call :meth:`reset_stats` on every live cache (a weakref registry
+        tracks them); returns how many were reset. The between-legs seam for
+        ``benchmarks/run.py`` — legs build their own stores, so the runner
+        can't enumerate the caches itself."""
+        caches = list(cls._instances)
+        for c in caches:
+            c.reset_stats()
+        return len(caches)
+
     @property
     def stats(self) -> dict:
         """hit/miss/eviction counters + residency for reports."""
@@ -273,16 +314,22 @@ class Prefetcher:
     result order is preserved across restarts, so consumers stay
     bit-identical. Use as a context manager (or call :meth:`close`) to stop
     the worker early; exhausting the iterator joins it automatically.
+
+    ``profiler=`` (DESIGN.md §11) records one ``"read"`` span per fetch on
+    the reader thread — pass it when the ``fetch`` callable isn't already
+    instrumented (``query._store_chunk_iter`` wraps its own fetch, so it
+    leaves this at the free ``NULL_PROFILER`` default).
     """
 
     _DONE = object()
     _ERR = object()
 
     def __init__(self, requests: Iterable, fetch: Callable, depth: int = 1,
-                 max_restarts: int = 2):
+                 max_restarts: int = 2, profiler=NULL_PROFILER):
         if depth < 1:
             raise ValueError(f"prefetch depth must be ≥ 1, got {depth}")
         self.depth = int(depth)
+        self.profiler = profiler
         self.max_restarts = int(max_restarts)
         self.restarts = 0
         self._results: "queue.Queue" = queue.Queue(maxsize=self.depth)
@@ -298,7 +345,9 @@ class Prefetcher:
         """Fetch one request and hand the result to the consumer queue."""
         self._inflight_req = req
         self._have_inflight = True
-        item = (req, self._fetch(req))
+        with self.profiler.span("read"):
+            got = self._fetch(req)
+        item = (req, got)
         self._have_inflight = False
         while not self._stop.is_set():
             try:

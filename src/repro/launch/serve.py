@@ -106,8 +106,19 @@ def serve_paper_store(args):
     ``--engine`` composes with all of it: the store-backed (and sharded)
     search fn is handed to the continuous-batching ``ServingEngine``
     (DESIGN.md §8.1), whose per-batch report includes peak store residency
-    from the shards' block caches."""
+    from the shards' block caches.
+
+    ``--autotune`` (DESIGN.md §11) measures-and-picks the three overlap
+    knobs — query ``pipeline``, store ``prefetch``, ``chunk`` — for this
+    (store layout, budget, backend) tuple, caching the decision in the
+    store's ``TUNE.json`` sidecar; without the flag a valid sidecar entry is
+    still consumed. Explicit ``--prefetch`` always wins, and tuned answers
+    are bit-identical to the untuned ones (checked against the depth-1
+    synchronous baseline every ``--autotune`` run)."""
     from repro.core import ktree as kt
+    from repro.core.autotune import (
+        autotune_store_search, load_tuned, sidecar_path,
+    )
     from repro.core.engine import make_search_fn
     from repro.core.query import (
         AnswerCache, brute_force_topk_stream, recall_at_k, topk_search_cached,
@@ -167,6 +178,10 @@ def serve_paper_store(args):
             store, order=args.order,
             medoid=rep == "sparse_medoid" and projection is None,
             batch_size=256, prefetch=args.prefetch, projection=projection,
+            # a prior sidecar decision feeds the build's prefetch when
+            # --prefetch isn't explicit (build reads sequentially too)
+            tuned=load_tuned(store, budget_bytes=budget,
+                             backend=_backend_tag(projection)),
         )
         print(f"streaming-built K-tree over {store.n_docs} docs in "
               f"{time.perf_counter()-t0:.2f}s (depth={int(tree.depth)}, "
@@ -194,6 +209,26 @@ def serve_paper_store(args):
             "routing (--rp-dim): the exact-rescore stage needs every "
             "candidate row readable; drop one of the two"
         )
+    backend_tag = _backend_tag(projection)
+    rp_kw = dict(rp=projection, rp_corpus=store if projection is not None
+                 else None)
+    if args.autotune:
+        t0 = time.perf_counter()
+        tuned = autotune_store_search(
+            tree, store, k=args.k, beam=args.beam, budget_bytes=budget,
+            backend=backend_tag, n_queries=nq, **rp_kw,
+        )
+        src = f"measured in {time.perf_counter() - t0:.2f}s"
+    else:
+        tuned = load_tuned(store, budget_bytes=budget, backend=backend_tag)
+        src = "from sidecar"
+    if tuned is not None:
+        print(f"autotune: pipeline={tuned.pipeline} "
+              f"prefetch={tuned.prefetch} chunk={tuned.chunk} "
+              f"({tuned.qps:.0f} QPS vs depth-1 baseline "
+              f"{tuned.baseline_qps:.0f}, read∩compute "
+              f"{tuned.overlap_frac:.0%}; {src}, "
+              f"sidecar {sidecar_path(store)})")
     if args.mesh > 1:
         # store-backed sharded serving: the corpus stays on disk — each mesh
         # shard fetches only the candidates it owns through its own block
@@ -207,7 +242,8 @@ def serve_paper_store(args):
         )
         mode = f"sharded×{args.mesh}"
         search_fn = make_search_fn(
-            tree, mesh=mesh, corpus=sshards, on_fault=on_fault, rp=projection
+            tree, mesh=mesh, corpus=sshards, on_fault=on_fault, rp=projection,
+            prefetch=args.prefetch, tuned=tuned,
         )
         block_caches = [p.store.cache for p in sshards.parts]
     else:
@@ -215,7 +251,7 @@ def serve_paper_store(args):
         mode = "single-device"
         search_fn = make_search_fn(
             tree, prefetch=args.prefetch, on_fault=on_fault,
-            rp=projection, rp_corpus=store,
+            rp=projection, rp_corpus=store, tuned=tuned,
         )
         block_caches = [store.cache]
     if projection is not None:
@@ -253,6 +289,24 @@ def serve_paper_store(args):
             print(f"DEGRADED answers: quarantined blocks "
                   f"{list(rep.quarantined_blocks)}, "
                   f"{len(rep.dropped_query_rows)} query rows dropped")
+        if tuned is not None and on_fault is None:
+            # knobs only reschedule work — pin it by re-answering with the
+            # depth-1 synchronous schedule and explicit default chunking
+            from repro.core.query import topk_search
+
+            b_docs, b_dist = topk_search(
+                tree, q_view, k=args.k, beam=args.beam,
+                chunk=512, pipeline=1, prefetch=0, **rp_kw,
+            )
+            ok = bool(np.array_equal(np.asarray(docs), b_docs)
+                      and np.array_equal(np.asarray(out[1]), b_dist))
+            print("tuned answers vs depth-1 sync baseline: "
+                  + ("bit-identical" if ok else "MISMATCH"))
+            if not ok:
+                raise SystemExit(
+                    "tuned knobs changed answers — depths must never "
+                    "change numerics"
+                )
 
     cs = store.cache.stats
     print(f"store cache: hit_rate={cs['hit_rate']:.2f} "
@@ -276,9 +330,13 @@ def serve_paper_store(args):
     # ground truth streams block-by-block off the store (never fully
     # resident); degrade mode skips quarantined/excised blocks, so the
     # reference covers exactly the corpus the degraded index can answer from
+    gt_prefetch = (
+        args.prefetch if args.prefetch is not None
+        else (tuned.prefetch if tuned is not None else 0)
+    )
     true = brute_force_topk_stream(
         x_q,
-        _dense_store_blocks(store, prefetch=args.prefetch,
+        _dense_store_blocks(store, prefetch=gt_prefetch,
                             on_fault=on_fault or "raise"),
         args.k,
     )
@@ -374,6 +432,13 @@ def serve_engine_mode(args, search_fn, x_q, tree, mode,
           + ("bit-identical" if ok else "MISMATCH"))
     if not ok:
         raise SystemExit("engine answers diverged from the offline engine")
+
+
+def _backend_tag(projection) -> str:
+    """The backend half of a ``core.autotune.tune_key``: ``"exact"`` for
+    direct routing, ``"rp<out_dim>"`` for random-projection routing (the RP
+    route's extra rescore stage can want different depths)."""
+    return "exact" if projection is None else f"rp{projection.out_dim}"
 
 
 def _rp_dim_for(args, spec) -> int:
@@ -631,12 +696,20 @@ def main():
                     "(with --mesh N: split evenly into N per-shard caches)")
     ap.add_argument("--block-docs", type=int, default=1024,
                     help="rows per store block (the disk I/O granule)")
-    ap.add_argument("--prefetch", type=int, default=0,
+    ap.add_argument("--prefetch", type=int, default=None,
                     help="async block-prefetch depth for --store (reader "
                     "thread ahead of the sequential disk scans: streaming "
-                    "build, single-device queries, ground truth; 0 = "
-                    "synchronous). Sharded queries (--mesh) fetch candidates "
-                    "on demand per chunk and are unaffected")
+                    "build, single-device + store-sourced sharded queries, "
+                    "ground truth). Default: the store's TUNE.json decision "
+                    "if present, else 0 (synchronous); an explicit value "
+                    "always wins over --autotune")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure-and-pick (pipeline, prefetch, chunk) for "
+                    "this (store layout, --budget-mb, backend) before "
+                    "serving (DESIGN.md §11); the decision is cached in the "
+                    "store's TUNE.json sidecar (invalidated when the "
+                    "manifest hash rotates) and answers are checked "
+                    "bit-identical to the depth-1 synchronous baseline")
     # --- continuous-batching engine mode (DESIGN.md §8) ---
     ap.add_argument("--engine", action="store_true",
                     help="serve through the continuous-batching engine: "

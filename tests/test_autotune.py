@@ -1,0 +1,276 @@
+"""Measured-overlap auto-tuner (DESIGN.md §11): knob resolution precedence,
+the ``choose_knobs`` decision rule, byte-deterministic ``TUNE.json`` sidecars
+keyed by ``manifest_hash`` (rotation invalidates), tuned-path bit-identity on
+a real store, and the headline prefetch regression: ``topk_search_sharded``'s
+RP branch must actually honour ``prefetch=`` (it used to hardcode 0)."""
+import os
+
+import numpy as np
+import pytest
+import jax
+
+from fixtures import store_case
+from repro.core import ktree as kt
+from repro.core.autotune import (
+    DEFAULT_CHUNK, DEFAULT_PIPELINE, DEFAULT_PREFETCH, TunedKnobs,
+    autotune_store_search, choose_knobs, load_tuned, resolve_knobs,
+    save_tuned, sidecar_path, tune_key,
+)
+from repro.core.backend import make_projection
+from repro.core.engine import make_search_fn
+from repro.core.query import topk_search, topk_search_sharded
+from repro.core.store import open_store
+
+
+@pytest.fixture(scope="module")
+def case(tmp_path_factory):
+    return store_case(tmp_path_factory.mktemp("autotune"), sparse=False,
+                      seed=0)
+
+
+def _fresh_store(case, tmp_path, budget_bytes=None):
+    """Reopen the case's block dir with its own handle (sidecar tests write
+    TUNE.json next to the blocks, so give each test a private copy)."""
+    import shutil
+
+    path = os.path.join(str(tmp_path), "store")
+    shutil.copytree(case.path, path)
+    kw = {} if budget_bytes is None else {"budget_bytes": budget_bytes}
+    return open_store(path, **kw)
+
+
+# ------------------------------------------------------------ resolution
+
+def test_resolve_knobs_precedence():
+    tuned = TunedKnobs(pipeline=4, prefetch=2, chunk=128)
+    # explicit always wins
+    assert resolve_knobs(tuned, chunk=64, pipeline=1, prefetch=0) == (64, 1, 0)
+    # None falls to tuned
+    assert resolve_knobs(tuned) == (128, 4, 2)
+    # mixed: each knob resolves independently
+    assert resolve_knobs(tuned, pipeline=8) == (128, 8, 2)
+    # no tuner decision → the repo defaults the untuned signatures used
+    assert resolve_knobs(None) == (
+        DEFAULT_CHUNK, DEFAULT_PIPELINE, DEFAULT_PREFETCH,
+    )
+    # explicit 0 is a value, not "unset"
+    assert resolve_knobs(tuned, prefetch=0)[2] == 0
+
+
+# -------------------------------------------------------------- decision
+
+def test_choose_knobs_highest_qps_wins():
+    cells = {(1, 0, 512): (2.0, 0.0), (2, 2, 256): (1.0, 0.4)}
+    t = choose_knobs(cells, (1, 0, 512), n_queries=100)
+    assert (t.pipeline, t.prefetch, t.chunk) == (2, 2, 256)
+    assert t.qps == pytest.approx(100.0)
+    assert t.baseline_qps == pytest.approx(50.0)
+    assert t.overlap_frac == pytest.approx(0.4)
+
+
+def test_choose_knobs_tie_breaks_overlap_then_shallow():
+    # equal wall: more measured overlap wins
+    cells = {(1, 0, 512): (1.0, 0.0), (2, 2, 512): (1.0, 0.5)}
+    t = choose_knobs(cells, (1, 0, 512), n_queries=10)
+    assert (t.pipeline, t.prefetch) == (2, 2)
+    # equal wall and overlap: shallower depths win (never pay for nothing)
+    cells = {(1, 0, 512): (1.0, 0.0), (4, 2, 512): (1.0, 0.0)}
+    t = choose_knobs(cells, (1, 0, 512), n_queries=10)
+    assert (t.pipeline, t.prefetch, t.chunk) == (1, 0, 512)
+
+
+def test_choose_knobs_degrades_to_baseline():
+    cells = {(1, 0, 512): (1.0, 0.0), (4, 2, 256): (3.0, 0.9)}
+    t = choose_knobs(cells, (1, 0, 512), n_queries=10)
+    assert (t.pipeline, t.prefetch, t.chunk) == (1, 0, 512)
+
+
+def test_choose_knobs_requires_baseline():
+    with pytest.raises(ValueError, match="baseline"):
+        choose_knobs({(2, 0, 512): (1.0, 0.0)}, (1, 0, 512), 10)
+
+
+# --------------------------------------------------------------- sidecar
+
+def _synthetic_runner(pipeline, prefetch, chunk):
+    """Deterministic fake measurements: deeper pipelines are faster, chunk
+    256 beats 512, prefetch buys measured overlap."""
+    wall = 1.0 / (1.0 + pipeline + prefetch) + (chunk / 512.0) * 0.01
+    return wall, 0.2 * prefetch
+
+
+def test_autotune_sidecar_byte_deterministic(case, tmp_path):
+    """Same store + same synthetic timings → byte-identical TUNE.json, both
+    across force-resweeps and across handle reopens (no timestamps, no host
+    state)."""
+    store = _fresh_store(case, tmp_path)
+    tuned = autotune_store_search(
+        case.tree, store, runner=_synthetic_runner, force=True,
+    )
+    path = sidecar_path(store)
+    with open(path, "rb") as f:
+        first = f.read()
+    # resweep with the same timings: same decision, same bytes
+    again = autotune_store_search(
+        case.tree, store, runner=_synthetic_runner, force=True,
+    )
+    with open(path, "rb") as f:
+        assert f.read() == first
+    assert again == tuned
+    # a fresh handle over the same blocks consults the cache (no runner
+    # needed) and the sidecar is untouched
+    store2 = open_store(store.path)
+    cached = autotune_store_search(
+        case.tree, store2,
+        runner=lambda *a: (_ for _ in ()).throw(AssertionError("resweep")),
+    )
+    assert (cached.pipeline, cached.prefetch, cached.chunk) == (
+        tuned.pipeline, tuned.prefetch, tuned.chunk,
+    )
+    with open(path, "rb") as f:
+        assert f.read() == first
+
+
+def test_sidecar_entries_merge_per_key(case, tmp_path):
+    """Distinct (budget, backend) keys coexist in one sidecar; each loads
+    back independently."""
+    store = _fresh_store(case, tmp_path)
+    a = TunedKnobs(pipeline=2, prefetch=0, chunk=256, qps=10.0)
+    b = TunedKnobs(pipeline=4, prefetch=2, chunk=512, qps=20.0)
+    save_tuned(store, a, budget_bytes=1000)
+    save_tuned(store, b, budget_bytes=2000, backend="rp8")
+    got_a = load_tuned(store, budget_bytes=1000)
+    got_b = load_tuned(store, budget_bytes=2000, backend="rp8")
+    assert (got_a.pipeline, got_a.chunk) == (2, 256)
+    assert (got_b.pipeline, got_b.chunk) == (4, 512)
+    # unknown key → None (never a wrong-budget decision)
+    assert load_tuned(store, budget_bytes=3000) is None
+    assert tune_key(store, 1000) != tune_key(store, 2000)
+
+
+def test_sidecar_invalidated_by_manifest_rotation(case, tmp_path):
+    """Appending rows rotates ``manifest_hash`` — the whole sidecar goes
+    stale (measurements were taken over different blocks)."""
+    store = _fresh_store(case, tmp_path)
+    save_tuned(store, TunedKnobs(pipeline=4, prefetch=2, chunk=256))
+    assert load_tuned(store) is not None
+    old_hash = store.manifest_hash
+    store.append(case.x[:5])
+    assert store.manifest_hash != old_hash
+    assert load_tuned(store) is None
+    # the next save starts a fresh sidecar under the new hash
+    save_tuned(store, TunedKnobs(pipeline=1, prefetch=0, chunk=512))
+    assert load_tuned(store).pipeline == 1
+
+
+def test_load_tuned_missing_or_garbage(case, tmp_path):
+    store = _fresh_store(case, tmp_path)
+    assert load_tuned(store) is None
+    with open(sidecar_path(store), "w") as f:
+        f.write("{not json")
+    assert load_tuned(store) is None
+
+
+# ---------------------------------------------- tuned paths stay exact
+
+def test_tuned_search_bit_identical(case, tmp_path):
+    """A tuner decision only reschedules work: tuned ``topk_search`` and a
+    tuned ``make_search_fn`` answer bit-identically to the depth-1
+    synchronous baseline."""
+    store = _fresh_store(case, tmp_path, budget_bytes=1)
+    tree = kt.build_from_store(store, order=6, batch_size=32,
+                               key=jax.random.PRNGKey(1))
+    q = store.view(0, 40)
+    ref_d, ref_s = topk_search(tree, q, k=5, beam=4, chunk=512,
+                               pipeline=1, prefetch=0)
+    tuned = TunedKnobs(pipeline=4, prefetch=2, chunk=64)
+    d, s = topk_search(tree, q, k=5, beam=4, tuned=tuned)
+    np.testing.assert_array_equal(np.asarray(ref_d), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(s))
+    fn = make_search_fn(tree, tuned=tuned)
+    assert (fn.chunk, fn.pipeline, fn.prefetch) == (64, 4, 2)
+    d2, s2 = fn(q, 5, 4)
+    np.testing.assert_array_equal(np.asarray(ref_d), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(s2))
+    # explicit knobs shadow the tuned ones
+    fn_explicit = make_search_fn(tree, tuned=tuned, prefetch=0)
+    assert fn_explicit.prefetch == 0
+
+
+def test_autotune_end_to_end_real_measurements(case, tmp_path):
+    """A real (tiny-grid) sweep over the store picks valid knobs, persists
+    them, and the tuned replay reproduces the baseline answers."""
+    store = _fresh_store(case, tmp_path, budget_bytes=1)
+    tree = kt.build_from_store(store, order=6, batch_size=32,
+                               key=jax.random.PRNGKey(1))
+    tuned = autotune_store_search(
+        tree, store, k=5, beam=4, pipelines=(1, 2), prefetches=(0, 1),
+        chunks=(64,), n_queries=32, repeats=1, force=True,
+    )
+    assert tuned.pipeline >= 1 and tuned.prefetch >= 0 and tuned.chunk >= 1
+    assert tuned.qps > 0 and tuned.baseline_qps > 0
+    cached = load_tuned(store)
+    assert (cached.pipeline, cached.prefetch, cached.chunk) == (
+        tuned.pipeline, tuned.prefetch, tuned.chunk,
+    )
+    q = store.view(0, 32)
+    ref = topk_search(tree, q, k=5, beam=4, chunk=512, pipeline=1, prefetch=0)
+    got = topk_search(tree, q, k=5, beam=4, tuned=tuned)
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(got[1]))
+
+
+# ------------------------------------- headline regression: rp prefetch
+
+def test_sharded_rp_prefetch_actually_prefetches(case, tmp_path, monkeypatch):
+    """Regression for the headline bug: ``topk_search_sharded``'s RP branch
+    hardcoded ``prefetch=0`` into ``_topk_search_rp``, so a caller's
+    ``prefetch=2`` silently ran fully synchronous. Spy on ``Prefetcher`` to
+    prove the reader thread is actually engaged at the requested depth, and
+    pin bit-identity against the synchronous run."""
+    import repro.core.store as store_mod
+
+    store = _fresh_store(case, tmp_path, budget_bytes=1)
+    proj = make_projection(store.dim, 8, seed=3)
+    tree = kt.build_from_store(store, order=6, batch_size=32,
+                               key=jax.random.PRNGKey(1), projection=proj)
+    q = store.view(0, 40)
+    ref_d, ref_s = topk_search_sharded(
+        None, tree, q, k=5, beam=4, chunk=16, prefetch=0,
+        rp=proj, rp_corpus=store,
+    )
+
+    depths = []
+    real = store_mod.Prefetcher
+
+    class SpyPrefetcher(real):
+        def __init__(self, requests, fetch, depth=1, **kw):
+            depths.append(depth)
+            super().__init__(requests, fetch, depth=depth, **kw)
+
+    monkeypatch.setattr(store_mod, "Prefetcher", SpyPrefetcher)
+    d, s = topk_search_sharded(
+        None, tree, q, k=5, beam=4, chunk=16, prefetch=2,
+        rp=proj, rp_corpus=store,
+    )
+    # before the fix: depths == [] — the reader thread never existed
+    assert depths == [2]
+    np.testing.assert_array_equal(np.asarray(ref_d), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(s))
+
+
+def test_single_device_rp_prefetch_bit_identical(case, tmp_path):
+    """The RP route's rescore read-ahead (single-worker executor) keeps
+    answers bit-identical across prefetch depths on ``topk_search`` too."""
+    store = _fresh_store(case, tmp_path, budget_bytes=1)
+    proj = make_projection(store.dim, 8, seed=3)
+    tree = kt.build_from_store(store, order=6, batch_size=32,
+                               key=jax.random.PRNGKey(1), projection=proj)
+    q = store.view(0, 40)
+    ref = topk_search(tree, q, k=5, beam=4, chunk=16, prefetch=0,
+                      rp=proj, rp_corpus=store)
+    for depth in (1, 2):
+        got = topk_search(tree, q, k=5, beam=4, chunk=16, prefetch=depth,
+                          rp=proj, rp_corpus=store)
+        np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+        np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(got[1]))

@@ -1,0 +1,165 @@
+"""Phase-span profiler (DESIGN.md §11): span exactness and nesting on an
+injected fake clock, cross-thread interval merging + read∩compute overlap,
+and the disabled-mode contract (``NULL_PROFILER`` hands out one shared no-op
+span and records nothing — the hot paths rely on that being free)."""
+import threading
+
+import pytest
+
+from repro.core.profile import (
+    NULL_PROFILER, NullProfiler, Profiler, SpanRecord,
+)
+
+
+class FakeClock:
+    """Deterministic monotonic clock: every read advances by ``step``."""
+
+    def __init__(self, step=1.0, t=0.0):
+        self.t = t
+        self.step = step
+
+    def __call__(self):
+        now = self.t
+        self.t += self.step
+        return now
+
+
+# ----------------------------------------------------------------- spans
+
+def test_span_exact_on_fake_clock():
+    prof = Profiler(clock=FakeClock())
+    with prof.span("read"):
+        pass
+    (r,) = prof.records
+    assert r == SpanRecord("read", 0.0, 1.0, 0)
+    assert r.seconds == 1.0
+
+
+def test_span_nesting_depths_and_order():
+    """Nested spans carry depth = outer + 1 and close inner-first; sibling
+    spans after the nest return to the outer depth."""
+    prof = Profiler(clock=FakeClock())
+    with prof.span("outer"):
+        with prof.span("inner"):
+            pass
+        with prof.span("inner2"):
+            pass
+    with prof.span("top"):
+        pass
+    names = [(r.name, r.depth) for r in prof.records]
+    assert names == [
+        ("inner", 1), ("inner2", 1), ("outer", 0), ("top", 0),
+    ]
+    inner, inner2, outer, top = prof.records
+    # clock reads: outer.t0=0, inner=(1,2), inner2=(3,4), outer.t1=5, top=(6,7)
+    assert (outer.t0, outer.t1) == (0.0, 5.0)
+    assert (inner.t0, inner.t1) == (1.0, 2.0)
+    assert (inner2.t0, inner2.t1) == (3.0, 4.0)
+    assert (top.t0, top.t1) == (6.0, 7.0)
+
+
+def test_span_records_on_exception_and_restores_depth():
+    prof = Profiler(clock=FakeClock())
+    with pytest.raises(RuntimeError):
+        with prof.span("boom"):
+            raise RuntimeError("x")
+    (r,) = prof.records
+    assert r.name == "boom" and r.seconds == 1.0
+    # depth must be back at 0: a new span records at depth 0
+    with prof.span("after"):
+        pass
+    assert prof.records[-1].depth == 0
+
+
+def test_depth_is_per_thread():
+    """A span open on the main thread does not deepen a worker's spans —
+    the Prefetcher-reader-thread sharing contract."""
+    prof = Profiler(clock=FakeClock())
+    done = threading.Event()
+
+    def worker():
+        with prof.span("read"):
+            pass
+        done.set()
+
+    with prof.span("compute"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert done.is_set()
+    depths = {r.name: r.depth for r in prof.records}
+    assert depths == {"read": 0, "compute": 0}
+
+
+# ------------------------------------------------- totals / intervals
+
+def test_totals_and_reset():
+    prof = Profiler()
+    prof.add("read", 0.0, 2.0)
+    prof.add("read", 5.0, 6.0)
+    prof.add("compute", 1.0, 4.0)
+    t = prof.totals()
+    assert t["read"] == {"seconds": 3.0, "count": 2}
+    assert t["compute"] == {"seconds": 3.0, "count": 1}
+    prof.reset()
+    assert prof.records == () and prof.totals() == {}
+
+
+def test_intervals_merge_overlapping_and_adjacent():
+    prof = Profiler()
+    prof.add("read", 0.0, 2.0)
+    prof.add("read", 1.5, 3.0)   # overlaps the first
+    prof.add("read", 3.0, 4.0)   # touches → merges
+    prof.add("read", 10.0, 11.0)
+    assert prof.intervals("read") == [(0.0, 4.0), (10.0, 11.0)]
+    assert prof.intervals("nope") == []
+
+
+def test_overlap_seconds_exact():
+    """read∩compute over hand-built intervals: the tuner's primitive."""
+    prof = Profiler()
+    prof.add("read", 0.0, 4.0)
+    prof.add("read", 8.0, 10.0)
+    prof.add("compute", 2.0, 9.0)
+    # [0,4]∩[2,9] = 2, [8,10]∩[2,9] = 1
+    assert prof.overlap_seconds("read", "compute") == pytest.approx(3.0)
+    assert prof.overlap_seconds("compute", "read") == pytest.approx(3.0)
+    assert prof.overlap_seconds("read", "nope") == 0.0
+
+
+def test_overlap_zero_when_serialised():
+    """Phases that never coexist on the wall clock — the prefetch=0 story —
+    measure exactly zero overlap."""
+    prof = Profiler()
+    for i in range(4):
+        prof.add("read", 2 * i, 2 * i + 1)
+        prof.add("compute", 2 * i + 1, 2 * i + 2)
+    assert prof.overlap_seconds("read", "compute") == 0.0
+
+
+def test_phase_report_mentions_phases_and_overlap():
+    prof = Profiler()
+    prof.add("read", 0.0, 1.0)
+    prof.add("compute", 0.5, 1.5)
+    rep = prof.phase_report()
+    assert "read=" in rep and "compute=" in rep and "read∩compute=" in rep
+
+
+# --------------------------------------------------------- disabled mode
+
+def test_null_profiler_records_nothing():
+    with NULL_PROFILER.span("read"):
+        with NULL_PROFILER.span("disk_read"):
+            pass
+    NULL_PROFILER.add("read", 0.0, 1.0)
+    assert NULL_PROFILER.records == ()
+    assert not NULL_PROFILER.enabled and Profiler.enabled
+
+
+def test_null_profiler_span_is_shared_singleton():
+    """``span()`` hands back the *same* object every call — the
+    zero-allocation contract the hot-path defaults rely on."""
+    a = NULL_PROFILER.span("a")
+    b = NULL_PROFILER.span("b")
+    assert a is b
+    assert a is NullProfiler().span("c")

@@ -7,8 +7,10 @@ Two checks, both importable and runnable as a script:
    docstring. Covered modules: ``repro.core.query``, ``repro.core.backend``,
    ``repro.ckpt.checkpoint`` (the public query/persistence API surface),
    ``repro.core.store`` (out-of-core PR), ``repro.core.engine`` and
-   ``repro.launch.engine`` (serving-engine PR), plus ``repro.core.faults``
-   and ``repro.core.fsck`` (fault-injection/robustness PR).
+   ``repro.launch.engine`` (serving-engine PR), ``repro.core.faults``
+   and ``repro.core.fsck`` (fault-injection/robustness PR), plus
+   ``repro.core.profile`` and ``repro.core.autotune`` (measured-overlap
+   profiling/auto-tuner PR).
 2. :func:`broken_links` — every relative markdown link/image in the repo's
    top-level docs must point at an existing file (http(s)/mailto links and
    pure #anchors are skipped).
@@ -34,6 +36,8 @@ COVERED_MODULES = (
     "repro.core.engine",
     "repro.core.faults",
     "repro.core.fsck",
+    "repro.core.profile",
+    "repro.core.autotune",
     "repro.launch.engine",
     "repro.ckpt.checkpoint",
     "repro.data.pipeline",
